@@ -1,0 +1,10 @@
+"""Shared helpers for the paper-table benchmarks."""
+from repro.core import WorkloadModel, Forecaster, hardware
+from repro.configs import get, PAPER_VARIANTS
+from repro.configs.base import Variant
+
+LLAMA2 = get("llama2-7b")
+
+
+def wm(variant="bf16-bf16", arch=None):
+    return WorkloadModel(arch or LLAMA2, PAPER_VARIANTS[variant])

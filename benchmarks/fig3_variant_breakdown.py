@@ -1,0 +1,18 @@
+"""Paper Fig. 3: per-variant TOPs breakdown by operator class (prefill)."""
+from .common import wm
+
+VARIANTS = ["bf16-bf16", "bf16-int4", "bf16-int4-kv4", "quarot-w4a4kv4",
+            "bf16-int4-mla"]
+
+
+def rows():
+    out = []
+    for v in VARIANTS:
+        db = wm(v).prefill(1, 2048)
+        t = db.totals("prefill")
+        by = db.by_op_class("prefill")
+        out.append((f"fig3/{v}", {
+            "tops": round(t.ops / 1e12, 2),
+            **{k: round(vv.ops / t.ops * 100, 1)
+               for k, vv in sorted(by.items()) if vv.ops > 0}}))
+    return out

@@ -1,0 +1,35 @@
+"""Paper Figs. 4-5: t_c/t_m grids over hardware configs and efficiencies."""
+from repro.core import Forecaster, hardware
+from repro.core.hardware import HardwareSpec
+from .common import wm
+
+
+def rows():
+    out = []
+    tops_grid = [10, 20, 30, 40, 50, 60, 70, 80, 90, 100]
+    bw_grid = [10, 20, 30, 40, 50, 60, 70, 80, 90, 100]
+    for variant in ("bf16-int4", "bf16-int4-kv4"):
+        t = wm(variant).prefill(1, 4096).totals("prefill")
+        fc = Forecaster(hardware.TPU_V5E)
+        grid = fc.hardware_grid(t, tops_grid, bw_grid)
+        n_compute_bound = sum(1 for r in grid for x in r if x > 1)
+        out.append((f"fig4/{variant}/100pct", {
+            "compute_bound_cells": n_compute_bound, "of": 100,
+            "corner_10t_100b": round(grid[0][-1], 3),
+            "corner_100t_10b": round(grid[-1][0], 3)}))
+        grid2 = fc.hardware_grid(t, tops_grid, bw_grid, ec=0.5, em=0.8)
+        out.append((f"fig4/{variant}/ec50_em80", {
+            "compute_bound_cells": sum(1 for r in grid2 for x in r if x > 1),
+            "of": 100}))
+    # Fig 5: one hardware config (30 TOPS / 50 GBps), efficiency sweep
+    hw = HardwareSpec(name="fig5", tops=30.0, bw_gbps=50.0)
+    fc = Forecaster(hw)
+    t = wm("bf16-int4").prefill(1, 4096).totals("prefill")
+    effs = [0.1, 0.25, 0.5, 0.75, 1.0]
+    grid = fc.efficiency_grid(t, effs, effs)
+    out.append(("fig5/30tops_50gbps", {
+        "ratio_ec10_em100": round(grid[0][-1], 2),
+        "ratio_ec100_em10": round(grid[-1][0], 2),
+        "compute_bound_cells": sum(1 for r in grid for x in r if x > 1),
+        "of": len(effs) ** 2}))
+    return out

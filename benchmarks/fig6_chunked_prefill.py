@@ -1,0 +1,18 @@
+"""Paper Fig. 6: chunked-prefill metric ratios vs no chunking (prompt 4096)."""
+from .common import wm
+
+
+def rows():
+    m = wm("bf16-bf16")
+    base = m.prefill(1, 4096).totals("prefill")
+    out = []
+    for chunk in (64, 128, 256, 512, 1024, 2048, 4096):
+        t = m.chunked_prefill(1, 4096, chunk).totals("prefill")
+        out.append((f"fig6/chunk{chunk}", {
+            "ops_ratio": round(t.ops / base.ops, 3),
+            "mem_ratio": round(t.mem_total / base.mem_total, 2),
+            "kv_ratio": round((t.kv_rd + t.kv_wr) /
+                              max(base.kv_rd + base.kv_wr, 1), 2),
+            "dispatch_ratio": round(t.dispatches / base.dispatches, 1),
+        }))
+    return out

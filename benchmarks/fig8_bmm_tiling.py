@@ -1,0 +1,19 @@
+"""Paper Fig. 8: BMM tile-padding efficiency sawtooth in decode."""
+from repro.core import bmm_tile_efficiency, bmm_asymptotic_efficiency
+
+
+def rows():
+    out = []
+    for tile in (16, 64, 128, 256, 512):
+        effs = [bmm_tile_efficiency(s, tile) for s in range(1, 4097)]
+        out.append((f"fig8/tile{tile}", {
+            "min_eff": round(min(effs), 3),
+            "mean_eff_to_4k": round(sum(effs) / len(effs), 3),
+            "asymptote_64k": round(
+                bmm_asymptotic_efficiency(65536, 2000, tile), 4),
+        }))
+    # MXU-native 128 alignment (TPU adaptation, DESIGN.md §3.4)
+    out.append(("fig8/tpu_mxu128_worst_case", {
+        "eff_at_129": round(bmm_tile_efficiency(129, 128), 3),
+        "eff_at_4097": round(bmm_tile_efficiency(4097, 128), 3)}))
+    return out

@@ -1,0 +1,43 @@
+"""Paper §4.1.1: operator workloads in isolation — Linear (±LoRA, ±int4),
+BMM, and each attention mechanism in prefill vs decode mode."""
+from repro.core import StatsDB
+from repro.core import operators as F
+from repro.core import derived as D
+
+
+def rows():
+    out = []
+    # Linear 4096x4096 across batch sizes, bf16 vs int4 vs +LoRA
+    for m in (1, 128, 2048):
+        for tag, kw in (("bf16", {}), ("int4", {"dtype_w": "int4"}),
+                        ("int4+lora64", {"dtype_w": "int4", "lora_rank": 64})):
+            db = StatsDB()
+            F.linear(db, m, 4096, 4096, **kw)
+            r = db.records[0]
+            out.append((f"op/linear_m{m}_{tag}", {
+                "gops": round(r.ops / 1e9, 3),
+                "mem_mb": round((r.mem_rd + r.mem_wr) / 1e6, 1),
+                "arith_intensity": round(r.ops / (r.mem_rd + r.mem_wr), 1)}))
+    # BMM prefill (s×s) vs decode (1×L) — the paper's §5.4.1 operating point
+    for mode, mdim, ndim in (("prefill_2k", 2048, 2048),
+                             ("decode_kv8k", 1, 8192)):
+        db = StatsDB()
+        F.bmm(db, 32, mdim, 128, ndim)
+        r = db.records[0]
+        out.append((f"op/bmm_{mode}", {
+            "gops": round(r.ops / 1e9, 2),
+            "mem_mb": round((r.mem_rd + r.mem_wr) / 1e6, 1),
+            "arith_intensity": round(r.ops / (r.mem_rd + r.mem_wr), 2)}))
+    # attention mechanisms, prefill vs decode (per layer, llama2 geometry)
+    for name, kvh in (("mha", 32), ("gqa8", 8), ("mqa", 1)):
+        for mode, q_len, kv_len in (("prefill", 2048, 2048),
+                                    ("decode", 1, 2048)):
+            db = StatsDB()
+            db.set_phase(mode)
+            D.mha_block(db, 1, q_len, kv_len, 4096, 32, kvh, 128)
+            t = db.totals(mode)
+            out.append((f"op/attn_{name}_{mode}", {
+                "gops": round(t.ops / 1e9, 2),
+                "mem_mb": round(t.mem_total / 1e6, 1),
+                "kv_mb": round((t.kv_rd + t.kv_wr) / 1e6, 1)}))
+    return out

@@ -1,0 +1,65 @@
+"""§Roofline report: renders the dry-run artifacts into the three-term
+table (per arch × shape × mesh) with dominant bottleneck + useful-FLOPs
+ratio, and the LIFE-predicted vs XLA-measured agreement."""
+import glob
+import json
+import os
+
+
+def load(art_dir="artifacts/dryrun"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*", "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def rows(art_dir="artifacts/dryrun"):
+    out = []
+    for c in load(art_dir):
+        name = f"roofline/{c['mesh']}/{c['arch']}/{c['shape']}"
+        if c["status"] == "SKIP":
+            out.append((name, {"status": "SKIP", "reason": c["reason"][:60]}))
+            continue
+        if c["status"] == "FAIL":
+            out.append((name, {"status": "FAIL", "error": c["error"][:80]}))
+            continue
+        r = c["roofline"]
+        life = c.get("life_forecast", {})
+        out.append((name, {
+            "tc_s": f"{r['t_compute_s']:.3e}",
+            "tm_s": f"{r['t_memory_s']:.3e}",
+            "tx_s": f"{r['t_collective_s']:.3e}",
+            "dominant": r["dominant"],
+            "useful_flops_ratio": round(c["useful_flops_ratio"], 3),
+            "life_dominant": life.get("dominant", "?"),
+            "compile_s": c["compile_s"],
+        }))
+    return out
+
+
+def markdown_table(art_dir="artifacts/dryrun"):
+    lines = ["| mesh | arch | shape | t_compute (s) | t_memory (s) | "
+             "t_collective (s) | dominant | useful FLOPs | LIFE dominant |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for c in load(art_dir):
+        if c["status"] == "SKIP":
+            lines.append(f"| {c['mesh']} | {c['arch']} | {c['shape']} | "
+                         f"SKIP | — | — | — | — | — |")
+            continue
+        if c["status"] == "FAIL":
+            lines.append(f"| {c['mesh']} | {c['arch']} | {c['shape']} | "
+                         f"FAIL | — | — | — | — | — |")
+            continue
+        r = c["roofline"]
+        life = c.get("life_forecast", {})
+        lines.append(
+            f"| {c['mesh']} | {c['arch']} | {c['shape']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {c['useful_flops_ratio']:.2f} | {life.get('dominant','?')} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

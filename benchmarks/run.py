@@ -1,0 +1,54 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``us_per_call`` is the wall time
+of the LIFE simulation that produced the row (the paper's point: full
+workload characterization runs in seconds on a laptop); ``derived`` packs
+the reproduced metrics next to the paper's published values.
+"""
+import importlib
+import json
+import sys
+import time
+
+MODULES = [
+    "operator_workloads",
+    "table4_prefill_ops",
+    "table5_variant_metrics",
+    "fig3_variant_breakdown",
+    "fig4_efficiency_grid",
+    "table6_prefill_forecast",
+    "fig6_chunked_prefill",
+    "table7_decode_metrics",
+    "table8_dispatch_calls",
+    "table9_decode_memory",
+    "table10_decode_forecast",
+    "table11_attention_memory",
+    "fig8_bmm_tiling",
+    "table12_lora",
+    "xval_life_vs_xla",
+    "roofline",
+]
+
+
+def main() -> None:
+    only = sys.argv[1:] or None
+    print("name,us_per_call,derived")
+    for modname in MODULES:
+        if only and modname not in only:
+            continue
+        mod = importlib.import_module(f"benchmarks.{modname}")
+        t0 = time.perf_counter()
+        try:
+            rows = mod.rows()
+        except Exception as e:  # surface but keep the suite going
+            print(f"{modname},0,\"ERROR: {type(e).__name__}: {e}\"")
+            continue
+        elapsed_us = (time.perf_counter() - t0) * 1e6
+        per_row = elapsed_us / max(len(rows), 1)
+        for name, derived in rows:
+            payload = json.dumps(derived, separators=(",", ":")).replace('"', "'")
+            print(f"{name},{per_row:.1f},\"{payload}\"")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Table 10: forecast vs measured decode TPS."""
+from repro.core import Forecaster, hardware
+from .common import wm
+
+CPU = {32: (1.59, 1.87), 64: (1.64, 1.86), 128: (1.30, 1.85),
+       256: (1.74, 1.84), 512: (1.11, 1.80), 1024: (0.87, 1.74),
+       2048: (0.45, 1.62)}
+V100 = {512: (40.0, 32.6), 1024: (36.9, 30.3), 2048: (32.1, 26.7)}
+
+
+def rows():
+    out = []
+    fc = Forecaster(hardware.RYZEN_9_HX370_CPU)
+    m = wm("bf16-bf16")
+    for p, (meas, paper_fc) in CPU.items():
+        tps = fc.tps(m.decode_step(1, p), em=0.10)
+        out.append((f"table10/cpu/p{p}", {
+            "tps_forecast_em10": round(tps, 2), "paper_forecast": paper_fc,
+            "paper_measured": meas}))
+    fc = Forecaster(hardware.NVIDIA_V100)
+    m = wm("fp16-fp16")
+    for p, (meas, paper_fc) in V100.items():
+        tps = fc.tps(m.decode_step(1, p), em=0.50)
+        out.append((f"table10/v100/p{p}", {
+            "tps_forecast_em50": round(tps, 1), "paper_forecast": paper_fc,
+            "paper_measured": meas}))
+    return out

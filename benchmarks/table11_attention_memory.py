@@ -1,0 +1,46 @@
+"""Paper Table 11: attention-mechanism decode memory (per layer, MB)."""
+import dataclasses
+from repro.core import WorkloadModel, StatsDB
+from repro.core import derived as D
+from repro.configs import get
+from repro.configs.base import Variant
+
+
+def _attn_layer_mem(kv_heads, *, fused, kv_dtype, kv_len, mla=False):
+    base = get("llama2-7b")
+    db = StatsDB()
+    db.set_phase("decode")
+    if mla:
+        m = WorkloadModel(base, Variant(fused=fused, kv_dtype=kv_dtype,
+                                        use_mla=True))
+        a = m.arch
+        D.mla_block(db, 1, 1, kv_len, a.d_model, a.n_heads,
+                    dtype_act="bf16", kv_dtype=kv_dtype, fused=fused)
+    else:
+        arch = dataclasses.replace(base, n_kv_heads=kv_heads)
+        D.mha_block(db, 1, 1, kv_len, arch.d_model, arch.n_heads,
+                    arch.n_kv_heads, arch.head_dim, dtype_act="bf16",
+                    kv_dtype=kv_dtype, fused=fused)
+    return db.totals("decode").mem_total / 1e6
+
+
+def rows():
+    out = []
+    modes = [("eager", False, "bf16"), ("fused", True, "bf16"),
+             ("fused-kv8", True, "int8"), ("fused-kv4", True, "int4")]
+    for name, fused, kvd in modes:
+        for tok in (8192, 10192):
+            vals = {
+                "mha": _attn_layer_mem(32, fused=fused, kv_dtype=kvd,
+                                       kv_len=tok),
+                "gqa8": _attn_layer_mem(8, fused=fused, kv_dtype=kvd,
+                                        kv_len=tok),
+                "mqa": _attn_layer_mem(1, fused=fused, kv_dtype=kvd,
+                                       kv_len=tok),
+                "mla": _attn_layer_mem(0, fused=fused, kv_dtype=kvd,
+                                       kv_len=tok, mla=True),
+            }
+            label = "1st" if tok == 8192 else "2000th"
+            out.append((f"table11/{name}/{label}", {
+                k: round(v, 0) for k, v in vals.items()}))
+    return out

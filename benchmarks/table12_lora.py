@@ -1,0 +1,24 @@
+"""Paper Table 12 / Fig. 9: LoRA adapter merge compute overhead."""
+from repro.core import StatsDB
+from repro.core import operators as F
+from .common import wm
+
+PAPER_TOTAL = {16: 220.2, 32: 427.4, 64: 841.9, 128: 1670.8}
+
+
+def rows():
+    out = []
+    m = wm("bf16-int4-lora")
+    for rank, paper in PAPER_TOTAL.items():
+        t = m.lora_update(rank=rank).totals("lora_update")
+        out.append((f"table12/full_model_r{rank}", {
+            "gops": round(t.ops / 1e9, 1), "paper_gops": paper}))
+    # Fig 9: single 4096x4096 GEMM with inline adapter vs prompt length
+    for prompt in (32, 256, 2048):
+        for rank in (0, 64, 128):
+            db = StatsDB()
+            F.linear(db, prompt, 4096, 4096,
+                     lora_rank=rank if rank else None)
+            out.append((f"fig9/p{prompt}_r{rank}", {
+                "gops": round(db.records[0].ops / 1e9, 2)}))
+    return out

@@ -1,0 +1,22 @@
+"""Paper Table 4: TOPs vs prompt length, operator distribution (prefill)."""
+from .common import wm
+
+PAPER = {256: 3.42, 1024: 14.09, 2048: 29.29, 4096: 63.04, 8192: 143.87,
+         16384: 358.94, 32768: 1002.67, 65536: 3144.41}
+
+
+def rows():
+    out = []
+    m = wm("bf16-bf16")
+    for prompt, paper_tops in PAPER.items():
+        db = m.prefill(1, prompt)
+        t = db.totals("prefill")
+        by = db.by_op_class("prefill")
+        out.append((f"table4/prompt{prompt}", {
+            "tops": round(t.ops / 1e12, 2), "paper_tops": paper_tops,
+            "gemm_pct": round(by["gemm"].ops / t.ops * 100, 1),
+            "bmm_pct": round(by["bmm"].ops / t.ops * 100, 1),
+            "softmax_pct": round(by.get("softmax").ops / t.ops * 100, 2),
+            "kv_gb": round(t.kv_wr / 1e9, 2),
+        }))
+    return out

@@ -1,0 +1,22 @@
+"""Paper Table 5: model workload metrics across variants (prefill)."""
+from .common import wm
+
+PAPER = {("bf16-bf16", 2048): (29.2941, 43.5, 29.0, 1),
+         ("bf16-int4", 2048): (29.3074, 34.4, 29.0, 1),
+         ("bf16-int4-kv4", 2048): (29.3079, 10.1, 4.4, 0.25),
+         ("bf16-bf16", 4096): (63.0379, 106.4, 90.1, 2),
+         ("bf16-int4", 4096): (63.0511, 97.3, 90.1, 2),
+         ("bf16-int4-kv4", 4096): (63.0522, 16.8, 8.8, 0.5)}
+
+
+def rows():
+    out = []
+    for (variant, prompt), paper in PAPER.items():
+        t = wm(variant).prefill(1, prompt).totals("prefill")
+        out.append((f"table5/{variant}/p{prompt}", {
+            "tops": round(t.ops / 1e12, 4), "paper_tops": paper[0],
+            "mem_rd_gb": round(t.mem_rd / 1e9, 1), "paper_rd": paper[1],
+            "mem_wr_gb": round(t.mem_wr / 1e9, 1), "paper_wr": paper[2],
+            "kv_gb": round(t.kv_wr / 1e9, 2), "paper_kv": paper[3],
+        }))
+    return out

@@ -1,0 +1,21 @@
+"""Paper Table 7: decode GOPs + memory across variants and prompt lengths."""
+from .common import wm
+
+PAPER_GOPS = {("bf16-bf16", 32): 13.34, ("bf16-bf16", 2048): 14.41,
+              ("bf16-int4", 32): 26.55, ("bf16-int4", 2048): 27.62,
+              ("bf16-int4-kv4", 32): 26.61, ("bf16-int4-kv4", 2048): 28.21}
+PAPER_MEM = {("bf16-bf16", 32): 12.85, ("bf16-bf16", 2048): 14.83,
+             ("bf16-int4", 32): 3.74, ("bf16-int4", 2048): 5.72,
+             ("bf16-int4-kv4", 32): 3.55, ("bf16-int4-kv4", 2048): 3.92}
+
+
+def rows():
+    out = []
+    for (variant, prompt), gops in PAPER_GOPS.items():
+        t = wm(variant).decode_step(1, prompt).totals("decode")
+        out.append((f"table7/{variant}/p{prompt}", {
+            "gops": round(t.ops / 1e9, 2), "paper_gops": gops,
+            "mem_gb": round(t.mem_total / 1e9, 2),
+            "paper_mem_gb": PAPER_MEM[(variant, prompt)],
+        }))
+    return out

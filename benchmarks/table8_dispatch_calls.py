@@ -1,0 +1,17 @@
+"""Paper Table 8: dispatch calls during decode (per model)."""
+from repro.core import WorkloadModel
+from repro.configs import get, PAPER_VARIANTS, ASSIGNED
+from repro.configs.base import Variant
+
+
+def rows():
+    out = [("table8/llama2-7b-int4", {
+        "dispatches": WorkloadModel(get("llama2-7b"),
+                                    PAPER_VARIANTS["bf16-int4"])
+        .decode_step(1, 128).totals("decode").dispatches,
+        "paper": 611})]
+    for arch in ASSIGNED:
+        m = WorkloadModel(get(arch), Variant(dtype_w="int4"))
+        out.append((f"table8/{arch}-int4", {
+            "dispatches": m.decode_step(1, 128).totals("decode").dispatches}))
+    return out

@@ -1,0 +1,31 @@
+"""Paper Table 9 / Fig. 7: decode memory growth with generation."""
+from .common import wm
+
+PAPER = {("bf16-bf16", 128): (12.75, 14.71), ("bf16-int4", 128): (3.65, 5.60),
+         ("bf16-int4-kv4", 128): (3.53, 3.90),
+         ("bf16-bf16", 4096): (16.66, 18.62), ("bf16-int4", 4096): (7.55, 9.51),
+         ("bf16-int4-kv4", 4096): (4.26, 4.60)}
+
+
+def rows():
+    out = []
+    for (variant, prompt), (p1, p2) in PAPER.items():
+        m = wm(variant)
+        first = m.decode_step(1, prompt).totals("decode").mem_rd
+        last = m.decode_step(1, prompt + 2000).totals("decode").mem_rd
+        out.append((f"table9/{variant}/p{prompt}", {
+            "mem_1st_gb": round(first / 1e9, 2), "paper_1st": p1,
+            "mem_2000th_gb": round(last / 1e9, 2), "paper_2000th": p2,
+            "growth": round(last / first, 2),
+            "paper_growth": round(p2 / p1, 2)}))
+    # Fig 7: TPS decay over generation (bf16 vs kv4, prompt 4096)
+    from repro.core import Forecaster, hardware
+    fc = Forecaster(hardware.TPU_V5E)
+    for variant in ("bf16-bf16", "bf16-int4-kv4"):
+        tl = fc.tps_timeline(wm(variant), 1, 4096, 2000, em=0.8,
+                             sample_every=1999)
+        drop = 1 - tl[-1][2] / tl[0][2]
+        out.append((f"fig7/{variant}", {
+            "tps_first": round(tl[0][2], 1), "tps_last": round(tl[-1][2], 1),
+            "tps_drop_pct": round(drop * 100, 1)}))
+    return out

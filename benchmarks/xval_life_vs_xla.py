@@ -1,0 +1,31 @@
+"""LIFE vs XLA cross-validation (our verification analogue, DESIGN.md §3.5):
+analytical FLOPs vs compiled-HLO FLOPs on reduced models, per family."""
+import jax
+import jax.numpy as jnp
+
+from repro import configs, models
+from repro.configs.base import Variant
+from repro.core import WorkloadModel, hlo
+from repro.models import act_sharding
+
+
+def rows():
+    act_sharding.clear_mesh()
+    out = []
+    for arch in ("llama2-7b", "qwen2-7b", "qwen2-moe-a2.7b",
+                 "falcon-mamba-7b", "recurrentgemma-2b"):
+        cfg = configs.reduced(configs.get(arch), n_layers=2)
+        params_abs = models.abstract_params(cfg)
+        ids = jax.ShapeDtypeStruct((1, 64), jnp.int32)
+
+        def fwd(params, ids, cfg=cfg):
+            return models.forward(cfg, params, ids, remat=False)[0]
+
+        comp = jax.jit(fwd).lower(params_abs, ids).compile()
+        measured = hlo.analyze(comp.as_text(), 1)
+        t = WorkloadModel(cfg, Variant()).prefill(1, 64).totals("prefill")
+        out.append((f"xval/{arch}", {
+            "life_gflops": round(t.ops / 1e9, 3),
+            "xla_gflops": round(measured.flops / 1e9, 3),
+            "ratio": round(measured.flops / t.ops, 3)}))
+    return out

@@ -1,0 +1,41 @@
+"""Hardware what-if analysis across the whole assigned architecture pool —
+LIFE as a deployment-planning tool (paper §5.1.2 generalized):
+
+* per-arch decode TPS on CPU / V100 / TPU v5e at realistic efficiencies
+* compute-vs-memory boundary (t_c/t_m) per arch at 4k prefill
+* multi-chip scaling: LIFE-distributed forecast of a TP=8 v5e slice
+
+    PYTHONPATH=src python examples/forecast_hardware.py
+"""
+from repro import configs
+from repro.configs.base import Variant
+from repro.core import (WorkloadModel, Forecaster, hardware,
+                        DistributedForecaster, ShardingPlan)
+
+print(f"{'arch':20s} {'params':>8s} | {'CPU tps':>8s} {'V100 tps':>9s} "
+      f"{'v5e tps':>8s} | {'tc/tm @4k prefill':>18s}")
+for name in configs.ASSIGNED:
+    cfg = configs.get(name)
+    wm = WorkloadModel(cfg, Variant(dtype_w="int4", fused=True))
+    dec = wm.decode_step(1, 2048)
+    pre = wm.prefill(1, 4096)
+    row = [f"{name:20s}", f"{cfg.param_count()/1e9:7.1f}B |"]
+    for hw, em in ((hardware.RYZEN_9_HX370_CPU, 0.5),
+                   (hardware.NVIDIA_V100, 0.5), (hardware.TPU_V5E, 0.8)):
+        fc = Forecaster(hw)
+        row.append(f"{fc.tps(dec, em=em):8.1f}")
+    fc = Forecaster(hardware.TPU_V5E)
+    ratio = fc.phase(pre.totals('prefill')).ratio
+    row.append(f" | {ratio:17.2f}")
+    print(" ".join(row))
+
+print("\nMulti-chip (beyond-paper): llama3-405b decode on a v5e TP slice")
+cfg = configs.get("llama3-405b")
+wm = WorkloadModel(cfg, Variant(fused=True))
+for tp in (8, 16, 32, 64):
+    df = DistributedForecaster(wm, ShardingPlan(dp=1, tp=tp))
+    t = df.predict_decode(batch=8, past_len=8192)
+    tpot = t.bound_time
+    print(f"  TP={tp:3d}: tc={t.t_compute*1e3:7.2f}ms tm={t.t_memory*1e3:7.2f}ms "
+          f"tx={t.t_collective*1e3:6.2f}ms -> {t.dominant}-bound, "
+          f"TPS={8/tpot:7.1f}")

@@ -1,0 +1,43 @@
+"""Quickstart: LIFE in 40 lines.
+
+Characterize an LLM inference workload analytically (no weights, no data,
+no accelerator) and forecast TTFT/TPOT/TPS on several hardware targets —
+the paper's core loop (Fig. 2).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import get, PAPER_VARIANTS
+from repro.core import WorkloadModel, Forecaster, hardware
+
+# 1. pick a model + optimization variant (paper Table 3)
+arch = get("llama2-7b")
+variant = PAPER_VARIANTS["bf16-int4-kv4"]       # int4 weights, int4 KV, fused
+wm = WorkloadModel(arch, variant)
+
+# 2. characterize: prefill a 2048-token prompt, then one decode step
+prefill = wm.prefill(batch=1, seq=2048)
+decode = wm.decode_step(batch=1, past_len=2048)
+
+t = prefill.totals("prefill")
+print(f"prefill 2048: {t.ops/1e12:.2f} TOPs, "
+      f"{t.mem_rd/1e9:.1f} GB read, {t.kv_wr/1e9:.2f} GB KV written, "
+      f"{t.dispatches} dispatches")
+d = decode.totals("decode")
+print(f"decode @2048: {d.ops/1e9:.2f} GOPs, {d.mem_total/1e9:.2f} GB touched")
+
+# 3. forecast on real hardware — only TOPS + bandwidth needed (Eqs. 1-6)
+for hw in (hardware.RYZEN_9_HX370_CPU, hardware.NVIDIA_V100,
+           hardware.TPU_V5E):
+    fc = Forecaster(hw)
+    ttft = fc.ttft(prefill)
+    tps = fc.tps(decode, em=0.8)
+    print(f"{hw.name:22s} TTFT={ttft.latency*1e3:9.1f} ms "
+          f"({ttft.bound}-bound)   TPS={tps:8.1f} @ em=0.8")
+
+# 4. what would KV-cache compression buy on this device? (paper §3.3.3)
+base = WorkloadModel(arch, PAPER_VARIANTS["bf16-int4"])
+fc = Forecaster(hardware.TPU_V5E)
+tps_base = fc.tps(base.decode_step(1, 8192), em=0.8)
+tps_kv4 = fc.tps(wm.decode_step(1, 8192), em=0.8)
+print(f"\nKV4 compression at 8k context: {tps_base:.0f} -> {tps_kv4:.0f} "
+      f"tok/s ({tps_kv4/tps_base:.2f}x)")

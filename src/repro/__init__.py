@@ -1,0 +1,1 @@
+"""repro: LIFE (LLM Inference Forecast Engine) as a multi-pod JAX framework."""

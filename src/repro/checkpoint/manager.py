@@ -1,0 +1,119 @@
+"""Sharded checkpointing with atomic manifests + elastic restart.
+
+Fault-tolerance contract (DESIGN.md §6):
+
+* **Atomicity** — arrays are written to ``step_NNN.tmp/`` then renamed;
+  a crash mid-write never corrupts the latest checkpoint.
+* **Manifest** — tree structure / shapes / dtypes / step live in
+  ``manifest.json``; restore validates before loading.
+* **Elastic restart** — arrays are saved device-agnostic (host numpy);
+  on restore the caller re-applies shardings for *whatever mesh is now
+  available* (``runtime.sharding`` re-derives specs per mesh shape).
+* **Multi-host layout** — each process writes ``proc{K}_`` files for the
+  addressable shards it owns; this container is single-process, so K=0
+  holds everything, but the directory layout is the production one.
+* **GC** — ``keep_last_n`` old steps are retained; older ones deleted.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last_n: int = 3):
+        self.dir = directory
+        self.keep = keep_last_n
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, *, process_index: int = 0) -> str:
+        leaves, treedef = _flatten(tree)
+        tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        arrays = {}
+        manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            key = f"leaf_{i:05d}"
+            # raw-byte storage: npz can't represent extension dtypes (bf16)
+            arrays[key] = np.frombuffer(arr.tobytes(), dtype=np.uint8)
+            manifest["leaves"].append(
+                {"key": key, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+        np.savez(os.path.join(tmp, f"proc{process_index}_arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic publish
+        self._gc()
+        return final
+
+    # ------------------------------------------------------------------
+    def steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # ------------------------------------------------------------------
+    def restore(self, example_tree, step: Optional[int] = None,
+                *, process_index: int = 0):
+        """Restore into the structure of ``example_tree`` (shape-validated)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, f"proc{process_index}_arrays.npz"))
+        leaves, treedef = _flatten(example_tree)
+        if len(leaves) != len(manifest["leaves"]):
+            raise ValueError(
+                f"checkpoint has {len(manifest['leaves'])} leaves, "
+                f"expected {len(leaves)} — incompatible tree")
+        import jax.numpy as jnp
+        import ml_dtypes  # registers bf16/fp8 numpy extension dtypes
+        restored = []
+        for i, (leaf, meta) in enumerate(zip(leaves, manifest["leaves"])):
+            raw = data[meta["key"]]
+            dtype = np.dtype(meta["dtype"])
+            arr = np.frombuffer(raw.tobytes(), dtype=dtype).reshape(
+                meta["shape"])
+            want = tuple(getattr(leaf, "shape", np.shape(leaf)))
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"leaf {i}: checkpoint shape {arr.shape} != model {want}")
+            restored.append(jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, restored), step
+
+    def restore_sharded(self, example_tree, shardings, step=None):
+        """Restore and place each leaf with its (possibly new-mesh) sharding."""
+        host_tree, step = self.restore(example_tree, step)
+        placed = jax.tree_util.tree_map(
+            lambda arr, sh: jax.device_put(arr, sh), host_tree, shardings)
+        return placed, step
+
+    # ------------------------------------------------------------------
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,79 @@
+"""Architecture config registry: ``--arch <id>`` resolution."""
+from .base import ArchConfig, MLAConfig, Variant, PAPER_VARIANTS
+
+from . import (
+    glm4_9b, llama3_405b, qwen2_7b, granite_3_2b, internvl2_26b,
+    qwen2_moe_a2_7b, deepseek_moe_16b, whisper_base, recurrentgemma_2b,
+    falcon_mamba_7b, llama2_7b,
+)
+
+ARCHS = {
+    "glm4-9b": glm4_9b.CONFIG,
+    "llama3-405b": llama3_405b.CONFIG,
+    "qwen2-7b": qwen2_7b.CONFIG,
+    "granite-3-2b": granite_3_2b.CONFIG,
+    "internvl2-26b": internvl2_26b.CONFIG,
+    "qwen2-moe-a2.7b": qwen2_moe_a2_7b.CONFIG,
+    "deepseek-moe-16b": deepseek_moe_16b.CONFIG,
+    "whisper-base": whisper_base.CONFIG,
+    "recurrentgemma-2b": recurrentgemma_2b.CONFIG,
+    "falcon-mamba-7b": falcon_mamba_7b.CONFIG,
+    "llama2-7b": llama2_7b.CONFIG,
+    "llama2-7b-mla": llama2_7b.CONFIG_MLA,
+}
+
+#: The 10 assigned architectures (the dry-run grid).
+ASSIGNED = [
+    "glm4-9b", "llama3-405b", "qwen2-7b", "granite-3-2b", "internvl2-26b",
+    "qwen2-moe-a2.7b", "deepseek-moe-16b", "whisper-base",
+    "recurrentgemma-2b", "falcon-mamba-7b",
+]
+
+#: Assigned input-shape set (LM-family): name -> (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k":    (4096,   256, "train"),
+    "prefill_32k": (32768,  32,  "prefill"),
+    "decode_32k":  (32768,  128, "decode"),
+    "long_500k":   (524288, 1,   "decode"),
+}
+
+
+def get(name: str) -> ArchConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}") from None
+
+
+def reduced(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """Tiny same-family config for CPU smoke tests (few layers/width)."""
+    import dataclasses
+    small = dict(
+        n_layers=min(cfg.n_layers, 2 if not cfg.block_pattern else len(cfg.block_pattern)),
+        d_model=128,
+        n_heads=min(cfg.n_heads, 4) if cfg.n_heads else 0,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)) if cfg.n_heads else 0,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab_size=512,
+        head_dim=32 if cfg.n_heads else 0,
+        max_position=1024,
+    )
+    if cfg.family == "moe":
+        small.update(n_experts=8, top_k=2, n_shared_experts=min(2, cfg.n_shared_experts),
+                     d_ff_expert=64)
+    if cfg.family == "ssm":
+        small.update(ssm_d_state=8, ssm_dt_rank=8)
+    if cfg.family == "hybrid":
+        small.update(local_window=64, lru_width=128)
+    if cfg.family == "encdec":
+        small.update(n_encoder_layers=2, encoder_len=64)
+    if cfg.family == "vlm":
+        small.update(vision_prefix_len=8)
+    if cfg.mla is not None:
+        from .base import MLAConfig
+        small.update(mla=MLAConfig(q_lora_rank=32, kv_lora_rank=32,
+                                   qk_nope_head_dim=32, qk_rope_head_dim=16,
+                                   v_head_dim=32))
+    small.update(overrides)
+    small["name"] = cfg.name + "-reduced"
+    return dataclasses.replace(cfg, **small)

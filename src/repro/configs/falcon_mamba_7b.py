@@ -1,0 +1,14 @@
+"""Falcon-Mamba-7B [arXiv:2410.05355] — Mamba-1, attention-free.
+
+LIFE's attention-specific machinery (KV compression, MHA/MLA models) is
+inapplicable here (DESIGN.md §5); the SSM state plays the KV role.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab_size=65024, head_dim=0,
+    ssm_d_state=16, ssm_expand=2, ssm_conv_kernel=4, ssm_dt_rank=256,
+    gated_mlp=False,
+)

@@ -1,0 +1,14 @@
+"""InternVL2-26B [arXiv:2404.16821] — VLM: InternViT (stub) + InternLM2-20B.
+
+The assignment specifies the transformer BACKBONE only; the vision frontend
+is a STUB — ``input_specs()`` provides precomputed patch embeddings that are
+projected and prepended to the text sequence.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-26b", family="vlm",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=16384, vocab_size=92553, head_dim=128,
+    vision_prefix_len=256,     # stub patch embeddings per image
+)

@@ -1,0 +1,19 @@
+"""Llama-2-7B [arXiv:2307.09288] — the paper's study model (Table 3 variants)."""
+from .base import ArchConfig, MLAConfig
+
+CONFIG = ArchConfig(
+    name="llama2-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=11008, vocab_size=32000, head_dim=128,
+    max_position=4096,
+)
+
+# MLA-converted twin (paper Appendix 8.2 config: Q/KV rank 128)
+CONFIG_MLA = ArchConfig(
+    name="llama2-7b-mla", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=11008, vocab_size=32000, head_dim=128,
+    max_position=4096,
+    mla=MLAConfig(q_lora_rank=128, kv_lora_rank=128,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+)

@@ -1,0 +1,11 @@
+"""RecurrentGemma-2B [arXiv:2402.19427] — RG-LRU + local attention, 1:2."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1,
+    d_ff=7680, vocab_size=256000, head_dim=256,
+    block_pattern=("rglru", "rglru", "attn"),
+    local_window=2048, lru_width=2560, tie_embeddings=True,
+    gated_mlp=True,
+)

@@ -1,0 +1,15 @@
+"""Whisper-base [arXiv:2212.04356] — enc-dec; conv frontend STUB.
+
+``input_specs()`` provides precomputed frame embeddings (post-conv) of
+``encoder_len`` frames; the decoder is exercised at the assigned seq_len
+(structurally — Whisper's trained max is 448, noted in DESIGN.md).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base", family="encdec",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+    d_ff=2048, vocab_size=51865, head_dim=64,
+    norm_kind="layernorm", gated_mlp=False,
+    n_encoder_layers=6, encoder_len=1500,
+)

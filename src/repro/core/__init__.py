@@ -1,0 +1,25 @@
+"""LIFE core: the paper's analytical framework as a first-class feature.
+
+Public API:
+    WorkloadModel   — analytical twin of an (arch × variant)
+    Forecaster      — Eqs. 1–7: TTFT / TPOT / TPS from hardware specs
+    StatsDB         — the statistics database (Fig. 2-F)
+    hardware        — device registry (Ryzen CPU/NPU/iGPU, V100, TPU v5e)
+    distributed     — mesh-aware roofline extension (beyond paper)
+"""
+from . import dtypes, hardware, hlo
+from .stats import StatsDB, Totals, OpRecord
+from .workload import WorkloadModel, TimelinePoint
+from .forecast import (Forecaster, PhaseForecast, bmm_tile_efficiency,
+                       bmm_sawtooth, bmm_asymptotic_efficiency,
+                       extrapolate_efficiency)
+from .distributed import (ShardingPlan, RooflineTerms, roofline,
+                          model_flops, DistributedForecaster)
+
+__all__ = [
+    "dtypes", "hardware", "hlo", "StatsDB", "Totals", "OpRecord",
+    "WorkloadModel", "TimelinePoint", "Forecaster", "PhaseForecast",
+    "bmm_tile_efficiency", "bmm_sawtooth", "bmm_asymptotic_efficiency",
+    "extrapolate_efficiency", "ShardingPlan", "RooflineTerms", "roofline",
+    "model_flops", "DistributedForecaster",
+]

@@ -1,0 +1,172 @@
+"""Performance forecasting & efficiency analysis (paper §4.2.2, Eqs. 1–7).
+
+Implements:
+* TTFT = max(t_c, t_m)         (Eq. 1–3)
+* TPOT = MEM/(BW·em) + t_disp  (Eq. 4–5; dimensionally corrected — see
+                                DESIGN.md §8: the printed equation inverts
+                                the ratio but the paper's own Table 10
+                                numbers follow this form)
+* TPS  = 1/TPOT                (Eq. 6)
+* LoRA merge time              (Eq. 7)
+* efficiency-grid sweeps       (Figs. 4, 5)
+* BMM tile-padding efficiency sawtooth (Fig. 8) — on TPU the MXU imposes
+  128-multiples (DESIGN.md §3.4)
+* decode timeline TPS decay    (Fig. 7 / §5.3.2)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Sequence
+
+from .hardware import HardwareSpec
+from .stats import StatsDB, Totals
+from .workload import WorkloadModel
+
+
+@dataclasses.dataclass
+class PhaseForecast:
+    t_compute: float          # Eq. 1 (s)
+    t_memory: float           # Eq. 2 (s)
+    t_dispatch: float         # Σ dispatch latency (s)
+    latency: float            # max(t_c, t_m) + t_dispatch (s)
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.t_compute > self.t_memory else "memory"
+
+    @property
+    def ratio(self) -> float:
+        """t_c/t_m — >1 ⇒ compute bound (paper Fig. 4)."""
+        return self.t_compute / max(self.t_memory, 1e-30)
+
+
+class Forecaster:
+    """Analysis scripts (paper Fig. 2-G): workload metrics × hardware → perf."""
+
+    def __init__(self, hw: HardwareSpec):
+        self.hw = hw
+
+    # -- Eq. 1–3 -----------------------------------------------------------
+    def phase(self, totals: Totals, *, ec: float = 1.0, em: float = 1.0,
+              include_dispatch: bool = True) -> PhaseForecast:
+        t_c = totals.ops / (ec * self.hw.flops)
+        t_m = totals.mem_total / (em * self.hw.bw)
+        t_d = (totals.dispatches * self.hw.dispatch_latency_s
+               if include_dispatch else 0.0)
+        return PhaseForecast(t_compute=t_c, t_memory=t_m, t_dispatch=t_d,
+                             latency=max(t_c, t_m) + t_d)
+
+    def ttft(self, prefill_db: StatsDB, *, ec: float = 1.0,
+             em: float = 1.0) -> PhaseForecast:
+        return self.phase(prefill_db.totals("prefill"), ec=ec, em=em)
+
+    # -- Eq. 4–6 -----------------------------------------------------------
+    def tpot(self, decode_db: StatsDB, *, em: float = 1.0,
+             ec: Optional[float] = None) -> float:
+        """Seconds per output token.
+
+        The paper defines TPOT as purely memory-bound (t_c << t_m during
+        decode for all studied conditions).  Passing ``ec`` adds the compute
+        term as max(t_c, t_m) for robustness on very fast-memory hardware.
+        """
+        t = decode_db.totals("decode")
+        t_m = t.mem_total / (em * self.hw.bw)
+        t_d = t.dispatches * self.hw.dispatch_latency_s
+        if ec is not None:
+            t_c = t.ops / (ec * self.hw.flops)
+            return max(t_c, t_m) + t_d
+        return t_m + t_d
+
+    def tps(self, decode_db: StatsDB, *, em: float = 1.0,
+            ec: Optional[float] = None) -> float:
+        return 1.0 / self.tpot(decode_db, em=em, ec=ec)
+
+    # -- Eq. 7 --------------------------------------------------------------
+    def lora_update_time(self, lora_db: StatsDB, *, ec: float = 1.0,
+                         em: float = 1.0) -> PhaseForecast:
+        return self.phase(lora_db.totals("lora_update"), ec=ec, em=em)
+
+    # -- Fig. 4/5: efficiency grids -----------------------------------------
+    def efficiency_grid(self, totals: Totals,
+                        ec_values: Sequence[float],
+                        em_values: Sequence[float]) -> List[List[float]]:
+        """Grid of t_c/t_m ratios across (ec, em) operating efficiencies."""
+        return [[self.phase(totals, ec=ec, em=em).ratio for em in em_values]
+                for ec in ec_values]
+
+    def hardware_grid(self, totals: Totals,
+                      tops_values: Sequence[float],
+                      bw_values: Sequence[float],
+                      *, ec: float = 1.0, em: float = 1.0) -> List[List[float]]:
+        """Grid of t_c/t_m across hardware configs (paper's 10×10 TOPS×BW)."""
+        out = []
+        for tops in tops_values:
+            row = []
+            for bw in bw_values:
+                t_c = totals.ops / (ec * tops * 1e12)
+                t_m = totals.mem_total / (em * bw * 1e9)
+                row.append(t_c / max(t_m, 1e-30))
+            out.append(row)
+        return out
+
+    # -- Fig. 7: decode timeline ---------------------------------------------
+    def tps_timeline(self, wm: WorkloadModel, batch: int, prompt_len: int,
+                     n_new: int, *, em: float = 1.0,
+                     sample_every: int = 100) -> List[tuple]:
+        """(step, mem_bytes, tps) along a generation (paper §5.3.2)."""
+        out = []
+        for pt in wm.generate_timeline(batch, prompt_len, n_new,
+                                       sample_every=sample_every):
+            t_m = pt.totals.mem_total / (em * self.hw.bw)
+            t_d = pt.totals.dispatches * self.hw.dispatch_latency_s
+            out.append((pt.step, pt.totals.mem_total, 1.0 / (t_m + t_d)))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8: BMM tile-padding efficiency (decode KV-growth sawtooth)
+# ---------------------------------------------------------------------------
+
+def bmm_tile_efficiency(seq_len: int, tile: int) -> float:
+    """Useful fraction of a tiled BMM whose inner dim is padded to ``tile``."""
+    padded = ((seq_len + tile - 1) // tile) * tile
+    return seq_len / padded
+
+
+def bmm_sawtooth(seq_lens: Iterable[int], tile: int) -> List[tuple]:
+    """(seq_len, ideal_ops_fraction, padded_ops_fraction=1) per point."""
+    return [(s, bmm_tile_efficiency(s, tile)) for s in seq_lens]
+
+
+def bmm_asymptotic_efficiency(prompt_len: int, n_new: int, tile: int) -> float:
+    """Average tile efficiency across a decode of ``n_new`` tokens (§5.4.1).
+
+    The sawtooth's mean approaches an asymptote as KV grows; this is the
+    average BMM efficiency LIFE plugs into long-generation TPS forecasts.
+    """
+    total = 0.0
+    for i in range(n_new):
+        total += bmm_tile_efficiency(prompt_len + i + 1, tile)
+    return total / max(n_new, 1)
+
+
+# ---------------------------------------------------------------------------
+# Efficiency extrapolation (paper §4.2.2: "expects efficiency of operator for
+# specific shapes and extrapolates to other shapes")
+# ---------------------------------------------------------------------------
+
+def extrapolate_efficiency(measured: Sequence[tuple], target_size: float) -> float:
+    """Log-linear interpolation of (size, efficiency) measurements."""
+    import math
+    pts = sorted(measured)
+    if not pts:
+        return 1.0
+    if target_size <= pts[0][0]:
+        return pts[0][1]
+    if target_size >= pts[-1][0]:
+        return pts[-1][1]
+    for (s0, e0), (s1, e1) in zip(pts, pts[1:]):
+        if s0 <= target_size <= s1:
+            f = (math.log(target_size) - math.log(s0)) / (math.log(s1) - math.log(s0))
+            return e0 + f * (e1 - e0)
+    return pts[-1][1]

@@ -1,0 +1,76 @@
+"""Hardware specification registry (paper Fig. 2-H).
+
+LIFE needs only peak compute (TOPS), memory bandwidth (GB/s) and optional
+dispatch latency to forecast.  We keep the paper's verification devices
+(Ryzen CPU / NPU / iGPU, V100) so Tables 6/10 reproduce, and add the TPU v5e
+target with pod-level interconnect for the distributed extension
+(DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    tops: float                      # peak compute, Tera-ops/s (dtype-matched)
+    bw_gbps: float                   # peak HBM/DRAM bandwidth, GB/s
+    dispatch_latency_s: float = 5e-6 # per kernel-dispatch overhead
+    onchip_bytes: float = 8 * 2**20  # SRAM/VMEM working-set capacity
+    # --- multi-chip (TPU) extensions -------------------------------------
+    ici_gbps_per_link: float = 0.0   # per-ICI-link bandwidth, GB/s
+    ici_links: int = 0               # links per chip (e.g. v5e 2D torus: 4)
+    hbm_bytes: float = 0.0           # HBM capacity per chip
+
+    @property
+    def flops(self) -> float:
+        return self.tops * 1e12
+
+    @property
+    def bw(self) -> float:
+        return self.bw_gbps * 1e9
+
+    def ici_bw(self) -> float:
+        """Aggregate interconnect bandwidth per chip (bytes/s)."""
+        return self.ici_gbps_per_link * 1e9
+
+
+REGISTRY: Dict[str, HardwareSpec] = {}
+
+
+def _reg(h: HardwareSpec) -> HardwareSpec:
+    REGISTRY[h.name] = h
+    return h
+
+
+# ---- paper §4.4 verification setups --------------------------------------
+RYZEN_9_HX370_CPU = _reg(HardwareSpec(
+    name="ryzen-9-hx370-cpu", tops=0.3264, bw_gbps=240.0,
+    dispatch_latency_s=2e-6, onchip_bytes=24 * 2**20))
+
+RYZEN_AI_MAX_395_NPU = _reg(HardwareSpec(
+    name="ryzen-ai-max-395-npu", tops=50.0, bw_gbps=256.0,
+    dispatch_latency_s=10e-6, onchip_bytes=32 * 2**20))
+
+RYZEN_AI_MAX_395_IGPU = _reg(HardwareSpec(
+    name="ryzen-ai-max-395-igpu", tops=76.0, bw_gbps=256.0,
+    dispatch_latency_s=8e-6, onchip_bytes=16 * 2**20))
+
+NVIDIA_V100 = _reg(HardwareSpec(
+    name="nvidia-v100", tops=126.0, bw_gbps=900.0,
+    dispatch_latency_s=5e-6, onchip_bytes=20 * 2**20))
+
+# ---- TPU target (grading constants: 197 TFLOP/s bf16, 819 GB/s, 50 GB/s ICI)
+TPU_V5E = _reg(HardwareSpec(
+    name="tpu-v5e", tops=197.0, bw_gbps=819.0,
+    dispatch_latency_s=2e-6, onchip_bytes=128 * 2**20,   # ~128 MiB VMEM
+    ici_gbps_per_link=50.0, ici_links=4, hbm_bytes=16 * 2**30))
+
+
+def get(name: str) -> HardwareSpec:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown hardware {name!r}; known: {sorted(REGISTRY)}") from None

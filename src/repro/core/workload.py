@@ -1,0 +1,315 @@
+"""Analytical LLM workload model (paper Fig. 2-B/D/E).
+
+``WorkloadModel`` builds the hierarchical analytical model of a full LLM from
+an :class:`repro.configs.base.ArchConfig` + :class:`Variant`, and simulates
+inference scenarios — prefill (optionally chunked), auto-regressive decode
+timelines, LoRA updates — accumulating the statistics database (Fig. 2-F).
+
+The same ``ArchConfig`` drives the executable JAX model in ``repro.models``,
+making this the analytical *twin* of every framework model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from . import derived as D
+from . import operators as F
+from . import dtypes
+from .stats import StatsDB, Totals
+
+from repro.configs.base import ArchConfig, Variant
+
+
+@dataclasses.dataclass
+class TimelinePoint:
+    step: int                 # decode step index (0 = first generated token)
+    past_len: int             # KV length before this token
+    totals: Totals            # per-token workload
+
+
+class WorkloadModel:
+    """Analytical twin of one (architecture × variant)."""
+
+    def __init__(self, arch: ArchConfig, variant: Optional[Variant] = None):
+        self.arch = arch
+        self.variant = variant or Variant()
+        if self.variant.use_mla and arch.mla is None:
+            # MHA→MLA conversion (paper §3.3.2): attach default MLA geometry
+            from repro.configs.base import MLAConfig
+            self.arch = dataclasses.replace(arch, mla=MLAConfig())
+
+    # ------------------------------------------------------------------
+    # scenario drivers
+    # ------------------------------------------------------------------
+    def prefill(self, batch: int, seq: int, db: Optional[StatsDB] = None,
+                past_len: int = 0) -> StatsDB:
+        """Process ``seq`` new tokens on top of ``past_len`` cached tokens."""
+        db = db or StatsDB()
+        db.set_phase("prefill")
+        a, v = self.arch, self.variant
+        ntok = batch * seq
+        with db.scope("model"):
+            if a.family == "encdec" and past_len == 0:
+                self._encoder(db, batch)
+            if a.family == "vlm" and past_len == 0 and a.vision_prefix_len:
+                # stub frontend: patch embeddings arrive precomputed; project
+                F.linear(db, batch * a.vision_prefix_len, a.d_model, a.d_model,
+                         dtype_act=v.dtype_act, dtype_w=v.dtype_w,
+                         group_size=v.group_size, name="vision_projector")
+            F.embedding(db, ntok, a.vocab_size, a.d_model, dtype=v.dtype_act)
+            for i, kind in enumerate(a.block_kinds()):
+                with db.scope(f"layer{i}"):
+                    self._block(db, kind, batch, q_len=seq,
+                                kv_len=past_len + seq, decode=False)
+            D.norm(db, ntok, a.d_model, kind=a.norm_kind,
+                   dtype=v.dtype_act, fused=v.fused)
+            # LM head over all positions (paper Table 4 convention)
+            F.linear(db, ntok, a.d_model, a.vocab_size,
+                     dtype_act=v.dtype_act, dtype_w=v.dtype_w,
+                     group_size=v.group_size, name="lm_head")
+        return db
+
+    def chunked_prefill(self, batch: int, seq: int, chunk: int,
+                        db: Optional[StatsDB] = None) -> StatsDB:
+        """§3.3.4: split the prompt into equal chunks, reusing the KV cache."""
+        db = db or StatsDB()
+        done = 0
+        while done < seq:
+            step = min(chunk, seq - done)
+            self.prefill(batch, step, db=db, past_len=done)
+            done += step
+        return db
+
+    def decode_step(self, batch: int, past_len: int,
+                    db: Optional[StatsDB] = None) -> StatsDB:
+        """One auto-regressively generated token with ``past_len`` cached."""
+        db = db or StatsDB()
+        db.set_phase("decode")
+        a, v = self.arch, self.variant
+        with db.scope("model"):
+            F.embedding(db, batch, a.vocab_size, a.d_model, dtype=v.dtype_act)
+            for i, kind in enumerate(a.block_kinds()):
+                with db.scope(f"layer{i}"):
+                    self._block(db, kind, batch, q_len=1,
+                                kv_len=past_len + 1, decode=True)
+            D.norm(db, batch, a.d_model, kind=a.norm_kind,
+                   dtype=v.dtype_act, fused=v.fused)
+            F.linear(db, batch, a.d_model, a.vocab_size,
+                     dtype_act=v.dtype_act, dtype_w=v.dtype_w,
+                     group_size=v.group_size, name="lm_head")
+            # greedy/top-k sampling pass over logits
+            F.elemw(db, batch * a.vocab_size, n_operands=1, ops_per_el=1.0,
+                    dtype=v.dtype_act, write_output=False, name="sampling",
+                    dispatches=0)
+        return db
+
+    def generate_timeline(self, batch: int, prompt_len: int, n_new: int,
+                          sample_every: int = 1) -> List[TimelinePoint]:
+        """Decode timeline (paper Fig. 7): per-token workload vs. KV growth."""
+        points: List[TimelinePoint] = []
+        for step in range(0, n_new, sample_every):
+            past = prompt_len + step
+            db = self.decode_step(batch, past)
+            points.append(TimelinePoint(step=step, past_len=past,
+                                        totals=db.totals("decode")))
+        return points
+
+    def lora_update(self, rank: Optional[int] = None,
+                    db: Optional[StatsDB] = None) -> StatsDB:
+        """One-time full-model adapter merge (paper Eq. 7 / Table 12)."""
+        db = db or StatsDB()
+        db.set_phase("lora_update")
+        a, v = self.arch, self.variant
+        r = rank or v.lora_rank or 16
+        for k, n, name in self._linear_shapes():
+            with db.scope(name):
+                F.lora_merge(db, k, n, r, dtype_w=v.dtype_w)
+        return db
+
+    # ------------------------------------------------------------------
+    # static size accounting
+    # ------------------------------------------------------------------
+    def weight_bytes(self) -> float:
+        a, v = self.arch, self.variant
+        wdt = dtypes.get(v.dtype_w)
+        adt = dtypes.get(v.dtype_act)
+        lin = sum(k * n for k, n, _ in self._linear_shapes())
+        emb = a.vocab_size * a.d_model  # embeddings stay high-precision
+        other = a.param_count() - lin - emb - (
+            0 if a.tie_embeddings else a.vocab_size * a.d_model)
+        head = 0 if a.tie_embeddings else a.vocab_size * a.d_model
+        return (wdt.storage_bytes(int(lin + head), v.group_size)
+                + (emb + max(other, 0)) * adt.bytes_per_el)
+
+    def kv_cache_bytes(self, seq: int, batch: int = 1) -> float:
+        a, v = self.arch, self.variant
+        qdt = dtypes.get(v.kv_dtype)
+        n_el_tok = 0.0
+        for kind in a.block_kinds():
+            if kind != "attn":
+                continue
+            if a.mla is not None:
+                n_el_tok += a.mla.kv_lora_rank + a.mla.qk_rope_head_dim
+            else:
+                n_el_tok += 2 * a.n_kv_heads * (a.head_dim or 0)
+        span = seq if not a.local_window else min(seq, a.local_window)
+        total_el = batch * span * n_el_tok
+        # recurrent state: fp32 SSM/LRU state + bf16 conv tails (matches
+        # models.init_decode_state dtypes exactly)
+        state = 0.0
+        for kind in a.block_kinds():
+            if kind == "ssm":
+                di = a.ssm_expand * a.d_model
+                state += batch * (di * a.ssm_d_state * 4.0
+                                  + di * (a.ssm_conv_kernel - 1) * 2.0)
+            elif kind == "rglru":
+                w = a.lru_width or a.d_model
+                state += batch * (w * 4.0 + w * (a.ssm_conv_kernel - 1) * 2.0)
+        return qdt.storage_bytes(int(total_el), v.group_size) + state
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+    def _linear_shapes(self) -> Sequence[tuple]:
+        """(k, n, name) of every weight GEMM (for LoRA merge & quant size)."""
+        a = self.arch
+        out = []
+        d, hd = a.d_model, (a.head_dim or 0)
+        for i, kind in enumerate(a.block_kinds()):
+            if kind == "attn":
+                if a.mla is not None:
+                    m = a.mla
+                    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+                    out += [(d, m.q_lora_rank, f"l{i}.q_down"),
+                            (m.q_lora_rank, a.n_heads * qk, f"l{i}.q_up"),
+                            (d, m.kv_lora_rank + m.qk_rope_head_dim, f"l{i}.kv_down"),
+                            (m.kv_lora_rank, a.n_heads * (m.qk_nope_head_dim + m.v_head_dim), f"l{i}.kv_up"),
+                            (a.n_heads * m.v_head_dim, d, f"l{i}.o_proj")]
+                else:
+                    out += [(d, a.n_heads * hd, f"l{i}.q_proj"),
+                            (d, a.n_kv_heads * hd, f"l{i}.k_proj"),
+                            (d, a.n_kv_heads * hd, f"l{i}.v_proj"),
+                            (a.n_heads * hd, d, f"l{i}.o_proj")]
+                if a.n_encoder_layers:  # decoder cross-attention
+                    out += [(d, d, f"l{i}.xattn_{p}") for p in "qkvo"]
+            elif kind == "ssm":
+                di = a.ssm_expand * d
+                dtr = a.ssm_dt_rank or max(1, d // 16)
+                out += [(d, 2 * di, f"l{i}.in_proj"),
+                        (di, dtr + 2 * a.ssm_d_state, f"l{i}.x_proj"),
+                        (dtr, di, f"l{i}.dt_proj"),
+                        (di, d, f"l{i}.out_proj")]
+            elif kind == "rglru":
+                w = a.lru_width or d
+                out += [(d, w, f"l{i}.linear_x"), (d, w, f"l{i}.linear_y"),
+                        (w, d, f"l{i}.linear_out")]
+            if a.family == "moe":
+                out += [(d, a.n_experts, f"l{i}.router")]
+                for e in range(a.n_experts + a.n_shared_experts):
+                    out += [(d, a.d_ff_expert, f"l{i}.e{e}.gate"),
+                            (d, a.d_ff_expert, f"l{i}.e{e}.up"),
+                            (a.d_ff_expert, d, f"l{i}.e{e}.down")]
+            elif kind != "ssm" and a.d_ff:
+                if a.gated_mlp:
+                    out += [(d, a.d_ff, f"l{i}.gate_proj")]
+                out += [(d, a.d_ff, f"l{i}.up_proj"),
+                        (a.d_ff, d, f"l{i}.down_proj")]
+        for i in range(a.n_encoder_layers):
+            out += [(d, d, f"enc{i}.{p}_proj") for p in "qkvo"]
+            out += [(d, a.d_ff, f"enc{i}.up_proj"), (a.d_ff, d, f"enc{i}.down_proj")]
+        return out
+
+    def _encoder(self, db: StatsDB, batch: int) -> None:
+        """Whisper-style encoder over precomputed (stub) frame embeddings."""
+        a, v = self.arch, self.variant
+        frames = a.encoder_len
+        ntok = batch * frames
+        with db.scope("encoder"):
+            for i in range(a.n_encoder_layers):
+                with db.scope(f"enc{i}"):
+                    D.norm(db, ntok, a.d_model, kind=a.norm_kind,
+                           dtype=v.dtype_act, fused=v.fused)
+                    D.mha_block(db, batch, frames, frames, a.d_model,
+                                a.n_heads, a.n_heads, a.head_dim or 64,
+                                dtype_act=v.dtype_act, dtype_w=v.dtype_w,
+                                group_size=v.group_size, kv_dtype="bf16",
+                                fused=v.fused)
+                    D.residual_add(db, ntok, a.d_model, dtype=v.dtype_act,
+                                   fused=v.fused)
+                    D.norm(db, ntok, a.d_model, kind=a.norm_kind,
+                           dtype=v.dtype_act, fused=v.fused)
+                    D.mlp(db, ntok, a.d_model, a.d_ff, gated=a.gated_mlp,
+                          dtype_act=v.dtype_act, dtype_w=v.dtype_w,
+                          group_size=v.group_size, fused=v.fused,
+                          actfn_algo=v.actfn_algo)
+                    D.residual_add(db, ntok, a.d_model, dtype=v.dtype_act,
+                                   fused=v.fused)
+
+    def _block(self, db: StatsDB, kind: str, batch: int, q_len: int,
+               kv_len: int, decode: bool) -> None:
+        a, v = self.arch, self.variant
+        ntok = batch * q_len
+        lora = v.lora_rank if v.lora_inline else None
+        D.norm(db, ntok, a.d_model, kind=a.norm_kind, dtype=v.dtype_act,
+               fused=v.fused)
+        if kind == "attn":
+            pad = v.pad_to if decode else 1
+            if a.mla is not None:
+                D.mla_block(db, batch, q_len, kv_len, a.d_model, a.n_heads,
+                            q_lora_rank=a.mla.q_lora_rank,
+                            kv_lora_rank=a.mla.kv_lora_rank,
+                            qk_nope_head_dim=a.mla.qk_nope_head_dim,
+                            qk_rope_head_dim=a.mla.qk_rope_head_dim,
+                            v_head_dim=a.mla.v_head_dim,
+                            dtype_act=v.dtype_act, dtype_w=v.dtype_w,
+                            group_size=v.group_size, kv_dtype=v.kv_dtype,
+                            fused=v.fused, rope_table=a.max_position)
+            else:
+                D.mha_block(db, batch, q_len, kv_len, a.d_model, a.n_heads,
+                            a.n_kv_heads, a.head_dim or 0,
+                            dtype_act=v.dtype_act, dtype_w=v.dtype_w,
+                            group_size=v.group_size, kv_dtype=v.kv_dtype,
+                            qkv_bias=a.qkv_bias, fused=v.fused, pad_to=pad,
+                            rope_table=a.max_position, lora_rank=lora,
+                            window=a.local_window or None)
+            if a.n_encoder_layers:  # decoder cross-attention over encoder KV
+                D.residual_add(db, ntok, a.d_model, dtype=v.dtype_act,
+                               fused=v.fused)
+                D.norm(db, ntok, a.d_model, kind=a.norm_kind,
+                       dtype=v.dtype_act, fused=v.fused)
+                D.cross_attention_block(
+                    db, batch, q_len, a.encoder_len, a.d_model, a.n_heads,
+                    a.n_heads, a.head_dim or 64,
+                    compute_enc_kv=not decode and kv_len == q_len,
+                    dtype_act=v.dtype_act, dtype_w=v.dtype_w,
+                    group_size=v.group_size, kv_dtype=v.kv_dtype, fused=v.fused)
+        elif kind == "ssm":
+            D.ssm_block(db, batch, q_len, a.d_model, d_state=a.ssm_d_state,
+                        expand=a.ssm_expand, conv_kernel=a.ssm_conv_kernel,
+                        dt_rank=a.ssm_dt_rank or None, dtype_act=v.dtype_act,
+                        dtype_w=v.dtype_w, group_size=v.group_size,
+                        fused=v.fused)
+        elif kind == "rglru":
+            D.rglru_block(db, batch, q_len, a.d_model,
+                          lru_width=a.lru_width or None,
+                          conv_kernel=a.ssm_conv_kernel,
+                          dtype_act=v.dtype_act, dtype_w=v.dtype_w,
+                          group_size=v.group_size, fused=v.fused)
+        D.residual_add(db, ntok, a.d_model, dtype=v.dtype_act, fused=v.fused)
+        # channel mixer (mamba folds it into the ssm block)
+        if kind != "ssm" and (a.d_ff or a.family == "moe"):
+            D.norm(db, ntok, a.d_model, kind=a.norm_kind, dtype=v.dtype_act,
+                   fused=v.fused)
+            if a.family == "moe":
+                D.moe_layer(db, ntok, a.d_model, a.d_ff_expert, a.n_experts,
+                            a.top_k, n_shared=a.n_shared_experts,
+                            dtype_act=v.dtype_act, dtype_w=v.dtype_w,
+                            group_size=v.group_size, fused=v.fused,
+                            actfn_algo=v.actfn_algo)
+            else:
+                D.mlp(db, ntok, a.d_model, a.d_ff, gated=a.gated_mlp,
+                      dtype_act=v.dtype_act, dtype_w=v.dtype_w,
+                      group_size=v.group_size, bias=False,
+                      actfn_algo=v.actfn_algo, fused=v.fused, lora_rank=lora)
+        D.residual_add(db, ntok, a.d_model, dtype=v.dtype_act, fused=v.fused)

@@ -1,0 +1,90 @@
+"""Deterministic synthetic data pipeline.
+
+Stateless-resumable (DESIGN.md §6): batch(step) is a pure function of
+(seed, step), so a restarted trainer regenerates the exact token stream —
+no data-loader state in the checkpoint.  Shardable: the batch dict is laid
+out (global_batch, seq) and sharded by ``runtime.sharding.batch_shardings``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    #: simulated document length for packing (0 = one doc per row)
+    mean_doc_len: int = 0
+
+
+class SyntheticTokens:
+    """Zipf-ish token stream with optional document packing + EOS resets."""
+
+    def __init__(self, cfg: ArchConfig, data: DataConfig):
+        self.cfg = cfg
+        self.data = data
+        # Zipf ranks make the loss non-degenerate (learnable marginal)
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        self._probs = (1.0 / ranks) / np.sum(1.0 / ranks)
+
+    # -- pure function of step: resumable -------------------------------
+    def batch(self, step: int) -> Dict[str, jnp.ndarray]:
+        d, cfg = self.data, self.cfg
+        rng = np.random.default_rng(np.uint64(d.seed * 1_000_003 + step))
+        n_text = d.seq_len
+        out: Dict[str, jnp.ndarray] = {}
+        if cfg.family == "vlm":
+            n_text = d.seq_len - cfg.vision_prefix_len
+            out["vision_embeds"] = jnp.asarray(
+                rng.standard_normal(
+                    (d.global_batch, cfg.vision_prefix_len, cfg.d_model)),
+                jnp.bfloat16)
+        if cfg.family == "encdec":
+            out["frames"] = jnp.asarray(
+                rng.standard_normal(
+                    (d.global_batch, cfg.encoder_len, cfg.d_model)),
+                jnp.bfloat16)
+        toks = rng.choice(cfg.vocab_size, p=self._probs,
+                          size=(d.global_batch, n_text + 1)).astype(np.int32)
+        mask = np.ones((d.global_batch, n_text), np.float32)
+        if d.mean_doc_len:
+            # document packing: EOS boundaries drop next-token targets
+            boundaries = rng.random((d.global_batch, n_text)) < 1.0 / d.mean_doc_len
+            mask[boundaries] = 0.0
+        out["inputs"] = jnp.asarray(toks[:, :-1])
+        out["targets"] = jnp.asarray(toks[:, 1:])
+        out["mask"] = jnp.asarray(mask)
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+    # -- dry-run stand-ins ------------------------------------------------
+    def abstract_batch(self) -> Dict[str, jax.ShapeDtypeStruct]:
+        d, cfg = self.data, self.cfg
+        n_text = d.seq_len
+        out: Dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.family == "vlm":
+            n_text = d.seq_len - cfg.vision_prefix_len
+            out["vision_embeds"] = jax.ShapeDtypeStruct(
+                (d.global_batch, cfg.vision_prefix_len, cfg.d_model),
+                jnp.bfloat16)
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (d.global_batch, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+        out["inputs"] = jax.ShapeDtypeStruct((d.global_batch, n_text), jnp.int32)
+        out["targets"] = jax.ShapeDtypeStruct((d.global_batch, n_text), jnp.int32)
+        out["mask"] = jax.ShapeDtypeStruct((d.global_batch, n_text), jnp.float32)
+        return out

@@ -1,0 +1,147 @@
+"""Fused attention Pallas TPU kernel (paper §3.2.1 operator fusion).
+
+The paper's canonical fusion example is Flash Attention: QK^T → softmax → PV
+executed without materializing scores/probs in HBM.  LIFE models this as the
+elision of intermediate reads/writes; this kernel *is* that fusion on TPU.
+
+TPU adaptation (DESIGN.md §3): blockwise online softmax with VMEM
+accumulators; block shapes default to MXU-native 128×128; the KV-block grid
+dimension is minor-most so accumulators persist in VMEM scratch across KV
+steps (sequential grid execution on TPU).  Causal masking skips fully-masked
+KV blocks via ``pl.when`` (zero MXU work on skipped blocks).
+
+GQA is supported natively: query head h reads KV head h // (H / Hk) through
+the BlockSpec index map — repeated KV is never materialized.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window: Optional[int],
+                 block_q: int, block_k: int, n_kv_blocks: int,
+                 q_len: int, kv_len: int, q_offset: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # global positions of this block's queries/keys
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    # block-level skip: causal ⇒ KV blocks strictly after the query block
+    # contribute nothing; window ⇒ KV blocks entirely before the span too.
+    block_needed = True
+    if causal:
+        block_needed = (ki * block_k) <= (q_offset + qi * block_q + block_q - 1)
+    if window is not None:
+        lo = q_offset + qi * block_q - window
+        block_needed = jnp.logical_and(block_needed,
+                                       (ki + 1) * block_k - 1 >= lo) \
+            if not isinstance(block_needed, bool) else \
+            ((ki + 1) * block_k - 1 >= lo)
+
+    @pl.when(block_needed)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = k_pos < kv_len
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,                 # (b, s, H, d)
+    k: jax.Array,                 # (b, L, Hk, d)
+    v: jax.Array,                 # (b, L, Hk, d)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,            # global position of q[0] (cached decode)
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, H, d = q.shape
+    _, L, Hk, _ = k.shape
+    assert H % Hk == 0, (H, Hk)
+    group = H // Hk
+    scale = d ** -0.5
+
+    block_q = min(block_q, max(s, 8))
+    block_k = min(block_k, max(L, 8))
+    s_pad = -(-s // block_q) * block_q
+    L_pad = -(-L // block_k) * block_k
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    if L_pad != L:
+        k = jnp.pad(k, ((0, 0), (0, L_pad - L), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, L_pad - L), (0, 0), (0, 0)))
+    nq, nk = s_pad // block_q, L_pad // block_k
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_kv_blocks=nk,
+        q_len=s, kv_len=L, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d),
+                         lambda bi, h, qi, ki: (bi, qi, h, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, h, qi, ki, g=group: (bi, ki, h // g, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, h, qi, ki, g=group: (bi, ki, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d),
+                               lambda bi, h, qi, ki: (bi, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s_pad, H, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running row max
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running row sum
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :s]

@@ -1,0 +1,62 @@
+"""Jit'd public wrapper for the fused attention kernel.
+
+On TPU this lowers the Pallas kernel; on CPU (this container) it runs the
+kernel body in interpret mode so correctness is validated everywhere.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .flash_attention import flash_attention_fwd
+from .ref import attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _fa(q, k, v, causal, window, q_offset, block_q, block_k, interpret):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+def _fa_fwd(q, k, v, causal, window, q_offset, block_q, block_k, interpret):
+    out = _fa(q, k, v, causal, window, q_offset, block_q, block_k, interpret)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, q_offset, block_q, block_k, interpret, res, g):
+    # Backward via the reference VJP (recompute-from-inputs). On real TPU a
+    # dedicated backward kernel would replace this; numerically identical.
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window, q_offset=q_offset),
+        q, k, v)
+    return vjp(g)
+
+
+_fa.defvjp(_fa_fwd, _fa_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Fused (flash) attention. q: (b,s,H,d); k,v: (b,L,Hk,d)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    return _fa(q, k, v, causal, window, q_offset, block_q, block_k,
+               interpret)
+
+
+__all__ = ["flash_attention", "attention_ref"]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  q_offset: int = 0) -> jax.Array:
+    """q: (b, s, H, d); k, v: (b, L, Hk, d); GQA by head grouping."""
+    b, s, H, d = q.shape
+    _, L, Hk, _ = k.shape
+    group = H // Hk
+    qg = q.reshape(b, s, Hk, group, d)
+    scores = jnp.einsum("bskgd,blkd->bkgsl", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    q_pos = q_offset + jnp.arange(s)
+    k_pos = jnp.arange(L)
+    mask = jnp.ones((s, L), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgsl,blkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, H, d).astype(q.dtype)

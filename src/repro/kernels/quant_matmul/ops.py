@@ -1,0 +1,26 @@
+"""Jit'd public wrapper for the int4 dequant matmul kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .quant_matmul import quant_matmul_fwd
+from .ref import quant_matmul_ref, quantize_ref, dequant_ref
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "block_m",
+                                             "block_n", "interpret"))
+def quant_matmul(x: jax.Array, w_q: jax.Array, scales: jax.Array,
+                 zeros: jax.Array, *, group_size: int = 128,
+                 block_m: int = 128, block_n: int = 128,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return quant_matmul_fwd(x, w_q, scales, zeros, group_size=group_size,
+                            block_m=block_m, block_n=block_n,
+                            interpret=interpret)
+
+
+__all__ = ["quant_matmul", "quant_matmul_ref", "quantize_ref", "dequant_ref"]

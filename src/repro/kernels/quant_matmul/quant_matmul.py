@@ -1,0 +1,87 @@
+"""Int4 per-group dequant-matmul Pallas TPU kernel (paper §3.3.1).
+
+The paper's quantized Linear dequantizes weights to higher precision inside
+the compute operator before the affine transform; LIFE charges 2·k·n extra
+ops and per-group scale/zero reads for it.  This kernel is that operator on
+TPU: int4 weights (stored as int8 nibbles), per-(group×n) bf16 scales and
+zero-points, dequantized in VMEM tiles and fed to the MXU — weights stream
+from HBM at 0.5 B/element + metadata, exactly the memory model LIFE uses.
+
+Block layout: grid (m/bm, n/bn, k/bk) with the K dimension minor-most so a
+fp32 accumulator tile persists in VMEM; ``bk`` equals the quantization group
+size so each K-step reads exactly one scale/zero row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _qmm_kernel(x_ref, wq_ref, scale_ref, zero_ref, o_ref, acc_ref, *,
+                n_k_blocks: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                       # (bm, bk)
+    wq = wq_ref[...].astype(jnp.float32)                     # (bk, bn) int4 vals
+    scale = scale_ref[...].astype(jnp.float32)               # (1, bn)
+    zero = zero_ref[...].astype(jnp.float32)                 # (1, bn)
+    w = (wq - zero) * scale                                  # dequant in VMEM
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def quant_matmul_fwd(
+    x: jax.Array,          # (m, k) activations
+    w_q: jax.Array,        # (k, n) int8 storage holding int4 values
+    scales: jax.Array,     # (k // group, n)
+    zeros: jax.Array,      # (k // group, n)
+    *,
+    group_size: int = 128,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    _, n = w_q.shape
+    assert k % group_size == 0, (k, group_size)
+    assert scales.shape == (k // group_size, n), scales.shape
+    block_k = group_size                      # one scale row per K step
+    block_m = min(block_m, max(m, 8))
+    block_n = min(block_n, max(n, 128))
+    m_pad = -(-m // block_m) * block_m
+    n_pad = -(-n // block_n) * block_n
+    if m_pad != m:
+        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+    if n_pad != n:
+        w_q = jnp.pad(w_q, ((0, 0), (0, n_pad - n)))
+        scales = jnp.pad(scales, ((0, 0), (0, n_pad - n)))
+        zeros = jnp.pad(zeros, ((0, 0), (0, n_pad - n)))
+    grid = (m_pad // block_m, n_pad // block_n, k // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, n_k_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, s: (s, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w_q, scales, zeros)
+    return out[:m, :n]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the int4 dequant matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dequant_ref(w_q: jax.Array, scales: jax.Array, zeros: jax.Array,
+                group_size: int = 128) -> jax.Array:
+    """(k, n) int4-valued int8 + per-group scale/zero -> fp32 weights."""
+    k, n = w_q.shape
+    g = group_size
+    wq = w_q.astype(jnp.float32).reshape(k // g, g, n)
+    w = (wq - zeros[:, None, :].astype(jnp.float32)) \
+        * scales[:, None, :].astype(jnp.float32)
+    return w.reshape(k, n)
+
+
+def quant_matmul_ref(x: jax.Array, w_q: jax.Array, scales: jax.Array,
+                     zeros: jax.Array, group_size: int = 128) -> jax.Array:
+    w = dequant_ref(w_q, scales, zeros, group_size)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def quantize_ref(w: jax.Array, group_size: int = 128):
+    """Symmetric-ish per-group int4 quantization of (k, n) weights."""
+    k, n = w.shape
+    g = group_size
+    wg = w.astype(jnp.float32).reshape(k // g, g, n)
+    wmin = wg.min(axis=1)
+    wmax = wg.max(axis=1)
+    scale = jnp.maximum((wmax - wmin) / 15.0, 1e-8)
+    zero = jnp.round(-wmin / scale) - 8.0
+    q = jnp.clip(jnp.round(wg / scale[:, None, :]) + zero[:, None, :],
+                 -8, 7).astype(jnp.int8)
+    return q.reshape(k, n), scale.astype(jnp.bfloat16), zero.astype(jnp.bfloat16)

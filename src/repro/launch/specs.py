@@ -1,0 +1,243 @@
+"""Dry-run cell construction: (architecture × input shape × mesh) → a
+jit-able step function + ShapeDtypeStruct inputs + shardings.
+
+``input_specs`` provides weak-type-correct, shardable stand-ins for every
+model input — no device allocation happens anywhere in this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs, models
+from repro.configs.base import ArchConfig, Variant
+from repro.core import WorkloadModel, ShardingPlan, DistributedForecaster
+from repro.data import DataConfig, SyntheticTokens
+from repro.optim import AdamW
+from repro.runtime import sharding as S
+from repro.runtime.train import make_loss_fn, dataclass_opt_shardings
+from repro.models import act_sharding
+
+#: archs whose attention is full/quadratic — long_500k is skipped for them
+#: (assignment: run long-context decode only for SSM/hybrid/linear-attn).
+FULL_ATTENTION_ARCHS = {
+    "glm4-9b", "llama3-405b", "qwen2-7b", "granite-3-2b", "internvl2-26b",
+    "qwen2-moe-a2.7b", "deepseek-moe-16b", "whisper-base",
+}
+
+
+def cell_is_skipped(arch_name: str, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and arch_name in FULL_ATTENTION_ARCHS:
+        return ("sub-quadratic attention required; "
+                f"{arch_name} is full-attention (DESIGN.md §5)")
+    return None
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                      # train | prefill | decode
+    fn: Callable                   # the step function to jit
+    args: Tuple                    # abstract (ShapeDtypeStruct) args
+    in_shardings: Tuple
+    out_shardings: object
+    donate: Tuple[int, ...]
+    tokens: int                    # tokens processed per step (MODEL_FLOPS)
+    training: bool
+    plan: ShardingPlan             # LIFE-distributed plan for prediction
+    workload: WorkloadModel
+
+
+def _plan_for(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
+              batch: int) -> ShardingPlan:
+    dp = 1
+    for a in policy.dp_axes:
+        dp *= mesh.shape[a]
+    tp = mesh.shape.get(policy.tp_axis, 1)
+    return ShardingPlan(dp=dp, tp=tp,
+                        ep=tp if cfg.family == "moe" else 1,
+                        fsdp=policy.fsdp)
+
+
+def _batch_struct(cfg: ArchConfig, batch: int, seq: int) -> Dict:
+    data = SyntheticTokens(cfg, DataConfig(global_batch=batch, seq_len=seq))
+    return data.abstract_batch()
+
+
+# ---------------------------------------------------------------------------
+# input_specs — the public stand-in builder (required API)
+# ---------------------------------------------------------------------------
+
+def input_specs(arch_name: str, shape_name: str) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = configs.get(arch_name)
+    seq, batch, kind = configs.SHAPES[shape_name]
+    if kind == "train":
+        return _batch_struct(cfg, batch, seq)
+    if kind == "prefill":
+        out: Dict = {}
+        n_text = seq
+        if cfg.family == "vlm":
+            n_text = seq - cfg.vision_prefix_len
+            out["vision_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.vision_prefix_len, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+        out["tokens"] = jax.ShapeDtypeStruct((batch, n_text), jnp.int32)
+        return out
+    # decode: one new token against a seq-length cache
+    return {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# cell builders
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_name: str, shape_name: str, mesh: Mesh, *,
+               kv_dtype=jnp.bfloat16, use_flash: bool = False,
+               microbatches: int = 1, remat: bool = True,
+               remat_policy: str = "full",
+               policy: Optional[S.ShardingPolicy] = None) -> Cell:
+    cfg = configs.get(arch_name)
+    seq, batch, kind = configs.SHAPES[shape_name]
+    policy = policy or S.policy_for(cfg, mesh, batch=batch)
+    plan = _plan_for(cfg, mesh, policy, batch)
+    wm = WorkloadModel(cfg, Variant())
+    # install activation-sharding hints for in-scan constraints
+    act_sharding.set_mesh(mesh, policy.dp_axes, policy.tp_axis)
+
+    if kind == "train":
+        return _train_cell(cfg, arch_name, shape_name, seq, batch, mesh,
+                           policy, plan, wm, use_flash, microbatches, remat,
+                           remat_policy)
+    if kind == "prefill":
+        return _prefill_cell(cfg, arch_name, shape_name, seq, batch, mesh,
+                             policy, plan, wm, kv_dtype, use_flash)
+    return _decode_cell(cfg, arch_name, shape_name, seq, batch, mesh,
+                        policy, plan, wm, kv_dtype)
+
+
+def _train_cell(cfg, arch, shape, seq, batch, mesh, policy, plan, wm,
+                use_flash, microbatches, remat, remat_policy="full") -> Cell:
+    opt = AdamW()
+    loss_fn = make_loss_fn(cfg, use_flash=use_flash, remat=remat,
+                           remat_policy=remat_policy)
+
+    def train_step(params, opt_state, batch_):
+        if microbatches > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (loss, _), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                return (jax.tree_util.tree_map(jnp.add, gsum, grads),
+                        lsum + loss), None
+            mbatch = jax.tree_util.tree_map(
+                lambda x: x.reshape(
+                    (microbatches, x.shape[0] // microbatches) + x.shape[1:]),
+                batch_)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), mbatch)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+        else:
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch_)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    params_abs = models.abstract_params(cfg)
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    batch_abs = _batch_struct(cfg, batch, seq)
+
+    param_sh = S.param_shardings(cfg, mesh, policy)
+    opt_sh = dataclass_opt_shardings(param_sh, mesh)
+    batch_sh = S.batch_shardings(cfg, mesh, policy, batch_abs)
+    scalar = NamedSharding(mesh, P())
+    out_sh = (param_sh, opt_sh, {"loss": scalar, "grad_norm": scalar})
+
+    return Cell(arch=arch, shape=shape, kind="train", fn=train_step,
+                args=(params_abs, opt_abs, batch_abs),
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=out_sh, donate=(0, 1),
+                tokens=batch * seq, training=True, plan=plan, workload=wm)
+
+
+def _prefill_cell(cfg, arch, shape, seq, batch, mesh, policy, plan, wm,
+                  kv_dtype, use_flash) -> Cell:
+    specs = input_specs(arch, shape)
+    state_abs = models.abstract_decode_state(cfg, batch, seq,
+                                             kv_dtype=kv_dtype)
+
+    def prefill_step(params, state, tokens, extra):
+        logits, state = models.step(cfg, params, tokens, state, **extra)
+        return logits, state
+
+    params_abs = models.abstract_params(cfg)
+    extra_abs = {k: v for k, v in specs.items() if k != "tokens"}
+    param_sh = S.param_shardings(cfg, mesh, policy)
+    state_sh = S.decode_state_shardings(cfg, batch, seq, mesh, policy)
+    tok_sh = NamedSharding(mesh, S.spec_for(("batch", None),
+                                            specs["tokens"].shape, mesh,
+                                            policy))
+    extra_sh = {k: NamedSharding(
+        mesh, S.spec_for(("batch", None, None), v.shape, mesh, policy))
+        for k, v in extra_abs.items()}
+    logit_sh = NamedSharding(mesh, S.spec_for(
+        ("batch", "vocab"), (batch, cfg.vocab_size), mesh, policy))
+
+    return Cell(arch=arch, shape=shape, kind="prefill", fn=prefill_step,
+                args=(params_abs, state_abs, specs["tokens"], extra_abs),
+                in_shardings=(param_sh, state_sh, tok_sh, extra_sh),
+                out_shardings=(logit_sh, state_sh), donate=(1,),
+                tokens=batch * seq, training=False, plan=plan, workload=wm)
+
+
+def _decode_cell(cfg, arch, shape, seq, batch, mesh, policy, plan, wm,
+                 kv_dtype) -> Cell:
+    specs = input_specs(arch, shape)
+    state_abs = models.abstract_decode_state(cfg, batch, seq,
+                                             kv_dtype=kv_dtype)
+
+    def decode_step(params, state, tokens):
+        logits, state = models.step(cfg, params, tokens, state)
+        return logits, state
+
+    params_abs = models.abstract_params(cfg)
+    param_sh = S.param_shardings(cfg, mesh, policy)
+    state_sh = S.decode_state_shardings(cfg, batch, seq, mesh, policy)
+    tok_sh = NamedSharding(mesh, S.spec_for(("batch", None),
+                                            specs["tokens"].shape, mesh,
+                                            policy))
+    logit_sh = NamedSharding(mesh, S.spec_for(
+        ("batch", "vocab"), (batch, cfg.vocab_size), mesh, policy))
+
+    return Cell(arch=arch, shape=shape, kind="decode", fn=decode_step,
+                args=(params_abs, state_abs, specs["tokens"]),
+                in_shardings=(param_sh, state_sh, tok_sh),
+                out_shardings=(logit_sh, state_sh), donate=(1,),
+                tokens=batch, training=False, plan=plan, workload=wm)
+
+
+# ---------------------------------------------------------------------------
+# LIFE analytical prediction for a cell (forecast-before-compile)
+# ---------------------------------------------------------------------------
+
+def life_prediction(cell: Cell) -> Dict:
+    seq, batch, kind = configs.SHAPES[cell.shape]
+    df = DistributedForecaster(cell.workload, cell.plan)
+    if kind == "train":
+        terms = df.predict_train_step(batch, seq)
+    elif kind == "prefill":
+        terms = df.predict_prefill(batch, seq)
+    else:
+        terms = df.predict_decode(batch, seq - 1)
+    return {"t_compute": terms.t_compute, "t_memory": terms.t_memory,
+            "t_collective": terms.t_collective, "dominant": terms.dominant}

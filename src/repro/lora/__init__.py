@@ -1,0 +1,5 @@
+from .adapters import (init_adapter, init_adapters_for_tree, merge,
+                       apply_inline, merge_flops)
+
+__all__ = ["init_adapter", "init_adapters_for_tree", "merge", "apply_inline",
+           "merge_flops"]

@@ -1,0 +1,60 @@
+"""LoRA adapters (paper §3.3.5): one-time ahead-of-time merge vs dynamic
+per-GEMM application — the two operating modes LIFE models (Eq. 7,
+Table 12 / Fig. 9)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_adapter(rng: jax.Array, k: int, n: int, rank: int,
+                 dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    ra, _ = jax.random.split(rng)
+    return {
+        "A": jax.random.normal(ra, (k, rank), dtype) * (1.0 / rank) ** 0.5,
+        "B": jnp.zeros((rank, n), dtype),   # B=0: adapter starts as identity
+    }
+
+
+def init_adapters_for_tree(rng: jax.Array, params: Dict, rank: int,
+                           min_size: int = 1 << 16) -> Dict:
+    """Adapter pair for every large 2-D weight; mirrors the param tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for leaf, r in zip(leaves, rngs):
+        if hasattr(leaf, "ndim") and leaf.ndim == 2 and leaf.size >= min_size:
+            out.append(init_adapter(r, leaf.shape[0], leaf.shape[1], rank,
+                                    leaf.dtype))
+        else:
+            out.append(None)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def merge(params: Dict, adapters: Dict, scale: float = 1.0) -> Dict:
+    """One-time merge: W' = W + scale · A @ B (Eq. 7)."""
+    def m(w, a):
+        if a is None:
+            return w
+        return (w.astype(jnp.float32)
+                + scale * (a["A"].astype(jnp.float32)
+                           @ a["B"].astype(jnp.float32))).astype(w.dtype)
+
+    return jax.tree_util.tree_map(m, params, adapters,
+                                  is_leaf=lambda x: x is None or
+                                  (isinstance(x, dict) and "A" in x))
+
+
+def apply_inline(x: jax.Array, w: jax.Array, adapter: Dict,
+                 scale: float = 1.0) -> jax.Array:
+    """Dynamic mode: y = x@W + scale·(x@A)@B every call — costs
+    2·k·r·n extra ops exactly as LIFE charges for inline LoRA."""
+    y = x @ w
+    return y + scale * ((x @ adapter["A"]) @ adapter["B"]).astype(y.dtype)
+
+
+def merge_flops(k: int, n: int, rank: int) -> float:
+    """Analytical merge cost of one linear (cross-check vs LIFE)."""
+    return 2.0 * k * rank * n + k * n

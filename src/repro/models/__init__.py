@@ -1,0 +1,10 @@
+"""JAX model zoo: executable twins of the LIFE analytical models."""
+from .model import (param_defs, init_params, abstract_params, logical_axes,
+                    forward, step, init_decode_state, abstract_decode_state)
+from . import layers, attention, blocks, model
+
+__all__ = [
+    "param_defs", "init_params", "abstract_params", "logical_axes",
+    "forward", "step", "init_decode_state", "abstract_decode_state",
+    "layers", "attention", "blocks", "model",
+]

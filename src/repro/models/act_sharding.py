@@ -1,0 +1,71 @@
+"""Activation sharding constraints inside traced model code.
+
+XLA's sharding propagation loses shardings across ``lax.scan`` carries —
+without in-body constraints, blockwise-attention scores and decode KV reads
+replicate over the model axis (measured: 55 TB/chip/step on granite
+train_4k before this module existed — see EXPERIMENTS.md §Perf).
+
+``set_mesh(mesh, dp_axes, tp_axis)`` installs a process-global hint
+(set by the launcher/runtime before tracing); ``constrain(x, axes)`` then
+applies ``with_sharding_constraint`` resolving logical axes with
+divisibility fallbacks (same policy language as ``runtime.sharding``).
+When no hint is installed every call is a no-op — small CPU tests and the
+kernels' interpret paths never see a constraint.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_HINT = {"mesh": None, "dp": (), "tp": None}
+
+#: logical names that may claim the tensor-parallel axis, first-come
+_TP_PRIMARY = ("heads", "kv_heads", "group", "mlp", "inner", "vocab",
+               "experts")
+_TP_FALLBACK = ("seq", "kv_len")
+
+
+def set_mesh(mesh: Optional[Mesh], dp_axes: Sequence[str] = ("data",),
+             tp_axis: str = "model") -> None:
+    _HINT["mesh"] = mesh
+    _HINT["dp"] = tuple(a for a in dp_axes if mesh and a in mesh.shape)
+    _HINT["tp"] = tp_axis if (mesh and tp_axis in mesh.shape) else None
+
+
+def clear_mesh() -> None:
+    set_mesh(None)
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in _HINT["dp"]:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+    """Constrain ``x`` per logical ``axes`` under the installed mesh hint."""
+    mesh = _HINT["mesh"]
+    if mesh is None:
+        return x
+    assert len(axes) == len(x.shape), (axes, x.shape)
+    tp = _HINT["tp"]
+    tp_size = mesh.shape[tp] if tp else 1
+    spec: list = [None] * len(axes)
+    used_tp = False
+    for group in (_TP_PRIMARY, _TP_FALLBACK):
+        for i, name in enumerate(axes):
+            if spec[i] is not None or name is None:
+                continue
+            if name == "batch":
+                if _HINT["dp"] and x.shape[i] % _dp_size(mesh) == 0:
+                    spec[i] = _HINT["dp"]
+                continue
+            if (not used_tp and tp and name in group
+                    and x.shape[i] % tp_size == 0):
+                spec[i] = tp
+                used_tp = True
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,329 @@
+"""Attention mechanisms: MHA / GQA / MQA (grouped einsum, no KV repeat),
+MLA (compressed-latent cache, online decompression), local windows,
+pre-allocated KV caches for decode, optional Pallas flash kernel.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import ParamDef, dense, apply_rope, rmsnorm
+from .act_sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# parameter declarations
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg: ArchConfig) -> Dict:
+    d, H, Hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return {
+            "q_down": ParamDef((d, m.q_lora_rank), ("embed", "mla_rank")),
+            "q_norm": ParamDef((m.q_lora_rank,), ("mla_rank",), init="ones"),
+            "q_up": ParamDef((m.q_lora_rank, H, qk), ("mla_rank", "heads", "head_dim")),
+            "kv_down": ParamDef((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                                ("embed", "mla_rank")),
+            "kv_norm": ParamDef((m.kv_lora_rank,), ("mla_rank",), init="ones"),
+            "kv_up": ParamDef((m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim),
+                              ("mla_rank", "heads", "head_dim")),
+            "wo": ParamDef((H, m.v_head_dim, d), ("heads", "head_dim", "embed")),
+        }
+    defs = {
+        "wq": ParamDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, Hk, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, Hk, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H, hd), ("heads", "head_dim"), init="zeros")
+        defs["bk"] = ParamDef((Hk, hd), ("kv_heads", "head_dim"), init="zeros")
+        defs["bv"] = ParamDef((Hk, hd), ("kv_heads", "head_dim"), init="zeros")
+    return defs
+
+
+def cross_attention_defs(cfg: ArchConfig) -> Dict:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "wq": ParamDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wv": ParamDef((d, H, hd), ("embed", "heads", "head_dim")),
+        "wo": ParamDef((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def kv_cache_shape(cfg: ArchConfig, batch: int, max_len: int) -> Tuple:
+    """(k, v) buffer shapes for one attention layer."""
+    if cfg.mla is not None:
+        m = cfg.mla
+        return ((batch, max_len, m.kv_lora_rank),
+                (batch, max_len, m.qk_rope_head_dim))
+    return ((batch, max_len, cfg.n_kv_heads, cfg.head_dim),) * 2
+
+
+# ---------------------------------------------------------------------------
+# grouped-query core (shared by cached / uncached paths)
+# ---------------------------------------------------------------------------
+
+def _gqa_scores_softmax_out(q, k, v, mask, scale):
+    """q: (b,s,Hk,G,hd); k,v: (b,L,Hk,hd); mask: (1|b,1,1,s,L) bool."""
+    q = constrain(q, ("batch", None, "kv_heads", "group", None))
+    k = constrain(k, ("batch", "kv_len", "kv_heads", None))
+    v = constrain(v, ("batch", "kv_len", "kv_heads", None))
+    scores = jnp.einsum("bskgd,blkd->bkgsl", q, k) * scale
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgsl,blkd->bskgd", probs, v)
+    b, s = q.shape[0], q.shape[1]
+    return out.reshape(b, s, -1)
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: Optional[int],
+          valid_len=None):
+    """(…, s, L) boolean attention mask from query/key positions."""
+    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        m = m & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        m = m & (k_pos[None, :] > q_pos[:, None] - window)
+    if valid_len is not None:
+        m = m & (k_pos[None, :] < valid_len)
+    return m[None, None, None]    # (1,1,1,s,L)
+
+
+# ---------------------------------------------------------------------------
+# standard (GQA/MHA/MQA) attention
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg: ArchConfig, p: Dict, x: jax.Array, positions):
+    b, s, _ = x.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q.reshape(b, s, Hk, H // Hk, hd), k, v
+
+
+#: sequences at or above this length use blockwise (flash-style) attention
+#: in the XLA path — eager scores at 32k would need TB-scale buffers.
+BLOCKWISE_THRESHOLD = 4096
+BLOCK_Q = 1024
+BLOCK_K = 1024
+
+
+def self_attention(cfg: ArchConfig, p: Dict, x: jax.Array, *,
+                   causal: bool = True, window: Optional[int] = None,
+                   use_flash: bool = False) -> jax.Array:
+    """Self-attention over the current sequence (training / encoder)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    scale = cfg.head_dim ** -0.5
+    if use_flash:
+        from repro.kernels.flash_attention import ops as fa
+        H = cfg.n_heads
+        qf = q.reshape(b, s, H, cfg.head_dim)
+        out = fa.flash_attention(qf, k, v, causal=causal, window=window)
+        out = out.reshape(b, s, -1)
+    elif s >= BLOCKWISE_THRESHOLD:
+        out = blockwise_attention(q, k, v, scale, causal=causal,
+                                  window=window)
+    else:
+        mask = _mask(positions[0], positions[0], causal=causal, window=window)
+        out = _gqa_scores_softmax_out(q, k, v, mask, scale)
+    return jnp.einsum("bshd,hde->bse",
+                      out.reshape(b, s, cfg.n_heads, cfg.head_dim), p["wo"])
+
+
+def blockwise_attention(q, k, v, scale, *, causal: bool = True,
+                        window: Optional[int] = None, q_offset=0,
+                        block_q: int = BLOCK_Q,
+                        block_k: int = BLOCK_K) -> jax.Array:
+    """Flash-style online-softmax attention in pure XLA (scan over blocks).
+
+    The memory-feasible long-context path everywhere; on TPU the Pallas
+    kernel (repro.kernels.flash_attention) implements the same schedule
+    with explicit VMEM tiling.  q: (b,s,Hk,G,d); k,v: (b,L,Hk,d).
+    Scores exist only at (block_q × block_k) granularity.
+    """
+    b, s, Hk, G, d = q.shape
+    L = k.shape[1]
+    block_q = min(block_q, s)
+    block_k = min(block_k, L)
+    assert s % block_q == 0 and L % block_k == 0, (s, L, block_q, block_k)
+    nq, nk = s // block_q, L // block_k
+    # constrain the block stacks BEFORE the scan so every per-block slice
+    # already carries the in-loop sharding — otherwise SPMD re-shards each
+    # slice per iteration ("involuntary full rematerialization", §Perf B1)
+    qb = jnp.moveaxis(q.reshape(b, nq, block_q, Hk, G, d), 1, 0)
+    qb = constrain(qb, (None, "batch", "seq", "kv_heads", "group", None))
+    kb = jnp.moveaxis(k.reshape(b, nk, block_k, Hk, d), 1, 0)
+    kb = constrain(kb, (None, "batch", None, "kv_heads", None))
+    vb = jnp.moveaxis(v.reshape(b, nk, block_k, Hk, d), 1, 0)
+    vb = constrain(vb, (None, "batch", None, "kv_heads", None))
+
+    def q_block(carry, qi_inputs):
+        qi, q_i = qi_inputs            # q_i: (b, block_q, Hk, G, d)
+        q_i = constrain(q_i, ("batch", "seq", "kv_heads", "group", None))
+
+        def kv_block(inner, ki_inputs):
+            ki, k_j, v_j = ki_inputs
+            acc, m, l = inner
+            k_j = constrain(k_j, ("batch", None, "kv_heads", None))
+            v_j = constrain(v_j, ("batch", None, "kv_heads", None))
+            srs = jnp.einsum("bskgd,blkd->bkgsl", q_i.astype(jnp.float32),
+                             k_j.astype(jnp.float32)) * scale
+            q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+            k_pos = ki * block_k + jnp.arange(block_k)
+            msk = jnp.ones((block_q, block_k), bool)
+            if causal:
+                msk &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                msk &= k_pos[None, :] > q_pos[:, None] - window
+            srs = jnp.where(msk[None, None, None], srs, -1e30)
+            m_new = jnp.maximum(m, srs.max(-1, keepdims=True))
+            alpha = jnp.exp(m - m_new)
+            pr = jnp.exp(srs - m_new)
+            pr = jnp.where(msk[None, None, None], pr, 0.0)
+            l_new = l * alpha + pr.sum(-1, keepdims=True)
+            acc = acc * alpha[..., 0][..., None] + jnp.einsum(
+                "bkgsl,blkd->bkgsd", pr, v_j.astype(jnp.float32))
+            return (acc, m_new, l_new), None
+
+        acc0 = constrain(jnp.zeros((b, Hk, G, block_q, d), jnp.float32),
+                         ("batch", "kv_heads", "group", "seq", None))
+        m0 = jnp.full((b, Hk, G, block_q, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, Hk, G, block_q, 1), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_block, (acc0, m0, l0),
+            (jnp.arange(nk), kb, vb))
+        out_i = acc / jnp.maximum(l[..., 0][..., None], 1e-30)
+        # (b, Hk, G, block_q, d) -> (b, block_q, Hk*G*d)
+        out_i = jnp.moveaxis(out_i, 3, 1).reshape(b, block_q, Hk * G * d)
+        return carry, out_i.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None, (jnp.arange(nq), qb))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, Hk * G * d)
+
+
+def cached_attention(cfg: ArchConfig, p: Dict, x: jax.Array,
+                     cache_k: jax.Array, cache_v: jax.Array, pos: jax.Array,
+                     *, window: Optional[int] = None
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill (pos=0, s=prompt) or decode (s=1) against a static cache.
+
+    Returns (output, new_cache_k, new_cache_v).  ``pos`` is the number of
+    tokens already cached (traced scalar).
+    """
+    b, s, _ = x.shape
+    L = cache_k.shape[1]
+    positions = pos + jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k_new.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v_new.astype(cache_v.dtype), (0, pos, 0, 0))
+    scale = cfg.head_dim ** -0.5
+    if s >= BLOCKWISE_THRESHOLD:
+        # long-prompt prefill: flash-style blockwise over the updated cache
+        out = blockwise_attention(q, cache_k.astype(x.dtype),
+                                  cache_v.astype(x.dtype), scale,
+                                  causal=True, window=window, q_offset=pos)
+    else:
+        k_pos = jnp.arange(L, dtype=jnp.int32)
+        mask = _mask(positions[0], k_pos, causal=True, window=window)
+        out = _gqa_scores_softmax_out(
+            q, cache_k.astype(x.dtype), cache_v.astype(x.dtype), mask, scale)
+    y = jnp.einsum("bshd,hde->bse",
+                   out.reshape(b, s, cfg.n_heads, cfg.head_dim), p["wo"])
+    return y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA
+# ---------------------------------------------------------------------------
+
+def _mla_qkv(cfg: ArchConfig, p: Dict, x: jax.Array, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    cq = rmsnorm(dense(x, p["q_down"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["q_up"])
+    q_nope, q_pe = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    ckv = dense(x, p["kv_down"])
+    c_latent, k_pe = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    c_latent = rmsnorm(c_latent, p["kv_norm"])
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_pe, c_latent, k_pe
+
+
+def _mla_core(cfg, p, q_nope, q_pe, c_latent, k_pe, mask):
+    """Decompress latent online and attend (paper §5.4 'online' MLA)."""
+    m = cfg.mla
+    kv = jnp.einsum("blr,rhk->blhk", c_latent, p["kv_up"])
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bshk,blhk->bhsl", q_nope, k_nope)
+              + jnp.einsum("bshk,blk->bhsl", q_pe, k_pe)) * scale
+    scores = jnp.where(mask[:, :, 0], scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q_nope.dtype)
+    out = jnp.einsum("bhsl,blhk->bshk", probs, v)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_self_attention(cfg: ArchConfig, p: Dict, x: jax.Array, *,
+                       causal: bool = True) -> jax.Array:
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q_nope, q_pe, c_latent, k_pe = _mla_qkv(cfg, p, x, positions)
+    mask = _mask(positions[0], positions[0], causal=causal, window=None)
+    return _mla_core(cfg, p, q_nope, q_pe, c_latent, k_pe, mask)
+
+
+def mla_cached_attention(cfg: ArchConfig, p: Dict, x: jax.Array,
+                         cache_latent: jax.Array, cache_kpe: jax.Array,
+                         pos: jax.Array):
+    b, s, _ = x.shape
+    L = cache_latent.shape[1]
+    positions = pos + jnp.arange(s, dtype=jnp.int32)[None, :]
+    q_nope, q_pe, c_latent, k_pe = _mla_qkv(cfg, p, x, positions)
+    cache_latent = jax.lax.dynamic_update_slice(
+        cache_latent, c_latent.astype(cache_latent.dtype), (0, pos, 0))
+    cache_kpe = jax.lax.dynamic_update_slice(
+        cache_kpe, k_pe.astype(cache_kpe.dtype), (0, pos, 0))
+    mask = _mask(positions[0], jnp.arange(L, dtype=jnp.int32),
+                 causal=True, window=None)
+    y = _mla_core(cfg, p, q_nope, q_pe, cache_latent.astype(x.dtype),
+                  cache_kpe.astype(x.dtype), mask)
+    return y, cache_latent, cache_kpe
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attention(cfg: ArchConfig, p: Dict, x: jax.Array,
+                    enc_k: jax.Array, enc_v: jax.Array) -> jax.Array:
+    """Decoder queries against precomputed encoder K/V (b, F, H, hd)."""
+    b, s, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    scores = jnp.einsum("bshk,bfhk->bhsf", q, enc_k) * hd ** -0.5
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhsf,bfhk->bshk", probs, enc_v)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def encode_cross_kv(cfg: ArchConfig, p: Dict, enc_out: jax.Array):
+    k = jnp.einsum("bfd,dhk->bfhk", enc_out, p["wk"])
+    v = jnp.einsum("bfd,dhk->bfhk", enc_out, p["wv"])
+    return k, v

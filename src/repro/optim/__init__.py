@@ -1,0 +1,3 @@
+from .adamw import AdamW, AdamWState, global_norm, compress_int8
+
+__all__ = ["AdamW", "AdamWState", "global_norm", "compress_int8"]

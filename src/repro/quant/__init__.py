@@ -1,0 +1,5 @@
+from .weights import (QuantizedTensor, quantize_weight, dequantize_weight,
+                      quant_dense, quantize_tree, tree_storage_bytes)
+
+__all__ = ["QuantizedTensor", "quantize_weight", "dequantize_weight",
+           "quant_dense", "quantize_tree", "tree_storage_bytes"]

@@ -1,0 +1,10 @@
+from . import sharding, train, serve
+from .sharding import ShardingPolicy, param_shardings, policy_for
+from .train import make_train_step, make_loss_fn, Trainer, TrainerConfig
+from .serve import make_serve_fns, Server, ServeConfig
+
+__all__ = [
+    "sharding", "train", "serve", "ShardingPolicy", "param_shardings",
+    "policy_for", "make_train_step", "make_loss_fn", "Trainer",
+    "TrainerConfig", "make_serve_fns", "Server", "ServeConfig",
+]

@@ -1,0 +1,55 @@
+"""Launch-path CI coverage: one real dry-run cell end-to-end in a
+subprocess (the 512-placeholder-device environment must not leak into the
+main test process — device count locks at jax init)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "granite-3-2b", "--shape", "decode_32k",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=560, env=env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    art = tmp_path / "pod16x16" / "granite-3-2b__decode_32k.json"
+    assert art.exists()
+    d = json.loads(art.read_text())
+    assert d["status"] == "OK"
+    r_ = d["roofline"]
+    # decode must be memory-bound (paper Eq. 4/5) and both sources agree
+    assert r_["dominant"] == "memory"
+    assert d["life_forecast"]["dominant"] == "memory"
+    assert d["per_chip"]["flops"] > 0
+    assert d["per_chip"]["collective_wire_bytes"] > 0
+    assert d["per_chip"]["unknown_trip_loops"] == 0
+    assert d["memory_analysis"]["temp_size_in_bytes"] > 0
+
+
+def test_input_specs_cover_every_cell():
+    """input_specs() returns shardable stand-ins for all 40 cells."""
+    from repro import configs
+    from repro.launch.specs import input_specs, cell_is_skipped
+    import jax
+    n = 0
+    for arch in configs.ASSIGNED:
+        for shape in configs.SHAPES:
+            specs = input_specs(arch, shape)
+            assert specs, (arch, shape)
+            for v in specs.values():
+                assert isinstance(v, jax.ShapeDtypeStruct)
+            n += 1
+    assert n == 40
+    # skip policy: exactly the 8 full-attention archs for long_500k
+    skipped = [a for a in configs.ASSIGNED
+               if cell_is_skipped(a, "long_500k")]
+    assert len(skipped) == 8
+    assert "falcon-mamba-7b" not in skipped
+    assert "recurrentgemma-2b" not in skipped

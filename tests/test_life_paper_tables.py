@@ -1,0 +1,169 @@
+"""Reproduction of the paper's own (hardware-independent) tables.
+
+These are the faithfulness gates: LIFE's analytical numbers must match the
+published values.  Tolerances reflect the paper's rounding and the
+sub-operator accounting choices documented in DESIGN.md §8.
+"""
+import pytest
+
+from repro.core import WorkloadModel, Forecaster, hardware
+from repro.configs import get, PAPER_VARIANTS
+
+
+@pytest.fixture(scope="module")
+def llama2():
+    return get("llama2-7b")
+
+
+# ---- Table 4: prefill TOPs + KV vs prompt length --------------------------
+TABLE4 = {  # prompt -> (TOPs, gemm %, bmm %, KV GB)
+    256: (3.42, 99.0, 1.0, 0.1),
+    1024: (14.09, 96.0, 3.9, 0.5),
+    2048: (29.29, 92.4, 7.5, 1.0),
+    4096: (63.04, 85.9, 14.0, 2.0),
+    8192: (143.87, 75.2, 24.5, 4.0),
+    32768: (1002.67, 43.2, 56.0, 16.0),
+}
+
+
+@pytest.mark.parametrize("prompt", sorted(TABLE4))
+def test_table4_prefill_tops(llama2, prompt):
+    wm = WorkloadModel(llama2, PAPER_VARIANTS["bf16-bf16"])
+    db = wm.prefill(1, prompt)
+    t = db.totals("prefill")
+    by = db.by_op_class("prefill")
+    tops, gemm_pct, bmm_pct, kv_gb = TABLE4[prompt]
+    assert t.ops / 1e12 == pytest.approx(tops, rel=0.01)
+    assert by["gemm"].ops / t.ops * 100 == pytest.approx(gemm_pct, abs=0.6)
+    assert by["bmm"].ops / t.ops * 100 == pytest.approx(bmm_pct, abs=0.6)
+    # paper reports KV in GiB-ish units at 2 bytes/el: exact at 2048 -> 1.0
+    assert t.kv_wr / (2 * 32 * 2 * prompt * 4096) == pytest.approx(1.0, rel=0.01)
+
+
+# ---- Table 7: decode GOPs -------------------------------------------------
+TABLE7_GOPS = {  # (variant, prompt) -> GOPs
+    ("bf16-bf16", 32): 13.34, ("bf16-bf16", 2048): 14.41,
+    ("bf16-int4", 32): 26.55, ("bf16-int4", 2048): 27.62,
+    ("bf16-int4-kv4", 32): 26.61, ("bf16-int4-kv4", 2048): 28.21,
+}
+
+
+@pytest.mark.parametrize("variant,prompt", sorted(TABLE7_GOPS))
+def test_table7_decode_gops(llama2, variant, prompt):
+    wm = WorkloadModel(llama2, PAPER_VARIANTS[variant])
+    t = wm.decode_step(1, prompt).totals("decode")
+    assert t.ops / 1e9 == pytest.approx(TABLE7_GOPS[(variant, prompt)],
+                                        rel=0.02)
+
+
+def test_table7_decode_memory_bf16(llama2):
+    # paper: 12.85 GB at prompt 32 (weight-read dominated); our accounting
+    # keeps the LM head read -> 13.2-13.3 GB (DESIGN.md §8 documents the
+    # delta); int4 variant: paper 3.74 GB, ours ~3.4-3.6
+    wm = WorkloadModel(llama2, PAPER_VARIANTS["bf16-bf16"])
+    t = wm.decode_step(1, 32).totals("decode")
+    assert t.mem_rd / 1e9 == pytest.approx(12.85, rel=0.05)
+    wm4 = WorkloadModel(llama2, PAPER_VARIANTS["bf16-int4"])
+    t4 = wm4.decode_step(1, 32).totals("decode")
+    assert t4.mem_rd / 1e9 == pytest.approx(3.74, rel=0.10)
+
+
+# ---- Table 8: dispatch calls ----------------------------------------------
+def test_table8_dispatch_calls_exact(llama2):
+    wm = WorkloadModel(llama2, PAPER_VARIANTS["bf16-int4"])
+    db = wm.decode_step(1, 128)
+    assert db.totals("decode").dispatches == 611   # paper's exact count
+
+
+def test_fusion_reduces_dispatches(llama2):
+    eager = WorkloadModel(llama2, PAPER_VARIANTS["bf16-int4"])
+    fused = WorkloadModel(llama2, PAPER_VARIANTS["bf16-int4-fused"])
+    assert fused.decode_step(1, 128).totals("decode").dispatches < \
+        eager.decode_step(1, 128).totals("decode").dispatches
+
+
+# ---- Table 6: TTFT forecasts ----------------------------------------------
+TABLE6_CPU = {32: 1.30, 64: 2.61, 128: 5.21, 256: 10.48, 512: 21.17,
+              1024: 43.17, 2048: 89.74}
+
+
+@pytest.mark.parametrize("prompt", sorted(TABLE6_CPU))
+def test_table6_cpu_ttft(llama2, prompt):
+    wm = WorkloadModel(llama2, PAPER_VARIANTS["bf16-bf16"])
+    fc = Forecaster(hardware.RYZEN_9_HX370_CPU)
+    f = fc.phase(wm.prefill(1, prompt).totals("prefill"),
+                 include_dispatch=False)
+    assert f.latency == pytest.approx(TABLE6_CPU[prompt], rel=0.02)
+    assert f.bound == "compute"
+
+
+TABLE6_V100 = {512: 0.06, 1024: 0.11, 2048: 0.23}
+
+
+@pytest.mark.parametrize("prompt", sorted(TABLE6_V100))
+def test_table6_v100_ttft(llama2, prompt):
+    wm = WorkloadModel(llama2, PAPER_VARIANTS["fp16-fp16"])
+    fc = Forecaster(hardware.NVIDIA_V100)
+    f = fc.phase(wm.prefill(1, prompt).totals("prefill"),
+                 include_dispatch=False)
+    assert f.latency == pytest.approx(TABLE6_V100[prompt], abs=0.01)
+
+
+# ---- Table 10: decode TPS forecasts ----------------------------------------
+def test_table10_cpu_tps_at_10pct(llama2):
+    wm = WorkloadModel(llama2, PAPER_VARIANTS["bf16-bf16"])
+    fc = Forecaster(hardware.RYZEN_9_HX370_CPU)
+    tps = fc.tps(wm.decode_step(1, 32), em=0.10)
+    assert tps == pytest.approx(1.87, rel=0.05)     # paper forecast row
+
+
+def test_table10_v100_tps_at_50pct(llama2):
+    wm = WorkloadModel(llama2, PAPER_VARIANTS["fp16-fp16"])
+    fc = Forecaster(hardware.NVIDIA_V100)
+    tps = fc.tps(wm.decode_step(1, 512), em=0.50)
+    assert tps == pytest.approx(32.6, rel=0.10)
+
+
+# ---- Table 9: decode memory growth ratios ----------------------------------
+def test_table9_memory_growth_ratios(llama2):
+    # Mem(last token)/Mem(1st token) for prompt 128 + 2000 new tokens:
+    # bf16 ~1.15x, int4 ~1.53x, int4-kv4 ~1.10x (paper Table 9).
+    # The paper's growth is ~2x ours in absolute bytes (it appears to charge
+    # the full K+V span per BMM; we split K for QK^T and V for PV — see
+    # EXPERIMENTS.md §Fidelity), so we assert the ratios within 20% and the
+    # paper's qualitative ordering exactly.
+    ratios = {}
+    for variant, want in (("bf16-bf16", 1.15), ("bf16-int4", 1.53),
+                          ("bf16-int4-kv4", 1.10)):
+        wm = WorkloadModel(llama2, PAPER_VARIANTS[variant])
+        first = wm.decode_step(1, 128).totals("decode").mem_rd
+        last = wm.decode_step(1, 128 + 2000).totals("decode").mem_rd
+        ratios[variant] = last / first
+        assert last / first == pytest.approx(want, rel=0.20), variant
+    # int4 grows fastest (smallest base), kv4 compression caps the growth
+    assert ratios["bf16-int4"] > ratios["bf16-bf16"]
+    assert ratios["bf16-int4-kv4"] < ratios["bf16-int4"]
+
+
+# ---- Table 12: LoRA merge compute ------------------------------------------
+def test_table12_lora_update_tops(llama2):
+    wm = WorkloadModel(llama2, PAPER_VARIANTS["bf16-int4-lora"])
+    for rank, want in ((16, 220.2), (32, 427.4), (64, 841.9), (128, 1670.8)):
+        t = wm.lora_update(rank=rank).totals("lora_update")
+        assert t.ops / 1e9 == pytest.approx(want, rel=0.05), rank
+
+
+# ---- §5.2: chunked prefill -------------------------------------------------
+def test_chunked_prefill_compute_unchanged_memory_up(llama2):
+    wm = WorkloadModel(llama2, PAPER_VARIANTS["bf16-bf16"])
+    base = wm.prefill(1, 4096).totals("prefill")
+    chunked = wm.chunked_prefill(1, 4096, 512).totals("prefill")
+    # compute load changes minimally (paper: "compute load change minimally");
+    # chunking actually computes the causal triangle of the attention BMMs
+    # (each chunk attends only to its prefix), so ops drop slightly (~6%)
+    assert chunked.ops == pytest.approx(base.ops, rel=0.10)
+    assert chunked.ops <= base.ops
+    # memory pressure increases (smaller chunks re-read weights + KV)
+    assert chunked.mem_total > base.mem_total
+    # dispatch calls increase with chunking (paper: 64x for smallest size)
+    assert chunked.dispatches > base.dispatches

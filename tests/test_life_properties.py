@@ -1,0 +1,189 @@
+"""Property-based tests (hypothesis) on LIFE's analytical invariants."""
+import hypothesis
+from hypothesis import given, settings, strategies as st
+import pytest
+
+from repro.core import (WorkloadModel, Forecaster, StatsDB, hardware,
+                        bmm_tile_efficiency, bmm_asymptotic_efficiency,
+                        extrapolate_efficiency)
+from repro.core import operators as F
+from repro.configs import get, PAPER_VARIANTS
+from repro.configs.base import Variant
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+prompts = st.integers(min_value=1, max_value=4096)
+dims = st.sampled_from([128, 256, 512, 1024, 4096])
+
+
+# ---------------------------------------------------------------------------
+# foundational operator invariants
+# ---------------------------------------------------------------------------
+
+@SETTINGS
+@given(m=dims, k=dims, n=dims)
+def test_linear_matches_appendix_formula(m, k, n):
+    db = StatsDB()
+    F.linear(db, m, k, n, dtype_act="bf16", dtype_w="bf16")
+    rec = db.records[0]
+    assert rec.ops == 2 * m * k * n - m * n          # appendix 8.1
+    assert rec.mem_rd == (m * k + k * n) * 2
+    assert rec.mem_wr == m * n * 2
+
+
+@SETTINGS
+@given(m=dims, k=dims, n=dims)
+def test_quantized_linear_overheads(m, k, n):
+    db_bf, db_q = StatsDB(), StatsDB()
+    F.linear(db_bf, m, k, n, dtype_w="bf16")
+    F.linear(db_q, m, k, n, dtype_w="int4", group_size=128)
+    bf, q = db_bf.records[0], db_q.records[0]
+    assert q.ops == bf.ops + 2 * k * n               # dequant ops
+    assert q.mem_rd < bf.mem_rd                      # weights shrink 4x
+    # scale+zero metadata present: more than pure 0.25x of weight bytes
+    assert q.mem_rd - m * k * 2 > (k * n) * 0.5
+
+
+@SETTINGS
+@given(m=dims, k=dims, n=dims, r=st.sampled_from([8, 16, 64, 128]))
+def test_lora_inline_strictly_more_expensive(m, k, n, r):
+    db0, db1 = StatsDB(), StatsDB()
+    F.linear(db0, m, k, n)
+    F.linear(db1, m, k, n, lora_rank=r)
+    assert db1.records[0].ops > db0.records[0].ops
+    assert db1.records[0].mem_rd > db0.records[0].mem_rd
+
+
+# ---------------------------------------------------------------------------
+# workload invariants
+# ---------------------------------------------------------------------------
+
+@SETTINGS
+@given(prompt=prompts)
+def test_fusion_reduces_memory_not_gemm_compute(prompt):
+    arch = get("llama2-7b")
+    eager = WorkloadModel(arch, Variant(name="e", fused=False))
+    fused = WorkloadModel(arch, Variant(name="f", fused=True))
+    te = eager.prefill(1, prompt).totals("prefill")
+    tf = fused.prefill(1, prompt).totals("prefill")
+    assert tf.mem_total < te.mem_total
+    assert tf.dispatches < te.dispatches
+    # matmul compute unchanged by fusion (paper §2.2)
+    ge = eager.prefill(1, prompt).by_op_class("prefill")
+    gf = fused.prefill(1, prompt).by_op_class("prefill")
+    assert gf["gemm"].ops == pytest.approx(ge["gemm"].ops)
+    assert gf["bmm"].ops == pytest.approx(ge["bmm"].ops)
+
+
+@SETTINGS
+@given(prompt=st.integers(min_value=2, max_value=8192))
+def test_workload_monotonic_in_prompt(prompt):
+    wm = WorkloadModel(get("llama2-7b"), PAPER_VARIANTS["bf16-bf16"])
+    a = wm.prefill(1, prompt).totals("prefill")
+    b = wm.prefill(1, prompt + 64).totals("prefill")
+    assert b.ops > a.ops
+    assert b.mem_total > a.mem_total
+    assert b.kv_wr > a.kv_wr
+
+
+@SETTINGS
+@given(past=st.integers(min_value=1, max_value=16384))
+def test_decode_memory_grows_with_kv(past):
+    wm = WorkloadModel(get("llama2-7b"), PAPER_VARIANTS["bf16-bf16"])
+    a = wm.decode_step(1, past).totals("decode")
+    b = wm.decode_step(1, past + 256).totals("decode")
+    assert b.kv_rd > a.kv_rd
+    assert b.mem_total > a.mem_total
+    assert b.ops > a.ops          # BMM grows with kv_len
+
+
+def test_kv_quantization_ordering():
+    arch = get("llama2-7b")
+    mems = {}
+    for kv in ("bf16", "int8", "int4"):
+        wm = WorkloadModel(arch, Variant(name=kv, kv_dtype=kv, fused=True))
+        mems[kv] = wm.decode_step(1, 8192).totals("decode").kv_rd
+    assert mems["int4"] < mems["int8"] < mems["bf16"]
+    assert mems["bf16"] / mems["int4"] == pytest.approx(4.0, rel=0.15)
+
+
+def test_attention_mechanism_memory_ordering():
+    """Paper Table 11: MQA < GQA < MHA decode memory; MLA between."""
+    import dataclasses
+    base = get("llama2-7b")
+    mems = {}
+    for name, kv_heads in (("mha", 32), ("gqa", 8), ("mqa", 1)):
+        arch = dataclasses.replace(base, n_kv_heads=kv_heads, name=name)
+        wm = WorkloadModel(arch, Variant(fused=True))
+        mems[name] = wm.decode_step(1, 8192).totals("decode").kv_rd
+    mla = WorkloadModel(base, Variant(fused=True, use_mla=True))
+    mems["mla"] = mla.decode_step(1, 8192).totals("decode").kv_rd
+    assert mems["mqa"] < mems["gqa"] < mems["mha"]
+    assert mems["mla"] < mems["mha"]        # latent cache beats full MHA
+
+
+@SETTINGS
+@given(prompt=st.sampled_from([512, 1024, 2048, 4096]),
+       chunk=st.sampled_from([64, 128, 256, 512]))
+def test_chunked_prefill_kv_identical(prompt, chunk):
+    wm = WorkloadModel(get("llama2-7b"), PAPER_VARIANTS["bf16-bf16"])
+    base = wm.prefill(1, prompt).totals("prefill")
+    ch = wm.chunked_prefill(1, prompt, chunk).totals("prefill")
+    assert ch.kv_wr == pytest.approx(base.kv_wr)    # same cache written
+
+
+# ---------------------------------------------------------------------------
+# forecaster invariants
+# ---------------------------------------------------------------------------
+
+@SETTINGS
+@given(ec=st.floats(0.05, 1.0), em=st.floats(0.05, 1.0), prompt=prompts)
+def test_ttft_is_max_of_terms(ec, em, prompt):
+    wm = WorkloadModel(get("llama2-7b"), PAPER_VARIANTS["bf16-bf16"])
+    fc = Forecaster(hardware.TPU_V5E)
+    f = fc.phase(wm.prefill(1, prompt).totals("prefill"), ec=ec, em=em)
+    assert f.latency == pytest.approx(max(f.t_compute, f.t_memory)
+                                      + f.t_dispatch)
+    # efficiency degradation is inverse-linear per term
+    f2 = fc.phase(wm.prefill(1, prompt).totals("prefill"), ec=ec / 2, em=em)
+    assert f2.t_compute == pytest.approx(2 * f.t_compute)
+
+
+@SETTINGS
+@given(em=st.floats(0.05, 1.0))
+def test_tps_inverse_of_tpot(em):
+    wm = WorkloadModel(get("llama2-7b"), PAPER_VARIANTS["bf16-bf16"])
+    fc = Forecaster(hardware.TPU_V5E)
+    db = wm.decode_step(1, 1024)
+    assert fc.tps(db, em=em) == pytest.approx(1.0 / fc.tpot(db, em=em))
+
+
+# ---------------------------------------------------------------------------
+# BMM tile-efficiency sawtooth (Fig. 8)
+# ---------------------------------------------------------------------------
+
+@SETTINGS
+@given(seq=st.integers(1, 100000), tile=st.sampled_from([16, 64, 128, 256]))
+def test_tile_efficiency_bounds(seq, tile):
+    e = bmm_tile_efficiency(seq, tile)
+    assert 0 < e <= 1.0
+    assert bmm_tile_efficiency(seq * tile // max(seq % tile, 1) if False
+                               else tile * 7, tile) == 1.0  # exact multiple
+
+
+@SETTINGS
+@given(tile=st.sampled_from([64, 128, 256]))
+def test_tile_efficiency_asymptote(tile):
+    # average efficiency approaches 1 as KV grows (paper §5.4.1 asymptote)
+    early = bmm_asymptotic_efficiency(64, 256, tile)
+    late = bmm_asymptotic_efficiency(65536, 256, tile)
+    assert late > early
+    assert late > 0.99
+
+
+def test_extrapolate_efficiency_clamps_and_interpolates():
+    pts = [(64, 0.2), (1024, 0.6), (16384, 0.9)]
+    assert extrapolate_efficiency(pts, 10) == 0.2
+    assert extrapolate_efficiency(pts, 1e9) == 0.9
+    mid = extrapolate_efficiency(pts, 4096)
+    assert 0.6 < mid < 0.9

@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests (assignment requirement): reduced
+same-family config, one forward + one train step on CPU, shape + finite
+checks; plus decode-path equivalence with the uncached forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import (init_params, forward, step, init_decode_state,
+                          abstract_params, logical_axes)
+from repro.runtime.train import make_loss_fn
+from repro.optim import AdamW
+
+
+def _inputs(cfg, b, s, rng):
+    extra = {}
+    n_text = s
+    if cfg.family == "vlm":
+        n_text = s - cfg.vision_prefix_len
+        extra["vision_embeds"] = jax.random.normal(
+            rng, (b, cfg.vision_prefix_len, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        extra["frames"] = jax.random.normal(
+            rng, (b, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+    ids = jax.random.randint(rng, (b, n_text), 0, cfg.vocab_size, jnp.int32)
+    return ids, extra
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED + ["llama2-7b",
+                                                     "llama2-7b-mla"])
+def test_smoke_forward_and_train_step(arch):
+    cfg = configs.reduced(configs.get(arch))
+    rng = jax.random.PRNGKey(0)
+    params = init_params(cfg, rng)
+    b, s = 2, 16
+    ids, extra = _inputs(cfg, b, s, rng)
+
+    logits, aux = forward(cfg, params, ids, **extra)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+    assert bool(jnp.isfinite(aux))
+
+    # one optimizer step moves the loss
+    loss_fn = make_loss_fn(cfg, remat=False)
+    n_text = ids.shape[1]
+    batch = {"inputs": ids,
+             "targets": jnp.roll(ids, -1, axis=1),
+             "mask": jnp.ones((b, n_text), jnp.float32), **extra}
+    opt = AdamW(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt_state = opt.init(params)
+    (l0, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+    assert bool(jnp.isfinite(l0))
+    gnorm_leaves = [jnp.abs(g).max() for g in jax.tree_util.tree_leaves(grads)]
+    assert all(bool(jnp.isfinite(g)) for g in gnorm_leaves), arch
+    params2, _, gn = opt.update(grads, opt_state, params)
+    (l1, _), _ = jax.value_and_grad(loss_fn, has_aux=True)(params2, batch)
+    assert bool(jnp.isfinite(l1))
+    assert float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED)
+def test_smoke_param_tree_consistency(arch):
+    cfg = configs.reduced(configs.get(arch))
+    ab = abstract_params(cfg)
+    ax = logical_axes(cfg)
+    flat_ab = jax.tree_util.tree_leaves(ab)
+    flat_ax = jax.tree_util.tree_leaves(
+        ax, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_ab) == len(flat_ax)
+    for sds, axes in zip(flat_ab, flat_ax):
+        assert len(sds.shape) == len(axes)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "qwen2-moe-a2.7b",
+                                  "falcon-mamba-7b", "recurrentgemma-2b",
+                                  "whisper-base", "internvl2-26b",
+                                  "llama2-7b-mla"])
+def test_decode_matches_forward(arch):
+    """Cached prefill+decode logits ≈ uncached forward logits (same math)."""
+    cfg = configs.reduced(configs.get(arch))
+    rng = jax.random.PRNGKey(1)
+    params = init_params(cfg, rng)
+    b, s = 2, 12
+    ids, extra = _inputs(cfg, b, s, rng)
+
+    logits_fwd, _ = forward(cfg, params, ids, **extra)
+    state = init_decode_state(cfg, b, max_len=32)
+    logits_pre, state = step(cfg, params, ids, state, **extra)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre, np.float32),
+        np.asarray(logits_fwd[:, -1], np.float32), atol=5e-2, rtol=5e-2)
+
+    # incremental: prefill k tokens then decode the rest one-by-one
+    k = ids.shape[1] - 3
+    state2 = init_decode_state(cfg, b, max_len=32)
+    _, state2 = step(cfg, params, ids[:, :k], state2, **extra)
+    lg = None
+    for i in range(k, ids.shape[1]):
+        lg, state2 = step(cfg, params, ids[:, i:i + 1], state2)
+    np.testing.assert_allclose(
+        np.asarray(lg, np.float32),
+        np.asarray(logits_fwd[:, -1], np.float32), atol=5e-2, rtol=5e-2)
+
+
+def test_blockwise_attention_matches_eager():
+    from repro.models import attention as A
+    rng = np.random.default_rng(3)
+    b, s, Hk, G, d = 2, 256, 2, 2, 32
+    q = jnp.asarray(rng.standard_normal((b, s, Hk, G, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, Hk, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, Hk, d)), jnp.float32)
+    pos = jnp.arange(s)
+    mask = A._mask(pos, pos, causal=True, window=None)
+    eager = A._gqa_scores_softmax_out(q, k, v, mask, d ** -0.5)
+    block = A.blockwise_attention(q, k, v, d ** -0.5, causal=True,
+                                  block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(block), np.asarray(eager),
+                               atol=2e-5)
+    # windowed variant
+    mask_w = A._mask(pos, pos, causal=True, window=64)
+    eager_w = A._gqa_scores_softmax_out(q, k, v, mask_w, d ** -0.5)
+    block_w = A.blockwise_attention(q, k, v, d ** -0.5, causal=True,
+                                    window=64, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(block_w), np.asarray(eager_w),
+                               atol=2e-5)
+
+
+def test_ssm_chunked_matches_unchunked():
+    from repro.models import blocks as B
+    cfg = configs.reduced(configs.get("falcon-mamba-7b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    p = jax.tree_util.tree_map(lambda x: x[0], params["layers"])["ssm"]
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, cfg.d_model),
+                          jnp.float32)
+    full = B._mamba_seq(cfg, p, x,
+                        jnp.zeros((2, cfg.ssm_conv_kernel - 1,
+                                   cfg.ssm_expand * cfg.d_model), x.dtype),
+                        jnp.zeros((2, cfg.ssm_expand * cfg.d_model,
+                                   cfg.ssm_d_state), jnp.float32))[0]
+    old = B.SSM_CHUNK
+    try:
+        B.SSM_CHUNK = 16
+        chunked = B.mamba_forward(cfg, p, x)
+    finally:
+        B.SSM_CHUNK = old
+    np.testing.assert_allclose(np.asarray(chunked, np.float32),
+                               np.asarray(full, np.float32),
+                               atol=3e-3, rtol=3e-2)

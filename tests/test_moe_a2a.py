@@ -1,0 +1,69 @@
+"""MoE shard_map a2a path (§Perf A4): fallback behaviour in-suite; full
+8-device numerical equivalence via subprocess (device count is locked at
+jax init, so the multi-device check needs a fresh interpreter)."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import blocks as B, act_sharding, init_params
+
+
+def test_a2a_falls_back_without_mesh():
+    """On 1 device / no hint, the a2a mode must equal the local path."""
+    act_sharding.clear_mesh()
+    cfg = configs.reduced(configs.get("qwen2-moe-a2.7b"), n_layers=1)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    p = jax.tree_util.tree_map(lambda v: v[0], params["layers"])["mlp"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    old = B.MOE_DISPATCH
+    try:
+        B.MOE_DISPATCH = "local"
+        y_l, _ = B.moe_forward(cfg, p, x)
+        B.MOE_DISPATCH = "a2a"
+        y_a, _ = B.moe_forward(cfg, p, x)
+    finally:
+        B.MOE_DISPATCH = old
+    np.testing.assert_allclose(np.asarray(y_a), np.asarray(y_l), atol=1e-6)
+
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro import configs
+from repro.models import blocks as B, act_sharding, init_params
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = configs.reduced(configs.get("qwen2-moe-a2.7b"), n_layers=1,
+                      n_experts=8, top_k=2)
+params = init_params(cfg, jax.random.PRNGKey(0))
+p = jax.tree_util.tree_map(lambda v: v[0], params["layers"])["mlp"]
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model),
+                      jnp.float32)
+act_sharding.clear_mesh()
+B.MOE_DISPATCH = "local"
+y_local, _ = B.moe_forward(cfg, p, x)
+act_sharding.set_mesh(mesh, ("data",), "model")
+B.MOE_DISPATCH = "a2a"
+with mesh:
+    y_a2a, _ = jax.jit(lambda p, x: B.moe_forward(cfg, p, x))(p, x)
+err = float(jnp.max(jnp.abs(y_a2a - y_local)))
+assert err < 2e-2, err
+print("OK", err)
+"""
+
+
+@pytest.mark.slow
+def test_a2a_matches_local_on_8_devices():
+    r = subprocess.run([sys.executable, "-c", _SUBPROC], capture_output=True,
+                       text=True, timeout=300,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert r.stdout.startswith("OK")

@@ -1,0 +1,149 @@
+"""Runtime behaviour: training convergence, checkpoint/restart fault
+tolerance, serving (chunked prefill + KV quant), data determinism."""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data import DataConfig, SyntheticTokens
+from repro.optim import AdamW, compress_int8
+from repro.runtime import (ShardingPolicy, Trainer, TrainerConfig, Server,
+                           ServeConfig)
+from repro.checkpoint import CheckpointManager
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()
+
+
+@pytest.fixture()
+def cfg():
+    return configs.reduced(configs.get("granite-3-2b"))
+
+
+def test_training_loss_decreases(mesh, cfg, tmp_path):
+    data = SyntheticTokens(cfg, DataConfig(global_batch=4, seq_len=32))
+    tc = TrainerConfig(total_steps=15, ckpt_every=100,
+                       ckpt_dir=str(tmp_path), log_every=2)
+    with mesh:
+        tr = Trainer(cfg, AdamW(lr=1e-3, warmup_steps=2, total_steps=20),
+                     mesh, ShardingPolicy(), data, tc)
+        _, _, log = tr.run()
+    assert log[-1]["loss"] < log[0]["loss"]
+
+
+def test_checkpoint_resume_continues(mesh, cfg, tmp_path):
+    data = SyntheticTokens(cfg, DataConfig(global_batch=4, seq_len=32))
+    opt = AdamW(lr=1e-3, warmup_steps=2, total_steps=30)
+    with mesh:
+        tr = Trainer(cfg, opt, mesh, ShardingPolicy(), data,
+                     TrainerConfig(total_steps=10, ckpt_every=5,
+                                   ckpt_dir=str(tmp_path), log_every=1))
+        tr.run()
+        # restart: resumes after the last published step, not from scratch
+        tr2 = Trainer(cfg, opt, mesh, ShardingPolicy(), data,
+                      TrainerConfig(total_steps=12, ckpt_every=5,
+                                    ckpt_dir=str(tmp_path), log_every=1))
+        _, _, log2 = tr2.run()
+    assert log2[0]["step"] == 10     # ckpt at step 9 -> resume at 10
+
+
+def test_preemption_retry_recovers(mesh, cfg, tmp_path):
+    """A step that raises (simulated node failure) is retried from the last
+    durable checkpoint and training completes."""
+    data = SyntheticTokens(cfg, DataConfig(global_batch=4, seq_len=32))
+    boom = {"armed": True}
+
+    def injector(step):
+        if step == 7 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("simulated preemption")
+
+    with mesh:
+        tr = Trainer(cfg, AdamW(lr=1e-3, warmup_steps=2, total_steps=20),
+                     mesh, ShardingPolicy(), data,
+                     TrainerConfig(total_steps=10, ckpt_every=3,
+                                   ckpt_dir=str(tmp_path), log_every=1),
+                     failure_injector=injector)
+        _, _, log = tr.run()
+    assert log[-1]["step"] == 9
+    assert not boom["armed"]
+
+
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last_n=2)
+    tree = {"a": jnp.ones((4, 4), jnp.bfloat16),
+            "b": {"c": jnp.arange(6, dtype=jnp.float32)}}
+    for step in (1, 2, 3, 4):
+        mgr.save(step, tree)
+    assert mgr.steps() == [3, 4]     # GC kept last 2
+    restored, step = mgr.restore(tree)
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(restored["b"]["c"]),
+                                  np.arange(6, dtype=np.float32))
+    assert restored["a"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, {"w": jnp.ones((4, 4))})
+    with pytest.raises(ValueError, match="shape"):
+        mgr.restore({"w": jnp.ones((8, 8))})
+
+
+def test_serving_chunked_prefill_matches_unchunked(mesh, cfg):
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size, jnp.int32)
+    with mesh:
+        s1 = Server(cfg, params, mesh, ShardingPolicy(),
+                    ServeConfig(batch=2, max_len=64))
+        t1, _ = s1.generate(prompt, n_new=6)
+        s2 = Server(cfg, params, mesh, ShardingPolicy(),
+                    ServeConfig(batch=2, max_len=64, chunk_size=4))
+        t2, _ = s2.generate(prompt, n_new=6)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_serving_int8_kv_close_to_bf16(mesh, cfg):
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size, jnp.int32)
+    with mesh:
+        sb = Server(cfg, params, mesh, ShardingPolicy(),
+                    ServeConfig(batch=2, max_len=64, kv_dtype="bf16"))
+        tb, _ = sb.generate(prompt, n_new=4)
+        sq = Server(cfg, params, mesh, ShardingPolicy(),
+                    ServeConfig(batch=2, max_len=64, kv_dtype="int8"))
+        tq, _ = sq.generate(prompt, n_new=4)
+    # int8 KV is a lossy cache: greedy tokens may diverge late, shapes match
+    assert tq.shape == tb.shape
+
+
+def test_data_pipeline_deterministic_and_resumable(cfg):
+    d1 = SyntheticTokens(cfg, DataConfig(global_batch=4, seq_len=32, seed=7))
+    d2 = SyntheticTokens(cfg, DataConfig(global_batch=4, seq_len=32, seed=7))
+    b1, b2 = d1.batch(5), d2.batch(5)
+    np.testing.assert_array_equal(np.asarray(b1["inputs"]),
+                                  np.asarray(b2["inputs"]))
+    b3 = d1.batch(6)
+    assert not np.array_equal(np.asarray(b1["inputs"]),
+                              np.asarray(b3["inputs"]))
+    # abstract batch mirrors the real batch structure
+    ab = d1.abstract_batch()
+    assert set(ab) == set(b1)
+    for k in ab:
+        assert tuple(ab[k].shape) == tuple(b1[k].shape)
+
+
+def test_grad_compression_hook(cfg, mesh):
+    grads = {"w": jnp.linspace(-1, 1, 64).reshape(8, 8)}
+    cg = compress_int8(grads)
+    err = jnp.max(jnp.abs(cg["w"] - grads["w"]))
+    assert float(err) < 1.0 / 127 + 1e-6

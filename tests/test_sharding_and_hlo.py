@@ -1,0 +1,158 @@
+"""Sharding-rule resolution + HLO cost-analyzer validation."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hlo
+from repro.runtime.sharding import ShardingPolicy, spec_for
+from repro import configs
+
+
+def _mesh_stub(**shape):
+    return types.SimpleNamespace(shape=shape)
+
+
+POL = ShardingPolicy(dp_axes=("data",), tp_axis="model")
+POL_POD = ShardingPolicy(dp_axes=("pod", "data"), tp_axis="model",
+                         fsdp=True)
+MESH = _mesh_stub(data=16, model=16)
+MESH_POD = _mesh_stub(pod=2, data=16, model=16)
+
+
+def test_tp_axes_resolve():
+    s = spec_for(("embed", "mlp"), (4096, 16384), MESH, POL)
+    assert s == jax.sharding.PartitionSpec(None, "model")
+    s = spec_for(("vocab", "embed"), (128256, 4096), MESH, POL)
+    assert s == jax.sharding.PartitionSpec("model", None)
+
+
+def test_divisibility_fallback_replicates():
+    # kv_heads=2 can't shard over model=16 -> replicated
+    s = spec_for(("embed", "kv_heads", None), (4096, 2, 128), MESH, POL)
+    assert s == jax.sharding.PartitionSpec(None, None, None)
+
+
+def test_kv_len_fallback_when_heads_fail():
+    # cache (layers, batch, kv_len, kv_heads, hd): heads 8 fails on 16,
+    # kv_len 32768 takes the model axis instead (sequence sharding)
+    s = spec_for((None, "batch", "kv_len", "kv_heads", None),
+                 (40, 128, 32768, 8, 64), MESH, POL)
+    assert s == jax.sharding.PartitionSpec(None, "data", "model", None, None)
+
+
+def test_fsdp_embed_sharding_multi_pod():
+    s = spec_for(("embed", "mlp"), (16384, 53248), MESH_POD, POL_POD)
+    assert s == jax.sharding.PartitionSpec(("pod", "data"), "model")
+
+
+def test_batch_combined_dp_axes():
+    s = spec_for(("batch", "seq"), (256, 4096), MESH_POD, POL_POD)
+    assert s == jax.sharding.PartitionSpec(("pod", "data"), None)
+
+
+def test_no_mesh_axis_used_twice():
+    # heads takes model; mlp in the same tensor must not reuse it
+    s = spec_for(("heads", "mlp"), (32, 16384), MESH, POL)
+    used = [a for a in s if a is not None]
+    assert len(used) == len(set(used)) == 1
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED)
+def test_param_specs_resolve_for_all_archs(arch):
+    """Every param's logical axes resolve on the production mesh shape."""
+    from repro import models
+    cfg = configs.get(arch)
+    axes = jax.tree_util.tree_leaves(
+        models.logical_axes(cfg),
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    shapes = jax.tree_util.tree_leaves(models.abstract_params(cfg))
+    for ax, sds in zip(axes, shapes):
+        spec = spec_for(tuple(ax), tuple(sds.shape), MESH_POD, POL_POD)
+        # divisibility guaranteed by construction
+        for dim, a in zip(sds.shape, spec):
+            if a is not None:
+                n = 1
+                for x in (a if isinstance(a, tuple) else (a,)):
+                    n *= MESH_POD.shape[x]
+                assert dim % n == 0
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer
+# ---------------------------------------------------------------------------
+
+def test_analyzer_matches_cost_analysis_loop_free():
+    def f(x, w1, w2):
+        h = jax.nn.relu(x @ w1)
+        return jax.nn.softmax((h @ w2).astype(jnp.float32), axis=-1)
+
+    x = jnp.ones((128, 256), jnp.float32)
+    w1 = jnp.ones((256, 512), jnp.float32)
+    w2 = jnp.ones((512, 256), jnp.float32)
+    comp = jax.jit(f).lower(x, w1, w2).compile()
+    cost = comp.cost_analysis()
+    mine = hlo.analyze(comp.as_text(), 1)
+    assert mine.flops == pytest.approx(cost["flops"], rel=0.1)
+    assert mine.unknown_trip_loops == 0
+
+
+def test_analyzer_folds_scan_trip_counts():
+    def g(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=5)
+        return out
+
+    x = jnp.ones((64, 64), jnp.float32)
+    w = jnp.ones((64, 64), jnp.float32)
+    comp = jax.jit(g).lower(x, w).compile()
+    cost = comp.cost_analysis()
+    mine = hlo.analyze(comp.as_text(), 1)
+    # XLA counts the body once; we fold x5 (plus small outside-loop cost)
+    assert 4.0 < mine.flops / cost["flops"] < 5.5
+
+
+def test_collective_wire_conventions_synthetic():
+    txt = """
+HloModule m
+
+ENTRY %main (a: f32[128,128]) -> f32[128,128] {
+  %a = f32[128,128]{1,0} parameter(0)
+  %ar = f32[128,128]{1,0} all-reduce(%a), replica_groups=[2,4]<=[8], to_apply=%add
+  %ag = f32[128,128]{1,0} all-gather(%ar), replica_groups=[2,4]<=[8], dimensions={0}
+  %rs = f32[128,128]{1,0} reduce-scatter(%ag), replica_groups=[2,4]<=[8], dimensions={0}, to_apply=%add
+  ROOT %cp = f32[128,128]{1,0} collective-permute(%rs), source_target_pairs={{0,1}}
+}
+"""
+    n = 128 * 128 * 4
+    mc = hlo.analyze(txt, 8)
+    assert mc.collective_wire["all-reduce"] == pytest.approx(n * 2 * 3 / 4)
+    assert mc.collective_wire["all-gather"] == pytest.approx(n * 3 / 4)
+    assert mc.collective_wire["reduce-scatter"] == pytest.approx(n * 3)
+    assert mc.collective_wire["collective-permute"] == pytest.approx(n)
+
+
+def test_dus_fusion_charged_as_inplace_update():
+    txt = """
+HloModule m
+
+%fused_dus (p0: f32[100,1000], p1: f32[1,1000]) -> f32[100,1000] {
+  %p0 = f32[100,1000]{1,0} parameter(0)
+  %p1 = f32[1,1000]{1,0} parameter(1)
+  %c = s32[] constant(3)
+  ROOT %dus = f32[100,1000]{1,0} dynamic-update-slice(%p0, %p1, %c, %c)
+}
+
+ENTRY %main (buf: f32[100,1000], upd: f32[1,1000]) -> f32[100,1000] {
+  %buf = f32[100,1000]{1,0} parameter(0)
+  %upd = f32[1,1000]{1,0} parameter(1)
+  ROOT %f = f32[100,1000]{1,0} fusion(%buf, %upd), kind=kLoop, calls=%fused_dus
+}
+"""
+    mc = hlo.analyze(txt, 1)
+    # charged 2x the 4KB update, NOT the 400KB buffer
+    assert mc.bytes == pytest.approx(2 * 1000 * 4)
