@@ -27,6 +27,7 @@ MODULES = [
     "table12_lora",
     "xval_life_vs_xla",
     "roofline",
+    "engine_throughput",
 ]
 
 

@@ -1,54 +1,58 @@
-"""Serve a small model with batched requests — the paper's optimization
-menu live: chunked prefill (§3.3.4), int8 KV cache (§3.3.3), greedy and
-sampled decoding; LIFE forecast printed next to host wall-clock.
+"""Serve a stream of requests through the continuous-batching engine —
+the paper's optimization menu live: chunked-prefill admission (§3.3.4),
+int8 slot-paged KV cache (§3.3.3), greedy and sampled decoding; the LIFE
+twin's forecast for the same schedule printed next to host wall-clock.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
-import time
-
 import jax
 import jax.numpy as jnp
 
 from repro import configs
 from repro.configs.base import Variant
-from repro.core import WorkloadModel, Forecaster, hardware
+from repro.core import hardware
+from repro.engine import Engine, EngineConfig, ForecastTwin, Request
 from repro.models import init_params
-from repro.runtime import ShardingPolicy, Server, ServeConfig
+from repro.runtime import ShardingPolicy
 from repro.launch.mesh import make_host_mesh
 
 ARCH = "qwen2-7b"
-BATCH, PROMPT, NEW = 4, 64, 24
+N_REQ, SLOTS, PROMPT, NEW = 6, 3, 64, 24
 
 full = configs.get(ARCH)
 cfg = configs.reduced(full)
 mesh = make_host_mesh()
 params = init_params(cfg, jax.random.PRNGKey(0))
-prompts = jax.random.randint(jax.random.PRNGKey(1), (BATCH, PROMPT), 0,
+prompts = jax.random.randint(jax.random.PRNGKey(1), (N_REQ, PROMPT), 0,
                              cfg.vocab_size, jnp.int32)
 
-# LIFE forecast for the FULL qwen2-7b on the TPU target
-wm = WorkloadModel(full, Variant(kv_dtype="int8", fused=True))
-fc = Forecaster(hardware.TPU_V5E)
-ttft = fc.ttft(wm.prefill(BATCH, PROMPT))
-tpot = fc.tpot(wm.decode_step(BATCH, PROMPT), em=0.8)
-print(f"[LIFE] {ARCH} on tpu-v5e: TTFT={ttft.latency*1e3:.1f} ms, "
-      f"TPOT={tpot*1e3:.2f} ms, TPS={BATCH/tpot:.0f} (batch {BATCH})")
 
-for label, sc in [
-    ("baseline bf16-KV", ServeConfig(batch=BATCH, max_len=128)),
-    ("chunked prefill(16)", ServeConfig(batch=BATCH, max_len=128,
-                                        chunk_size=16)),
-    ("int8 KV cache", ServeConfig(batch=BATCH, max_len=128,
-                                  kv_dtype="int8")),
-    ("sampled T=0.8", ServeConfig(batch=BATCH, max_len=128,
-                                  temperature=0.8)),
+def requests():
+    # staggered budgets: slots free mid-flight and are reused by the queue
+    return [Request(rid=i, prompt=list(map(int, prompts[i])),
+                    max_new=NEW - 4 * (i % 3)) for i in range(N_REQ)]
+
+
+for label, ec in [
+    ("baseline bf16-KV", EngineConfig(max_slots=SLOTS, max_len=128)),
+    ("chunked admission(16)", EngineConfig(max_slots=SLOTS, max_len=128,
+                                           chunk_size=16)),
+    ("int8 KV slots", EngineConfig(max_slots=SLOTS, max_len=128,
+                                   kv_dtype="int8")),
+    ("sampled T=0.8", EngineConfig(max_slots=SLOTS, max_len=128,
+                                   temperature=0.8)),
 ]:
     with mesh:
-        server = Server(cfg, params, mesh, ShardingPolicy(), sc)
-        t0 = time.time()
-        toks, stats = server.generate(prompts, NEW)
-        jax.block_until_ready(toks)
-        dt = time.time() - t0
-    print(f"{label:22s} -> {toks.shape} tokens in {dt:5.2f}s "
-          f"(host {BATCH*NEW/dt:6.1f} tok/s)  first row: "
-          f"{list(map(int, toks[0][:6]))}")
+        eng = Engine(cfg, params, mesh, ShardingPolicy(), ec)
+        eng.warmup()   # compile outside the measured tok/s
+        results = eng.run(requests())
+    twin = ForecastTwin(full, hardware.TPU_V5E,
+                        Variant(kv_dtype=ec.kv_dtype, fused=True), em=0.8)
+    fcst = twin.replay(eng.trace)
+    done = sum(len(r.tokens) for r in results)
+    print(f"{label:22s} -> {done} toks over {len(results)} reqs on "
+          f"{ec.max_slots} slots  host {eng.aggregate_tps():6.1f} tok/s  "
+          f"[twin→v5e: {fcst.tps:7.1f} tok/s, "
+          f"ttft {fcst.mean_ttft*1e3:5.1f}ms, "
+          f"tpot {fcst.mean_tpot*1e3:5.2f}ms]  first req: "
+          f"{results[0].tokens[:5]}")

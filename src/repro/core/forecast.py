@@ -61,21 +61,28 @@ class Forecaster:
         return self.phase(prefill_db.totals("prefill"), ec=ec, em=em)
 
     # -- Eq. 4–6 -----------------------------------------------------------
-    def tpot(self, decode_db: StatsDB, *, em: float = 1.0,
-             ec: Optional[float] = None) -> float:
-        """Seconds per output token.
+    def step_latency(self, totals: Totals, *, em: float = 1.0,
+                     ec: Optional[float] = None) -> float:
+        """Latency of one decode step from its Totals (TPOT-style).
 
         The paper defines TPOT as purely memory-bound (t_c << t_m during
         decode for all studied conditions).  Passing ``ec`` adds the compute
         term as max(t_c, t_m) for robustness on very fast-memory hardware.
+        Shared by :meth:`tpot` and the continuous-batching twin
+        (``repro.engine.forecast_twin``), which forecasts steps whose Totals
+        come from ``WorkloadModel.decode_totals_mixed`` rather than a StatsDB.
         """
-        t = decode_db.totals("decode")
-        t_m = t.mem_total / (em * self.hw.bw)
-        t_d = t.dispatches * self.hw.dispatch_latency_s
+        t_m = totals.mem_total / (em * self.hw.bw)
+        t_d = totals.dispatches * self.hw.dispatch_latency_s
         if ec is not None:
-            t_c = t.ops / (ec * self.hw.flops)
+            t_c = totals.ops / (ec * self.hw.flops)
             return max(t_c, t_m) + t_d
         return t_m + t_d
+
+    def tpot(self, decode_db: StatsDB, *, em: float = 1.0,
+             ec: Optional[float] = None) -> float:
+        """Seconds per output token (see :meth:`step_latency`)."""
+        return self.step_latency(decode_db.totals("decode"), em=em, ec=ec)
 
     def tps(self, decode_db: StatsDB, *, em: float = 1.0,
             ec: Optional[float] = None) -> float:

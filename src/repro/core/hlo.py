@@ -468,3 +468,15 @@ def analyze(hlo_text: str, n_devices: int = 1,
                       wire_bytes=sum(wire.values()),
                       collective_wire=wire, collective_counts=counts,
                       unknown_trip_loops=unknown_loops)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a one-element list of dicts (one per computation),
+    newer jax returns the dict directly; either may be empty/None.
+    """
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

@@ -68,6 +68,27 @@ class Totals:
         self.kv_wr += other.kv_wr
         self.dispatches += other.dispatches
 
+    def scaled(self, factor: float) -> "Totals":
+        return Totals(ops=self.ops * factor,
+                      mem_rd=self.mem_rd * factor,
+                      mem_wr=self.mem_wr * factor,
+                      kv_rd=self.kv_rd * factor,
+                      kv_wr=self.kv_wr * factor,
+                      dispatches=int(round(self.dispatches * factor)))
+
+    def plus(self, other: "Totals", factor: float = 1.0) -> "Totals":
+        """self + factor·other as a new Totals (dispatch count rounded)."""
+        return Totals(ops=self.ops + factor * other.ops,
+                      mem_rd=self.mem_rd + factor * other.mem_rd,
+                      mem_wr=self.mem_wr + factor * other.mem_wr,
+                      kv_rd=self.kv_rd + factor * other.kv_rd,
+                      kv_wr=self.kv_wr + factor * other.kv_wr,
+                      dispatches=int(round(self.dispatches
+                                           + factor * other.dispatches)))
+
+    def minus(self, other: "Totals") -> "Totals":
+        return self.plus(other, factor=-1.0)
+
     def as_dict(self) -> Dict[str, float]:
         return {
             "ops": self.ops,

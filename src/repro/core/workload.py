@@ -104,6 +104,50 @@ class WorkloadModel:
                     dispatches=0)
         return db
 
+    def decode_totals_mixed(self, past_lens: Sequence[int]) -> Totals:
+        """Workload of ONE decode step for a continuous-batching batch.
+
+        ``past_lens[i]`` is the KV length already cached for slot ``i`` —
+        unlike :meth:`decode_step`, the requests need not share a past
+        length.  This is the scenario the serving engine produces (slots
+        admitted at different times) and the paper only models for a
+        uniform batch.
+
+        Exploits that the per-step workload is affine in ``past_len`` for a
+        fixed batch size B (attention BMM ops, KV reads and softmax scale
+        linearly with KV length; every other operator is independent of it):
+
+            T(B, {p_i}) = T(B, 0) + slope · Σ_i p_i
+
+        where ``slope`` is the per-slot, per-cached-token increment.  The
+        identity ``decode_totals_mixed([p]*B) == decode_step(B, p)`` holds
+        exactly (tested), so uniform batches reduce to the paper's model.
+        ``pad_to`` (§3.2.2) and local windows break affinity at the slot
+        level; both are applied per slot before the affine evaluation.
+        """
+        a, v = self.arch, self.variant
+        eff = []
+        for p in past_lens:
+            kv = p + 1
+            if v.pad_to > 1:
+                kv = -(-kv // v.pad_to) * v.pad_to
+            if a.local_window:
+                kv = min(kv, a.local_window)
+            eff.append(kv - 1)
+        B = len(eff)
+        key = B
+        if not hasattr(self, "_mixed_cache"):
+            self._mixed_cache = {}
+        if key not in self._mixed_cache:
+            base_v = dataclasses.replace(v, pad_to=1)
+            base_wm = WorkloadModel(self.arch, base_v)
+            t0 = base_wm.decode_step(B, 0).totals("decode")
+            t1 = base_wm.decode_step(B, 1).totals("decode")
+            slope = t1.minus(t0).scaled(1.0 / B)   # per slot, per cached tok
+            self._mixed_cache[key] = (t0, slope)
+        t0, slope = self._mixed_cache[key]
+        return t0.plus(slope, factor=float(sum(eff)))
+
     def generate_timeline(self, batch: int, prompt_len: int, n_new: int,
                           sample_every: int = 1) -> List[TimelinePoint]:
         """Decode timeline (paper Fig. 7): per-token workload vs. KV growth."""

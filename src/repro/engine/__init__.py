@@ -1,0 +1,27 @@
+"""Continuous-batching serving engine + its LIFE analytical twin.
+
+Subsystem layout:
+    kv_cache      — slot-paged KV cache (per-slot cursors, int8 storage,
+                    slot reset/reuse)
+    decode_loop   — jitted chunked-prefill admission + fused multi-token
+                    decode scan with active-slot masking
+    scheduler     — request queue, admission into free slots, mid-flight
+                    completion, per-request metrics, trace emission
+    forecast_twin — replays the scheduler trace through WorkloadModel /
+                    Forecaster: per-request TTFT/TPOT + aggregate TPS
+                    forecasts for mixed continuous-batching traffic
+"""
+from .sampling import sample, kv_jnp_dtype, KV_DTYPES
+from .kv_cache import PagedKVCache, engine_supported
+from .decode_loop import make_engine_fns
+from .scheduler import (Engine, EngineConfig, Request, RequestResult,
+                        TraceEvent)
+from .forecast_twin import (ForecastTwin, TraceForecast, RequestForecast,
+                            replay_trace)
+
+__all__ = [
+    "sample", "kv_jnp_dtype", "KV_DTYPES", "PagedKVCache",
+    "engine_supported", "make_engine_fns", "Engine", "EngineConfig",
+    "Request", "RequestResult", "TraceEvent", "ForecastTwin",
+    "TraceForecast", "RequestForecast", "replay_trace",
+]

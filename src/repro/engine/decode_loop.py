@@ -1,0 +1,199 @@
+"""Fused engine steps: chunked-prefill admission + multi-token decode scan.
+
+Replaces the per-token Python dispatch of the legacy ``Server.generate``
+loop with two jitted entry points:
+
+* ``prefill_chunk``  — admit one prompt chunk of one request into its slot
+  (paper §3.3.4 chunked prefill, against the slot-paged cache).
+* ``decode_block``   — ``jax.lax.scan`` over ``decode_block`` tokens for
+  *all* slots at once: embedding → layer stack → LM head → sampling all
+  inside one jit, with active-slot masking so slots that finish (EOS /
+  budget) mid-block stop writing KV and stop advancing, while fresh slots
+  keep decoding.  One dispatch per block instead of one per token.
+
+Both operate on the state dict created by ``PagedKVCache.init_state`` and
+donate it, so cache pages are updated in place across engine steps.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import blocks as B
+from repro.models.layers import apply_norm
+from repro.models.model import _lm_head
+from repro.runtime import sharding as S
+
+from .kv_cache import PagedKVCache
+from .sampling import sample
+
+
+# ---------------------------------------------------------------------------
+# per-layer bodies against one slot page / all slot pages
+# ---------------------------------------------------------------------------
+
+def _channel_mix(cfg: ArchConfig, p, x):
+    if "mlp" not in p:
+        return x
+    h = apply_norm(cfg.norm_kind, x, p["ln2"])
+    if cfg.family == "moe":
+        y, _ = B.moe_forward(cfg, p["mlp"], h)
+    else:
+        y = B.mlp_forward(cfg, p["mlp"], h)
+    return x + y
+
+
+def _prefill_layer(cfg: ArchConfig, p, x, ck, cv, slot, pos_q, valid_end):
+    """One layer of a single-slot prompt chunk.
+
+    x: (1, C, d); ck/cv: (S, L, Hk, hd) full slot-paged buffers of this
+    layer; pos_q: (C,) absolute positions of the chunk tokens; positions
+    ``>= valid_end`` are padding (their K/V writes are dropped and their
+    outputs ignored by the caller).
+    """
+    L = ck.shape[1]
+    h = apply_norm(cfg.norm_kind, x, p["ln1"])
+    q, k_new, v_new = A._project_qkv(cfg, p["attn"], h, pos_q[None, :])
+    # write the chunk's K/V into this slot's page; padding rows target
+    # index L which is out of bounds => scatter drops them
+    idx = jnp.where(pos_q < valid_end, pos_q, L)
+    page_k = jax.lax.dynamic_slice_in_dim(ck, slot, 1, axis=0)
+    page_v = jax.lax.dynamic_slice_in_dim(cv, slot, 1, axis=0)
+    page_k = page_k.at[0, idx].set(k_new[0].astype(ck.dtype))
+    page_v = page_v.at[0, idx].set(v_new[0].astype(cv.dtype))
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, page_k, slot, axis=0)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, page_v, slot, axis=0)
+    k_pos = jnp.arange(L, dtype=jnp.int32)
+    mask = ((k_pos[None, :] <= pos_q[:, None])
+            & (k_pos[None, :] < valid_end))[None, None, None]
+    out = A._gqa_scores_softmax_out(q, page_k.astype(x.dtype),
+                                    page_v.astype(x.dtype), mask,
+                                    cfg.head_dim ** -0.5)
+    b, s = x.shape[0], x.shape[1]
+    y = jnp.einsum("bshd,hde->bse",
+                   out.reshape(b, s, cfg.n_heads, cfg.head_dim),
+                   p["attn"]["wo"])
+    return _channel_mix(cfg, p, x + y), ck, cv
+
+
+def _decode_layer(cfg: ArchConfig, p, x, ck, cv, pos, active):
+    """One layer of a one-token step for ALL slots.
+
+    x: (S, 1, d); ck/cv: (S, L, Hk, hd); pos: (S,) per-slot cursors;
+    active: (S,) bool — inactive slots neither write KV nor advance (their
+    scatter index is forced out of bounds and dropped).
+    """
+    S_, L = ck.shape[0], ck.shape[1]
+    h = apply_norm(cfg.norm_kind, x, p["ln1"])
+    q, k_new, v_new = A._project_qkv(cfg, p["attn"], h, pos[:, None])
+    idx = jnp.where(active, pos, L)
+    rows = jnp.arange(S_, dtype=jnp.int32)
+    ck = ck.at[rows, idx].set(k_new[:, 0].astype(ck.dtype))
+    cv = cv.at[rows, idx].set(v_new[:, 0].astype(cv.dtype))
+    k_pos = jnp.arange(L, dtype=jnp.int32)
+    # per-slot causal mask over its own page (keys strictly before + the
+    # token just written at pos)
+    mask = (k_pos[None, :] <= pos[:, None])[:, None, None, None, :]
+    out = A._gqa_scores_softmax_out(q, ck.astype(x.dtype),
+                                    cv.astype(x.dtype), mask,
+                                    cfg.head_dim ** -0.5)
+    y = jnp.einsum("bshd,hde->bse",
+                   out.reshape(S_, 1, cfg.n_heads, cfg.head_dim),
+                   p["attn"]["wo"])
+    return _channel_mix(cfg, p, x + y), ck, cv
+
+
+# ---------------------------------------------------------------------------
+# jitted engine entry points
+# ---------------------------------------------------------------------------
+
+def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
+                    cache: PagedKVCache, *, chunk_size: int,
+                    decode_block: int, temperature: float = 0.0,
+                    eos_id: Optional[int] = None):
+    """Returns jit'd ``(prefill_fn, decode_fn, shardings)``.
+
+    prefill_fn(params, state, tokens(1,C), slot, start, valid)
+        -> (logits (V,), state)
+    decode_fn(params, state, active(S,), remaining(S,), rng)
+        -> (tokens (n,S), produced (n,S), active(S,), state)
+    """
+    from repro.models import act_sharding
+    act_sharding.set_mesh(mesh, policy.dp_axes, policy.tp_axis)
+    state_sh = cache.shardings(mesh, policy)
+    param_sh = S.param_shardings(cfg, mesh, policy)
+
+    def prefill(params, state, tokens, slot, start, valid):
+        x = params["embed"][tokens]                       # (1, C, d)
+        pos_q = start + jnp.arange(chunk_size, dtype=jnp.int32)
+        valid_end = start + valid
+
+        def scan_fn(h, inp):
+            p_layer, ck, cv = inp
+            h, ck, cv = _prefill_layer(cfg, p_layer, h, ck, cv, slot,
+                                       pos_q, valid_end)
+            return h, (ck, cv)
+
+        x, (cks, cvs) = jax.lax.scan(
+            scan_fn, x, (params["layers"], state["cache_k"],
+                         state["cache_v"]))
+        x = apply_norm(cfg.norm_kind, x, params["ln_f"])
+        h_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
+        logits = _lm_head(cfg, params, h_last)[0, 0]      # (V,)
+        new_state = dict(state)
+        new_state["cache_k"], new_state["cache_v"] = cks, cvs
+        new_state["pos"] = state["pos"].at[slot].add(valid)
+        return logits, new_state
+
+    def decode(params, state, active, remaining, rng):
+        def step_fn(carry, _):
+            ck_all, cv_all, pos, tok, act, rem, key = carry
+            x = params["embed"][tok[:, None]]             # (S, 1, d)
+
+            def layer_fn(h, inp):
+                p_layer, ck, cv = inp
+                h, ck, cv = _decode_layer(cfg, p_layer, h, ck, cv, pos, act)
+                return h, (ck, cv)
+
+            x, (cks, cvs) = jax.lax.scan(
+                layer_fn, x, (params["layers"], ck_all, cv_all))
+            x = apply_norm(cfg.norm_kind, x, params["ln_f"])
+            logits = _lm_head(cfg, params, x[:, -1:])[:, 0]   # (S, V)
+            key, sub = jax.random.split(key)
+            nxt = sample(logits, temperature, sub)
+            produced = act
+            hit_eos = ((nxt == eos_id) if eos_id is not None
+                       else jnp.zeros_like(act))
+            rem = rem - act.astype(jnp.int32)
+            new_act = act & (rem > 0) & ~hit_eos
+            pos = pos + act.astype(jnp.int32)
+            tok = jnp.where(act, nxt, tok)
+            out_tok = jnp.where(act, nxt, -1)
+            return (cks, cvs, pos, tok, new_act, rem, key), (out_tok, produced)
+
+        carry = (state["cache_k"], state["cache_v"], state["pos"],
+                 state["tok"], active, remaining, rng)
+        carry, (toks, produced) = jax.lax.scan(step_fn, carry, None,
+                                               length=decode_block)
+        cks, cvs, pos, tok, act, _, _ = carry
+        new_state = dict(state)
+        new_state["cache_k"], new_state["cache_v"] = cks, cvs
+        new_state["pos"], new_state["tok"] = pos, tok
+        return toks, produced, act, new_state
+
+    prefill_fn = jax.jit(
+        prefill,
+        in_shardings=(param_sh, state_sh, None, None, None, None),
+        out_shardings=(None, state_sh),
+        donate_argnums=(1,))
+    decode_fn = jax.jit(
+        decode,
+        in_shardings=(param_sh, state_sh, None, None, None),
+        out_shardings=(None, None, None, state_sh),
+        donate_argnums=(1,))
+    return prefill_fn, decode_fn, {"params": param_sh, "state": state_sh}

@@ -1,0 +1,153 @@
+"""LIFE analytical twin of the continuous-batching engine.
+
+Replays an engine trace (``Engine.trace``) through the hierarchical
+workload model: every ``prefill_chunk`` event becomes an analytical prefill
+of (batch=1, chunk, past_len); every ``decode_block`` event becomes
+``n_steps`` mixed-batch decode steps whose per-slot KV lengths grow and
+whose slots retire as their budgets drain — exactly the schedule the real
+engine executed, but costed with ``WorkloadModel`` + ``Forecaster`` on a
+target :class:`HardwareSpec`.
+
+This extends the paper's forecasting (single uniform request, Eqs. 1–6) to
+mixed continuous-batching traffic: per-request TTFT/TPOT forecasts and an
+aggregate forecast TPS for the whole served trace, comparable against the
+engine's measured metrics (``benchmarks/engine_throughput.py``).
+
+Scope note: the twin costs the *useful* work of the schedule — only the
+slots active at each step and only the valid tokens of each chunk.  The
+executable engine, being jit-compiled with static shapes, additionally
+burns compute on masked-out slots and padded chunk tails; that padding
+overhead is an implementation artifact of the XLA engine, not part of the
+analytical serving scenario, so forecast-vs-measured deltas include it.
+Forecast TTFT is admission → first token (queue time excluded); the
+engine's measured TTFT includes queueing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+from repro.configs.base import ArchConfig, Variant
+from repro.core.forecast import Forecaster
+from repro.core.hardware import HardwareSpec
+from repro.core.workload import WorkloadModel
+
+from .scheduler import TraceEvent
+
+
+@dataclasses.dataclass
+class RequestForecast:
+    rid: int
+    ttft: float = 0.0           # s, admission → first token (queue excluded)
+    finished: float = 0.0       # s, simulated clock at completion
+    n_tokens: int = 0
+    _admitted_at: float = 0.0
+    _first_token_at: float = 0.0
+
+    @property
+    def tpot(self) -> float:
+        if self.n_tokens <= 1:
+            return 0.0
+        return (self.finished - self._first_token_at) / (self.n_tokens - 1)
+
+
+@dataclasses.dataclass
+class TraceForecast:
+    total_time: float           # s, simulated clock at trace end
+    total_tokens: int
+    requests: Dict[int, RequestForecast]
+
+    @property
+    def tps(self) -> float:
+        """Aggregate generated-tokens/s forecast for the served trace."""
+        return self.total_tokens / max(self.total_time, 1e-30)
+
+    @property
+    def mean_ttft(self) -> float:
+        rs = self.requests.values()
+        return sum(r.ttft for r in rs) / max(len(rs), 1)
+
+    @property
+    def mean_tpot(self) -> float:
+        rs = [r for r in self.requests.values() if r.n_tokens > 1]
+        return sum(r.tpot for r in rs) / max(len(rs), 1)
+
+
+class ForecastTwin:
+    """Forecasts engine traces on a target hardware spec."""
+
+    def __init__(self, arch: ArchConfig, hw: HardwareSpec,
+                 variant: Optional[Variant] = None, *,
+                 ec: Optional[float] = None, em: float = 1.0,
+                 prefill_ec: float = 1.0, prefill_em: float = 1.0):
+        self.wm = WorkloadModel(arch, variant)
+        self.fc = Forecaster(hw)
+        self.ec, self.em = ec, em
+        self.prefill_ec, self.prefill_em = prefill_ec, prefill_em
+        self._prefill_memo: Dict[tuple, float] = {}
+
+    # ------------------------------------------------------------------
+    def prefill_chunk_latency(self, chunk: int, past_len: int) -> float:
+        key = (chunk, past_len)
+        if key not in self._prefill_memo:
+            db = self.wm.prefill(1, chunk, past_len=past_len)
+            self._prefill_memo[key] = self.fc.phase(
+                db.totals("prefill"), ec=self.prefill_ec,
+                em=self.prefill_em).latency
+        return self._prefill_memo[key]
+
+    def decode_step_latency(self, past_lens: Sequence[int]) -> float:
+        totals = self.wm.decode_totals_mixed(past_lens)
+        return self.fc.step_latency(totals, em=self.em, ec=self.ec)
+
+    # ------------------------------------------------------------------
+    def replay(self, trace: Sequence[TraceEvent]) -> TraceForecast:
+        clock = 0.0
+        requests: Dict[int, RequestForecast] = {}
+        total_tokens = 0
+        for ev in trace:
+            if ev.kind == "prefill_chunk":
+                rf = requests.setdefault(ev.rid, RequestForecast(rid=ev.rid))
+                if ev.past_len == 0:
+                    rf._admitted_at = clock
+                clock += self.prefill_chunk_latency(ev.chunk, ev.past_len)
+                if ev.last:
+                    # admission ends: the first token comes from these logits
+                    rf.ttft = clock - rf._admitted_at
+                    rf._first_token_at = clock
+                    rf.n_tokens += 1
+                    rf.finished = clock
+                    total_tokens += 1
+            elif ev.kind == "decode_block":
+                # per-slot (rid, past_len, remaining) at block start; replay
+                # each fused step with budget attrition (EOS is not
+                # forecastable and is ignored — the engine's trace already
+                # reflects the blocks it actually ran)
+                live = [list(s) for s in ev.slots]
+                for step in range(ev.n_steps):
+                    active = [s for s in live if s[2] > 0]
+                    if not active:
+                        break
+                    clock += self.decode_step_latency(
+                        [s[1] for s in active])
+                    for s in active:
+                        rf = requests.setdefault(
+                            s[0], RequestForecast(rid=s[0]))
+                        rf.n_tokens += 1
+                        rf.finished = clock
+                        s[1] += 1       # KV grew by the token just written
+                        s[2] -= 1       # budget drained by the token sampled
+                        total_tokens += 1
+            else:
+                raise ValueError(f"unknown trace event kind {ev.kind!r}")
+        return TraceForecast(total_time=clock, total_tokens=total_tokens,
+                             requests=requests)
+
+
+def replay_trace(arch: ArchConfig, hw: HardwareSpec,
+                 trace: Sequence[TraceEvent],
+                 variant: Optional[Variant] = None, *,
+                 em: float = 1.0, ec: Optional[float] = None
+                 ) -> TraceForecast:
+    """One-shot convenience wrapper around :class:`ForecastTwin`."""
+    return ForecastTwin(arch, hw, variant, em=em, ec=ec).replay(trace)

@@ -1,0 +1,131 @@
+"""Slot-paged KV cache for the continuous-batching engine.
+
+Each of ``max_slots`` concurrent requests owns one *slot* — a page of
+``max_len`` positions — in preallocated, sharded cache buffers shaped
+
+    (n_attn_layers, max_slots, max_len, n_kv_heads, head_dim)
+
+with a per-slot write cursor ``pos`` (the number of tokens cached for that
+slot).  Slots are freed on request completion (EOS or token budget) and
+reused by the next admission without reallocating: resetting ``pos`` to 0
+is sufficient because every attention mask only admits keys at positions
+``< pos``, so stale entries from the previous occupant are never read.
+
+Supports quantized KV storage (``int8`` buffers, paper §3.3.3) — attention
+math reads the cache cast back to the activation dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ArchConfig
+from repro.runtime import sharding as S
+
+from .sampling import kv_jnp_dtype
+
+
+def engine_supported(cfg: ArchConfig) -> bool:
+    """Engine v1 serves homogeneous full-attention stacks (GQA/MHA/MQA).
+
+    SSM / RG-LRU hybrids, MLA latent caches, local-window ring buffers and
+    encoder-decoder cross caches keep using the legacy lockstep
+    ``repro.runtime.serve.Server`` path.
+    """
+    return (all(k == "attn" for k in cfg.block_kinds())
+            and cfg.mla is None
+            and not cfg.local_window
+            and not cfg.n_encoder_layers)
+
+
+def check_supported(cfg: ArchConfig) -> None:
+    if not engine_supported(cfg):
+        raise ValueError(
+            f"engine does not support arch {cfg.name!r} "
+            f"(family={cfg.family}, mla={cfg.mla is not None}, "
+            f"local_window={cfg.local_window}); use repro.runtime.Server")
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVCache:
+    """Geometry + (de)allocation of the slot-paged cache buffers.
+
+    The buffers themselves live inside the engine's device state dict (so
+    they can be donated through jit); this object is the static descriptor
+    that creates, shards and interprets them.
+    """
+    cfg: ArchConfig
+    max_slots: int
+    max_len: int
+    kv_dtype: str = "bf16"
+
+    def __post_init__(self):
+        check_supported(self.cfg)
+
+    @property
+    def n_layers(self) -> int:
+        return self.cfg.n_layers
+
+    def buffer_shape(self):
+        c = self.cfg
+        return (c.n_layers, self.max_slots, self.max_len,
+                c.n_kv_heads, c.head_dim)
+
+    def init_state(self) -> Dict[str, jax.Array]:
+        """Fresh engine device state: empty cache + per-slot cursors."""
+        kvd = kv_jnp_dtype(self.kv_dtype)
+        shape = self.buffer_shape()
+        return {
+            "cache_k": jnp.zeros(shape, kvd),
+            "cache_v": jnp.zeros(shape, kvd),
+            # per-slot number of cached tokens (the slot's write cursor)
+            "pos": jnp.zeros((self.max_slots,), jnp.int32),
+            # last sampled token per slot (input to the next decode step)
+            "tok": jnp.zeros((self.max_slots,), jnp.int32),
+        }
+
+    def abstract_state(self) -> Dict[str, jax.ShapeDtypeStruct]:
+        return jax.eval_shape(self.init_state)
+
+    def logical_axes(self) -> Dict[str, tuple]:
+        return {
+            "cache_k": (None, "batch", "kv_len", "kv_heads", None),
+            "cache_v": (None, "batch", "kv_len", "kv_heads", None),
+            "pos": ("batch",),
+            "tok": ("batch",),
+        }
+
+    def shardings(self, mesh: Mesh, policy: S.ShardingPolicy
+                  ) -> Dict[str, NamedSharding]:
+        """Slot axis shards like a batch (DP), heads over TP, same
+        divisibility fallbacks as the lockstep decode state."""
+        axes = self.logical_axes()
+        out = {}
+        for k, sds in self.abstract_state().items():
+            out[k] = NamedSharding(
+                mesh, S.spec_for(axes[k], tuple(sds.shape), mesh, policy))
+        return out
+
+    # ------------------------------------------------------------------
+    # slot lifecycle (host-side, between jitted engine steps)
+    # ------------------------------------------------------------------
+    def reset_slot(self, state: Dict[str, jax.Array], slot: int
+                   ) -> Dict[str, jax.Array]:
+        """Free a slot for reuse.  O(1): only the cursor is cleared —
+        stale KV entries are unreachable once ``pos == 0``."""
+        state = dict(state)
+        state["pos"] = state["pos"].at[slot].set(0)
+        state["tok"] = state["tok"].at[slot].set(0)
+        return state
+
+    def bytes_per_slot(self) -> int:
+        c = self.cfg
+        el = jnp.dtype(kv_jnp_dtype(self.kv_dtype)).itemsize
+        return 2 * c.n_layers * self.max_len * c.n_kv_heads * c.head_dim * el
+
+    def total_bytes(self) -> int:
+        return self.max_slots * self.bytes_per_slot()

@@ -1,0 +1,23 @@
+"""Leaf helpers shared by the engine and the legacy lockstep Server.
+
+Kept dependency-free (jax only) so ``repro.runtime.serve`` can import them
+without creating an import cycle with the engine subsystem.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+KV_DTYPES = {"bf16": jnp.bfloat16, "fp16": jnp.float16,
+             "int8": jnp.int8, "fp32": jnp.float32}
+
+
+def kv_jnp_dtype(name: str):
+    return KV_DTYPES[name]
+
+
+def sample(logits: jax.Array, temperature: float, rng: jax.Array) -> jax.Array:
+    """Greedy (T=0) or temperature sampling; works in- and outside jit."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(rng, logits / temperature).astype(jnp.int32)

@@ -1,0 +1,285 @@
+"""Continuous-batching scheduler: request queue → slots → engine steps.
+
+The ``Engine`` drives serving as a sequence of *engine steps*; each step
+either admits queued prompts into free KV slots (chunked prefill, one
+jitted call per chunk) or runs one fused multi-token decode block across
+all active slots.  Slots free mid-flight — a request finishing inside a
+decode block releases its slot for the next admission while the remaining
+slots keep decoding — which is what distinguishes continuous batching from
+the legacy lockstep ``Server``.
+
+Every step appends a :class:`TraceEvent`; the trace is both the measured
+run's structure and the input replayed by the analytical twin
+(``repro.engine.forecast_twin``) to forecast the same serving schedule.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+from repro.runtime.sharding import ShardingPolicy
+
+from .kv_cache import PagedKVCache
+from .decode_loop import make_engine_fns, sample
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int                      # concurrent requests (KV slot pages)
+    max_len: int                        # tokens per slot page
+    chunk_size: int = 32                # chunked-prefill admission chunk
+    decode_block: int = 8               # tokens per fused decode dispatch
+    kv_dtype: str = "bf16"              # bf16 | int8 (KV compression §3.3.3)
+    temperature: float = 0.0            # 0 = greedy
+    eos_id: Optional[int] = None        # stop token (None: budget only)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: Sequence[int]               # token ids
+    max_new: int                        # generation budget
+    arrival_step: int = 0               # engine step at which it may admit
+
+    def __post_init__(self):
+        if len(self.prompt) == 0:
+            raise ValueError(f"request {self.rid}: empty prompt")
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: List[int]                   # generated tokens (incl. first)
+    prompt_len: int
+    # measured wall-clock timestamps (s, engine-relative)
+    arrival: float = 0.0
+    admitted: float = 0.0               # prefill started (left the queue)
+    first_token: float = 0.0            # TTFT reference point
+    finished: float = 0.0
+
+    @property
+    def queue_time(self) -> float:
+        return self.admitted - self.arrival
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        """Mean seconds per output token after the first."""
+        n = len(self.tokens)
+        if n <= 1:
+            return 0.0
+        return (self.finished - self.first_token) / (n - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One engine step, hardware-agnostic — the twin's replay unit.
+
+    kind == "prefill_chunk": one prompt chunk of ``rid`` into ``slot``
+        (batch 1, ``chunk`` new tokens on top of ``past_len`` cached);
+        ``last`` marks the chunk that produces the request's first token.
+    kind == "decode_block": ``n_steps`` fused steps over the active slots;
+        ``slots`` holds (rid, past_len, remaining_budget) per active slot
+        at block start, enough for the twin to replay per-step attrition.
+    """
+    kind: str
+    rid: int = -1
+    slot: int = -1
+    chunk: int = 0
+    past_len: int = 0
+    last: bool = False
+    n_steps: int = 0
+    slots: Tuple[Tuple[int, int, int], ...] = ()
+
+
+class Engine:
+    """Continuous-batching serving engine over a slot-paged KV cache."""
+
+    def __init__(self, cfg: ArchConfig, params, mesh: Mesh,
+                 policy: ShardingPolicy, ec: EngineConfig):
+        if ec.chunk_size > ec.max_len:
+            raise ValueError("chunk_size exceeds max_len")
+        self.cfg, self.params, self.ec = cfg, params, ec
+        self.mesh = mesh
+        self.cache = PagedKVCache(cfg, ec.max_slots, ec.max_len,
+                                  kv_dtype=ec.kv_dtype)
+        self.prefill_fn, self.decode_fn, self.shardings = make_engine_fns(
+            cfg, mesh, policy, self.cache, chunk_size=ec.chunk_size,
+            decode_block=ec.decode_block, temperature=ec.temperature,
+            eos_id=ec.eos_id)
+        self.state = self.cache.init_state()
+        self._rng = jax.random.PRNGKey(ec.seed)
+        self.queue: Deque[Request] = collections.deque()
+        self.free_slots: List[int] = list(range(ec.max_slots))
+        self.running: Dict[int, Request] = {}      # slot -> request
+        self.results: Dict[int, RequestResult] = {}  # rid -> result
+        self.trace: List[TraceEvent] = []
+        self.step_idx = 0
+        self._t0 = time.perf_counter()
+        self._arrivals: Dict[int, float] = {}
+
+    # ------------------------------------------------------------------
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def submit(self, req: Request) -> None:
+        if req.max_new < 1:
+            raise ValueError(f"request {req.rid}: max_new must be >= 1 "
+                             f"(the first token comes from prefill)")
+        if len(req.prompt) + req.max_new > self.ec.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+budget "
+                f"{len(req.prompt)}+{req.max_new} exceeds slot page "
+                f"{self.ec.max_len}")
+        self.queue.append(req)
+        self._arrivals[req.rid] = self._now()
+
+    @property
+    def n_active(self) -> int:
+        return len(self.running)
+
+    @property
+    def done(self) -> bool:
+        return not self.queue and not self.running
+
+    # ------------------------------------------------------------------
+    # admission: chunked prefill of one request into one free slot
+    # ------------------------------------------------------------------
+    def _admit(self, req: Request, slot: int) -> None:
+        ec = self.ec
+        prompt = np.asarray(req.prompt, np.int32)
+        n = len(prompt)
+        res = RequestResult(rid=req.rid, tokens=[], prompt_len=n,
+                            arrival=self._arrivals.get(req.rid, 0.0),
+                            admitted=self._now())
+        logits = None
+        for off in range(0, n, ec.chunk_size):
+            piece = prompt[off:off + ec.chunk_size]
+            valid = len(piece)
+            if valid < ec.chunk_size:
+                piece = np.pad(piece, (0, ec.chunk_size - valid))
+            last = off + valid >= n
+            logits, self.state = self.prefill_fn(
+                self.params, self.state, jnp.asarray(piece[None]),
+                jnp.int32(slot), jnp.int32(off), jnp.int32(valid))
+            self.trace.append(TraceEvent(
+                kind="prefill_chunk", rid=req.rid, slot=slot,
+                chunk=valid, past_len=off, last=last))
+        # the request's first token is sampled from the final prefill logits
+        self._rng, sub = jax.random.split(self._rng)
+        first = int(sample(logits[None], ec.temperature, sub)[0])
+        now = self._now()
+        res.first_token = now
+        res.tokens.append(first)
+        self.state["tok"] = self.state["tok"].at[slot].set(first)
+        self.running[slot] = req
+        self.results[req.rid] = res
+        if req.max_new <= 1 or (ec.eos_id is not None and first == ec.eos_id):
+            res.finished = now
+            self._free(slot)
+
+    def _free(self, slot: int) -> None:
+        del self.running[slot]
+        self.state = self.cache.reset_slot(self.state, slot)
+        self.free_slots.append(slot)
+
+    # ------------------------------------------------------------------
+    # one engine step: admissions, then one fused decode block
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        ec = self.ec
+        while (self.free_slots and self.queue
+               and self.queue[0].arrival_step <= self.step_idx):
+            self._admit(self.queue.popleft(), self.free_slots.pop(0))
+        if self.running:
+            slots_meta = []
+            active = np.zeros((ec.max_slots,), bool)
+            remaining = np.zeros((ec.max_slots,), np.int32)
+            for slot, req in sorted(self.running.items()):
+                budget = req.max_new - len(self.results[req.rid].tokens)
+                slots_meta.append((req.rid, int(self.state["pos"][slot]),
+                                   budget))
+                active[slot] = True
+                remaining[slot] = budget
+            slots_meta = tuple(slots_meta)
+            self._rng, sub = jax.random.split(self._rng)
+            toks, produced, _, self.state = self.decode_fn(
+                self.params, self.state, jnp.asarray(active),
+                jnp.asarray(remaining), sub)
+            jax.block_until_ready(toks)
+            self.trace.append(TraceEvent(
+                kind="decode_block", n_steps=ec.decode_block,
+                slots=slots_meta))
+            self._harvest(np.asarray(toks), np.asarray(produced))
+        self.step_idx += 1
+
+    def _harvest(self, toks: np.ndarray, produced: np.ndarray) -> None:
+        """Collect the block's sampled tokens; free completed slots."""
+        now = self._now()
+        for slot, req in list(self.running.items()):
+            res = self.results[req.rid]
+            for t in range(toks.shape[0]):
+                if not produced[t, slot]:
+                    break
+                res.tokens.append(int(toks[t, slot]))
+            hit_eos = (self.ec.eos_id is not None and res.tokens
+                       and res.tokens[-1] == self.ec.eos_id)
+            if len(res.tokens) >= req.max_new or hit_eos:
+                res.finished = now
+                self._free(slot)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: Optional[Sequence[Request]] = None,
+            max_steps: int = 100_000) -> List[RequestResult]:
+        """Drain the queue (plus ``requests``) to completion."""
+        for r in requests or ():
+            self.submit(r)
+        steps = 0
+        while not self.done:
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("engine did not drain (scheduler stuck?)")
+        return [self.results[rid] for rid in sorted(self.results)]
+
+    # ------------------------------------------------------------------
+    def reset_metrics(self) -> None:
+        """Clear results/trace/clock while keeping compiled functions and
+        cache buffers — call after a warm-up run so measured wall-clock
+        excludes one-time XLA compilation."""
+        if not self.done:
+            raise RuntimeError("reset_metrics with requests in flight")
+        self.results.clear()
+        self.trace.clear()
+        self._arrivals.clear()
+        self.step_idx = 0
+        self._t0 = time.perf_counter()
+
+    def warmup(self) -> None:
+        """Compile prefill + decode paths with a throwaway request."""
+        prompt_len = min(self.ec.chunk_size,
+                         self.ec.max_len - self.ec.decode_block - 2)
+        self.run([Request(rid=-1, prompt=[0] * max(prompt_len, 1),
+                          max_new=self.ec.decode_block + 1)])
+        self.reset_metrics()
+
+    def aggregate_tps(self) -> float:
+        """Measured generated-tokens/s over the whole run."""
+        finished = [r for r in self.results.values() if r.finished > 0]
+        if not finished:
+            return 0.0
+        total = sum(len(r.tokens) for r in finished)
+        span = max(r.finished for r in finished)
+        return total / max(span, 1e-9)

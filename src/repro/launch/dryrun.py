@@ -61,7 +61,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
 
-            cost = compiled.cost_analysis() or {}
+            cost = hlo_mod.cost_analysis_dict(compiled)
             mem = compiled.memory_analysis()
             hlo_text = compiled.as_text()
             # loop-folded per-chip cost (cost_analysis counts while bodies

@@ -1,11 +1,20 @@
-"""Serving runtime: sharded prefill / decode steps + batched generation.
+"""Legacy lockstep serving façade (single-shot, whole-batch generation).
 
-Implements the paper's serving-side optimization menu for real:
-* chunked prefill (§3.3.4) — prompt split into equal chunks reusing the cache
-* quantized KV cache (§3.3.3) — int8 cache buffers (dequant on read is
-  implicit: attention math reads the cache cast back to activation dtype)
-* fused attention (§3.2.1) — the Pallas flash kernel in the prefill path
-* greedy / temperature sampling, batched requests
+New code should use the continuous-batching engine (``repro.engine``):
+slot-paged KV cache, chunked-prefill admission, fused multi-token decode
+and per-request metrics.  This module is kept as a thin backwards-
+compatible wrapper for two reasons:
+
+* model families the engine does not serve yet (SSM / RG-LRU hybrids,
+  MLA latent caches, local windows, encoder-decoder) still generate
+  through the lockstep path;
+* it is the numerical reference the engine is tested against
+  (``tests/test_engine.py``).
+
+It retains the paper's serving-side optimization menu: chunked prefill
+(§3.3.4), quantized int8 KV cache (§3.3.3), fused attention (§3.2.1),
+greedy / temperature sampling.  Sampling and KV-dtype helpers are shared
+with the engine (``repro.engine.sampling``).
 """
 from __future__ import annotations
 
@@ -14,11 +23,15 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.base import ArchConfig
 from repro import models
+from repro.engine.sampling import sample, kv_jnp_dtype
 from . import sharding as S
+
+__all__ = ["ServeConfig", "make_serve_fns", "Server", "sample",
+           "kv_jnp_dtype"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,17 +43,11 @@ class ServeConfig:
     temperature: float = 0.0              # 0 = greedy
 
 
-def kv_jnp_dtype(name: str):
-    return {"bf16": jnp.bfloat16, "fp16": jnp.float16,
-            "int8": jnp.int8, "fp32": jnp.float32}[name]
-
-
 def make_serve_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
                    sc: ServeConfig):
     """Returns jit'd (prefill_fn, decode_fn, state_shardings)."""
     from repro.models import act_sharding
     act_sharding.set_mesh(mesh, policy.dp_axes, policy.tp_axis)
-    kvd = kv_jnp_dtype(sc.kv_dtype)
     state_sh = S.decode_state_shardings(cfg, sc.batch, sc.max_len, mesh,
                                         policy)
     param_sh = S.param_shardings(cfg, mesh, policy)
@@ -71,14 +78,13 @@ def make_serve_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
     return prefill_fn, decode_fn, {"params": param_sh, "state": state_sh}
 
 
-def sample(logits: jax.Array, temperature: float, rng: jax.Array) -> jax.Array:
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(rng, logits / temperature).astype(jnp.int32)
-
-
 class Server:
-    """Batched auto-regressive generation driver (host-side loop)."""
+    """Lockstep batched generation driver (host-side per-token loop).
+
+    One-request-façade semantics: all sequences in the batch prefill and
+    decode in lockstep and finish together.  For continuous traffic use
+    ``repro.engine.Engine``.
+    """
 
     def __init__(self, cfg: ArchConfig, params, mesh: Mesh,
                  policy: S.ShardingPolicy, sc: ServeConfig):

@@ -1,0 +1,184 @@
+"""Continuous-batching engine: slot lifecycle, numerical equivalence with
+the legacy lockstep Server, and the analytical twin's forecasts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import Forecaster, WorkloadModel, hardware
+from repro.configs.base import Variant
+from repro.engine import (Engine, EngineConfig, ForecastTwin, PagedKVCache,
+                          Request, engine_supported)
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params
+from repro.runtime import Server, ServeConfig, ShardingPolicy
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return configs.reduced(configs.get("qwen2-7b"))
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, n, length, seed=1):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (n, length), 0,
+                              cfg.vocab_size, jnp.int32)
+    return np.asarray(toks)
+
+
+def test_engine_support_matrix():
+    assert engine_supported(configs.get("qwen2-7b"))
+    assert engine_supported(configs.get("qwen2-moe-a2.7b"))
+    assert not engine_supported(configs.get("falcon-mamba-7b"))   # ssm
+    assert not engine_supported(configs.get("recurrentgemma-2b"))  # hybrid
+    assert not engine_supported(configs.get("whisper-base"))       # encdec
+    with pytest.raises(ValueError, match="does not support"):
+        PagedKVCache(configs.get("falcon-mamba-7b"), 2, 64)
+
+
+def test_slot_reuse_after_completion(mesh, cfg, params):
+    """5 requests through 2 slots: slots free on completion and are
+    reused by queued admissions; cursors reset for every reuse."""
+    prompts = _prompts(cfg, 5, 16)
+    reqs = [Request(rid=i, prompt=list(prompts[i]), max_new=4)
+            for i in range(5)]
+    with mesh:
+        eng = Engine(cfg, params, mesh, ShardingPolicy(),
+                     EngineConfig(max_slots=2, max_len=64, chunk_size=8,
+                                  decode_block=2))
+        results = eng.run(reqs)
+    assert len(results) == 5
+    assert all(len(r.tokens) == 4 for r in results)
+    admissions = [e for e in eng.trace if e.kind == "prefill_chunk"
+                  and e.past_len == 0]
+    assert len(admissions) == 5
+    slots_used = {e.slot for e in admissions}
+    assert slots_used == {0, 1}          # only 2 physical slots served all 5
+    # every slot was freed at the end: cursors back to zero for reuse
+    np.testing.assert_array_equal(np.asarray(eng.state["pos"]), 0)
+    assert eng.done and sorted(eng.free_slots) == [0, 1]
+
+
+def test_mid_flight_free_and_admission(mesh, cfg, params):
+    """A short request finishing mid-run frees its slot while the long
+    request keeps decoding, and the queued request joins it — the defining
+    behaviour of continuous batching."""
+    prompts = _prompts(cfg, 3, 16)
+    reqs = [Request(rid=0, prompt=list(prompts[0]), max_new=16),
+            Request(rid=1, prompt=list(prompts[1]), max_new=3),
+            Request(rid=2, prompt=list(prompts[2]), max_new=6)]
+    with mesh:
+        eng = Engine(cfg, params, mesh, ShardingPolicy(),
+                     EngineConfig(max_slots=2, max_len=64, chunk_size=16,
+                                  decode_block=2))
+        results = eng.run(reqs)
+    assert [len(r.tokens) for r in results] == [16, 3, 6]
+    blocks = [e for e in eng.trace if e.kind == "decode_block"]
+    cohorts = [{rid for rid, _, _ in e.slots} for e in blocks]
+    assert {0, 1} in cohorts              # 0 and 1 decoded together...
+    assert {0, 2} in cohorts              # ...then 2 took 1's slot mid-run
+
+
+def test_engine_matches_legacy_server(mesh, cfg, params):
+    """Greedy engine decode is numerically identical to the legacy
+    lockstep Server.generate on the same prompts."""
+    prompts = _prompts(cfg, 2, 16)
+    n_new = 6
+    with mesh:
+        srv = Server(cfg, params, mesh, ShardingPolicy(),
+                     ServeConfig(batch=2, max_len=64))
+        legacy, _ = srv.generate(jnp.asarray(prompts), n_new=n_new)
+        eng = Engine(cfg, params, mesh, ShardingPolicy(),
+                     EngineConfig(max_slots=2, max_len=64, chunk_size=16,
+                                  decode_block=4))   # 6 = 4 + 2: masks hit
+        results = eng.run([Request(rid=i, prompt=list(prompts[i]),
+                                   max_new=n_new) for i in range(2)])
+    engine_toks = np.stack([r.tokens for r in results])
+    np.testing.assert_array_equal(np.asarray(legacy), engine_toks)
+
+
+def test_engine_rejects_invalid_requests(mesh, cfg, params):
+    with mesh:
+        eng = Engine(cfg, params, mesh, ShardingPolicy(),
+                     EngineConfig(max_slots=1, max_len=32, chunk_size=8,
+                                  decode_block=2))
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(Request(rid=0, prompt=[1, 2], max_new=0))
+    with pytest.raises(ValueError, match="exceeds slot page"):
+        eng.submit(Request(rid=1, prompt=[1] * 30, max_new=8))
+    with pytest.raises(ValueError, match="empty prompt"):
+        Request(rid=2, prompt=[], max_new=4)
+
+
+def test_engine_int8_kv_runs(mesh, cfg, params):
+    prompts = _prompts(cfg, 2, 16)
+    with mesh:
+        eng = Engine(cfg, params, mesh, ShardingPolicy(),
+                     EngineConfig(max_slots=2, max_len=64, chunk_size=8,
+                                  decode_block=2, kv_dtype="int8"))
+        results = eng.run([Request(rid=i, prompt=list(prompts[i]),
+                                   max_new=4) for i in range(2)])
+    assert eng.state["cache_k"].dtype == jnp.int8
+    assert all(len(r.tokens) == 4 for r in results)
+
+
+# ---------------------------------------------------------------------------
+# analytical twin
+# ---------------------------------------------------------------------------
+
+def test_decode_totals_mixed_uniform_identity():
+    """Mixed-batch decode reduces exactly to the paper's uniform model."""
+    wm = WorkloadModel(configs.get("llama2-7b"), Variant(fused=True))
+    for batch, past in [(1, 17), (2, 64), (4, 333)]:
+        mixed = wm.decode_totals_mixed([past] * batch)
+        direct = wm.decode_step(batch, past).totals("decode")
+        for f in ("ops", "mem_rd", "mem_wr", "kv_rd", "kv_wr", "dispatches"):
+            a, b = getattr(mixed, f), getattr(direct, f)
+            assert a == pytest.approx(b, rel=1e-9), (batch, past, f)
+
+
+def test_decode_totals_mixed_heterogeneous_between_bounds():
+    wm = WorkloadModel(configs.get("llama2-7b"), Variant())
+    lo = wm.decode_step(2, 10).totals("decode").mem_total
+    hi = wm.decode_step(2, 100).totals("decode").mem_total
+    mid = wm.decode_totals_mixed([10, 100]).mem_total
+    assert lo < mid < hi
+
+
+def test_twin_forecast_matches_single_request_tpot(mesh, cfg, params):
+    """At batch=1 the twin's per-request TPOT forecast must agree with the
+    paper's single-request analytical TPOT over the same KV range."""
+    prompt_len, n_new = 16, 6
+    prompts = _prompts(cfg, 1, prompt_len)
+    with mesh:
+        eng = Engine(cfg, params, mesh, ShardingPolicy(),
+                     EngineConfig(max_slots=1, max_len=64,
+                                  chunk_size=prompt_len, decode_block=2))
+        eng.run([Request(rid=0, prompt=list(prompts[0]), max_new=n_new)])
+    twin = ForecastTwin(cfg, hardware.TPU_V5E, Variant(), em=0.8)
+    fcst = twin.replay(eng.trace)
+    rf = fcst.requests[0]
+    assert rf.n_tokens == n_new
+    # exact reference: mean analytical TPOT across the decode steps the
+    # engine actually ran (past = prompt_len .. prompt_len + n_new - 2)
+    fc = Forecaster(hardware.TPU_V5E)
+    wm = WorkloadModel(cfg, Variant())
+    ref = np.mean([fc.tpot(wm.decode_step(1, p), em=0.8)
+                   for p in range(prompt_len, prompt_len + n_new - 1)])
+    assert rf.tpot == pytest.approx(ref, rel=1e-6)
+    # and within a loose band of the fixed-point single-request TPOT
+    fixed = fc.tpot(wm.decode_step(1, prompt_len), em=0.8)
+    assert rf.tpot == pytest.approx(fixed, rel=0.25)
+    # aggregate forecast covers every generated token
+    assert fcst.total_tokens == n_new
+    assert fcst.tps == pytest.approx(n_new / fcst.total_time)

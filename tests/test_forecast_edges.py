@@ -1,0 +1,69 @@
+"""Forecaster edge paths: compute-bound TPOT (Eq. 4 with the ec term) and
+BMM tile-efficiency asymptotics (§5.4.1)."""
+import pytest
+
+from repro.core import (Forecaster, StatsDB, hardware,
+                        bmm_asymptotic_efficiency, bmm_tile_efficiency)
+
+
+def _decode_db(ops, mem, dispatches):
+    db = StatsDB()
+    db.set_phase("decode")
+    db.record("gemm", ops=ops, mem_rd=mem / 2, mem_wr=mem / 2,
+              dispatches=dispatches)
+    return db
+
+
+def test_tpot_default_is_memory_bound():
+    hw = hardware.TPU_V5E
+    db = _decode_db(ops=1e9, mem=8e9, dispatches=10)
+    fc = Forecaster(hw)
+    expected = 8e9 / hw.bw + 10 * hw.dispatch_latency_s
+    assert fc.tpot(db) == pytest.approx(expected, rel=1e-12)
+
+
+def test_tpot_ec_switches_to_compute_bound():
+    """With the optional ec term, TPOT = max(t_c, t_m) + t_d — a huge ops
+    total must dominate the tiny memory term."""
+    hw = hardware.TPU_V5E
+    db = _decode_db(ops=1e18, mem=16.0, dispatches=3)
+    fc = Forecaster(hw)
+    t_c = 1e18 / hw.flops
+    t_d = 3 * hw.dispatch_latency_s
+    got = fc.tpot(db, ec=1.0)
+    assert got == pytest.approx(t_c + t_d, rel=1e-12)
+    assert got > fc.tpot(db)                       # memory-only path is tiny
+    # halving compute efficiency doubles the compute term
+    assert fc.tpot(db, ec=0.5) == pytest.approx(2 * t_c + t_d, rel=1e-12)
+    # ec supplied but memory still dominates -> unchanged from default
+    db_m = _decode_db(ops=1.0, mem=8e9, dispatches=0)
+    assert fc.tpot(db_m, ec=1.0) == pytest.approx(fc.tpot(db_m), rel=1e-12)
+
+
+def test_tps_inverts_tpot_on_compute_bound_path():
+    hw = hardware.TPU_V5E
+    db = _decode_db(ops=1e18, mem=16.0, dispatches=0)
+    fc = Forecaster(hw)
+    assert fc.tps(db, ec=1.0) == pytest.approx(1.0 / fc.tpot(db, ec=1.0))
+
+
+# ---------------------------------------------------------------------------
+# BMM tile-padding efficiency asymptote (Fig. 8 / §5.4.1)
+# ---------------------------------------------------------------------------
+
+def test_bmm_tile_efficiency_saturates_at_multiples():
+    assert bmm_tile_efficiency(128, 128) == 1.0
+    assert bmm_tile_efficiency(129, 128) == pytest.approx(129 / 256)
+
+
+def test_bmm_asymptotic_efficiency_converges_to_one():
+    tile = 128
+    short = bmm_asymptotic_efficiency(1, 10, tile)
+    mid = bmm_asymptotic_efficiency(1, 1_000, tile)
+    long = bmm_asymptotic_efficiency(1, 100_000, tile)
+    assert short < mid < long < 1.0
+    assert long > 0.995
+    # the mean can never beat perfect tiling nor fall under the worst tile
+    assert 1.0 / tile <= short <= 1.0
+    # prompt already huge => every step is near-perfect regardless of n_new
+    assert bmm_asymptotic_efficiency(10_000_000, 100, tile) > 0.999

@@ -1,7 +1,9 @@
 """Property-based tests (hypothesis) on LIFE's analytical invariants."""
-import hypothesis
-from hypothesis import given, settings, strategies as st
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (pip install hypothesis)")
+from hypothesis import given, settings, strategies as st
 
 from repro.core import (WorkloadModel, Forecaster, StatsDB, hardware,
                         bmm_tile_efficiency, bmm_asymptotic_efficiency,

@@ -35,12 +35,13 @@ def test_a2a_falls_back_without_mesh():
 _SUBPROC = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")   # never probe TPU/GPU here
 import jax, jax.numpy as jnp
 from repro import configs
+from repro.launch.mesh import _make_mesh
 from repro.models import blocks as B, act_sharding, init_params
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = _make_mesh((2, 4), ("data", "model"))
 cfg = configs.reduced(configs.get("qwen2-moe-a2.7b"), n_layers=1,
                       n_experts=8, top_k=2)
 params = init_params(cfg, jax.random.PRNGKey(0))
