@@ -8,3 +8,9 @@ LLAMA2 = get("llama2-7b")
 
 def wm(variant="bf16-bf16", arch=None):
     return WorkloadModel(arch or LLAMA2, PAPER_VARIANTS[variant])
+
+
+def scenario(variant="bf16-bf16", arch="llama2-7b", **traffic):
+    """Llama2-7B Scenario for the paper-table benchmarks (api front door)."""
+    from repro.api import Scenario
+    return Scenario(model=arch, variant=variant, **traffic)

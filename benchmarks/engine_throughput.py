@@ -1,12 +1,14 @@
-"""Engine throughput: measured continuous-batching TPS vs the LIFE twin.
+"""Engine throughput: measured continuous-batching TPS vs the LIFE twin,
+via the Scenario→Report API.
 
 Runs the serving engine on CPU (reduced model) across several
-batch/traffic settings, then replays each run's own scheduler trace
-through the analytical twin.  Two forecasts are printed per setting:
+batch/traffic settings (``api.measure``), then replays each run's own
+scheduler trace through the analytical twin
+(``api.forecast(..., trace=measured.trace)``).  Two forecasts per setting:
 
 * ``forecast_tps_cpu``  — twin of the REDUCED model (the one actually
   measured) on the paper's Ryzen CPU spec: the apples-to-apples
-  comparison for the measured host numbers;
+  comparison, diffed against the measured report with ``api.compare``;
 * ``forecast_tps_v5e``  — twin of the FULL model on the TPU v5e target,
   the deployment forecast the ROADMAP cares about.
 
@@ -17,20 +19,16 @@ costs the schedule's useful work (active slots, valid chunk tokens); the
 measured engine also pays for static-shape padding (masked slots, padded
 chunk tails) — see the scope note in ``repro.engine.forecast_twin``.
 
+Note: the API applies ``em`` uniformly to prefill and decode memory
+terms, so forecast TTFT/TPS here sit ~1/em above the pre-API version of
+this benchmark, which ran the twin's prefill at em=1.0.
+
     PYTHONPATH=src python -m benchmarks.engine_throughput
 """
-import time
+import dataclasses
 
-import jax
-import jax.numpy as jnp
-
-from repro import configs
+from repro import api
 from repro.configs.base import Variant
-from repro.core import hardware
-from repro.engine import Engine, EngineConfig, ForecastTwin, Request
-from repro.models import init_params
-from repro.runtime import ShardingPolicy
-from repro.launch.mesh import make_host_mesh
 
 ARCH = "qwen2-7b"
 PROMPT, NEW = 32, 16
@@ -45,40 +43,29 @@ SETTINGS = [
 
 
 def rows():
-    full = configs.get(ARCH)
-    cfg = configs.reduced(full)
-    mesh = make_host_mesh()
-    params = init_params(cfg, jax.random.PRNGKey(0))
     out = []
     for label, n_req, slots, block in SETTINGS:
-        prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                     (n_req, PROMPT), 0, cfg.vocab_size,
-                                     jnp.int32)
         # mixed budgets so completions (and slot frees) happen mid-flight
-        reqs = [Request(rid=i, prompt=list(map(int, prompts[i])),
-                        max_new=NEW - 3 * (i % 3)) for i in range(n_req)]
-        ec = EngineConfig(max_slots=slots, max_len=PROMPT + NEW + 8,
-                          chunk_size=16, decode_block=block)
-        with mesh:
-            eng = Engine(cfg, params, mesh, ShardingPolicy(), ec)
-            eng.warmup()          # jit-compile outside the measured window
-            t0 = time.perf_counter()
-            results = eng.run(reqs)
-            wall = time.perf_counter() - t0
-        variant = Variant(kv_dtype=ec.kv_dtype, fused=True)
-        cpu = ForecastTwin(cfg, hardware.RYZEN_9_HX370_CPU, variant,
-                           em=0.8).replay(eng.trace)
-        v5e = ForecastTwin(full, hardware.TPU_V5E, variant,
-                           em=0.8).replay(eng.trace)
-        toks = sum(len(r.tokens) for r in results)
+        scn = api.Scenario(
+            model=ARCH, variant=Variant(name="bf16-fused", fused=True),
+            reduced=True, batch=slots, prompt_len=PROMPT, gen_len=NEW,
+            gen_lens=tuple(NEW - 3 * (i % 3) for i in range(n_req)),
+            chunk=16, decode_block=block)
+        measured = api.measure(scn)
+        cpu = api.forecast(scn, "cpu", em=0.8, trace=measured.trace)
+        v5e = api.forecast(dataclasses.replace(scn, reduced=False),
+                           "tpu-v5e", em=0.8, trace=measured.trace)
+        delta = api.compare(cpu, measured)
         out.append((f"engine/{label}", {
             "requests": n_req, "slots": slots,
-            "tokens": toks, "wall_s": round(wall, 2),
-            "measured_tps_host": round(eng.aggregate_tps(), 1),
+            "tokens": measured.extras["tokens"],
+            "wall_s": round(measured.extras["wall_s"], 2),
+            "measured_tps_host": round(measured.tps, 1),
             "forecast_tps_cpu": round(cpu.tps, 1),
+            "cpu_twin_tps_ratio": round(delta.tps.ratio, 2),
             "forecast_tps_v5e": round(v5e.tps, 1),
-            "forecast_ttft_ms_v5e": round(v5e.mean_ttft * 1e3, 2),
-            "forecast_tpot_ms_v5e": round(v5e.mean_tpot * 1e3, 3),
+            "forecast_ttft_ms_v5e": round(v5e.ttft_s * 1e3, 2),
+            "forecast_tpot_ms_v5e": round(v5e.tpot_s * 1e3, 3),
         }))
     return out
 

@@ -33,6 +33,13 @@ MODULES = [
 
 def main() -> None:
     only = sys.argv[1:] or None
+    if only:
+        unknown = [m for m in only if m not in MODULES]
+        if unknown:
+            print(f"unknown benchmark module(s): {', '.join(unknown)}; "
+                  f"known: {', '.join(MODULES)}", file=sys.stderr)
+            sys.exit(2)
+    failed = []
     print("name,us_per_call,derived")
     for modname in MODULES:
         if only and modname not in only:
@@ -43,12 +50,17 @@ def main() -> None:
             rows = mod.rows()
         except Exception as e:  # surface but keep the suite going
             print(f"{modname},0,\"ERROR: {type(e).__name__}: {e}\"")
+            failed.append(modname)
             continue
         elapsed_us = (time.perf_counter() - t0) * 1e6
         per_row = elapsed_us / max(len(rows), 1)
         for name, derived in rows:
             payload = json.dumps(derived, separators=(",", ":")).replace('"', "'")
             print(f"{name},{per_row:.1f},\"{payload}\"")
+    if failed:
+        print(f"{len(failed)} benchmark module(s) failed: "
+              f"{', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

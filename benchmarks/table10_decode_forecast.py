@@ -1,6 +1,7 @@
-"""Paper Table 10: forecast vs measured decode TPS."""
-from repro.core import Forecaster, hardware
-from .common import wm
+"""Paper Table 10: forecast vs measured decode TPS — via the Scenario→
+Report API (decode KV length pinned with ``past_lens``)."""
+from repro import api
+from .common import scenario
 
 CPU = {32: (1.59, 1.87), 64: (1.64, 1.86), 128: (1.30, 1.85),
        256: (1.74, 1.84), 512: (1.11, 1.80), 1024: (0.87, 1.74),
@@ -10,18 +11,16 @@ V100 = {512: (40.0, 32.6), 1024: (36.9, 30.3), 2048: (32.1, 26.7)}
 
 def rows():
     out = []
-    fc = Forecaster(hardware.RYZEN_9_HX370_CPU)
-    m = wm("bf16-bf16")
     for p, (meas, paper_fc) in CPU.items():
-        tps = fc.tps(m.decode_step(1, p), em=0.10)
+        r = api.forecast(scenario("bf16-bf16", past_lens=(p,), gen_len=1),
+                         "cpu", em=0.10)
         out.append((f"table10/cpu/p{p}", {
-            "tps_forecast_em10": round(tps, 2), "paper_forecast": paper_fc,
+            "tps_forecast_em10": round(r.tps, 2), "paper_forecast": paper_fc,
             "paper_measured": meas}))
-    fc = Forecaster(hardware.NVIDIA_V100)
-    m = wm("fp16-fp16")
     for p, (meas, paper_fc) in V100.items():
-        tps = fc.tps(m.decode_step(1, p), em=0.50)
+        r = api.forecast(scenario("fp16-fp16", past_lens=(p,), gen_len=1),
+                         "v100", em=0.50)
         out.append((f"table10/v100/p{p}", {
-            "tps_forecast_em50": round(tps, 1), "paper_forecast": paper_fc,
+            "tps_forecast_em50": round(r.tps, 1), "paper_forecast": paper_fc,
             "paper_measured": meas}))
     return out

@@ -1,6 +1,8 @@
-"""Paper Table 6: forecast vs measured TTFT (3 hardware platforms)."""
-from repro.core import Forecaster, hardware
-from .common import wm
+"""Paper Table 6: forecast vs measured TTFT (3 hardware platforms) —
+driven by the Scenario→Report API (dispatch excluded, Table 6 convention).
+"""
+from repro import api
+from .common import scenario
 
 CPU_MEASURED = {32: (1.85, 0.703), 64: (3.34, 0.779), 128: (6.72, 0.775),
                 256: (14.61, 0.717), 512: (31.03, 0.682),
@@ -10,24 +12,21 @@ V100_MEASURED = {512: (0.11, 0.503), 1024: (0.2, 0.563), 2048: (0.4, 0.586)}
 
 def rows():
     out = []
-    fc = Forecaster(hardware.RYZEN_9_HX370_CPU)
-    m = wm("bf16-bf16")
     for p, (meas, eff) in CPU_MEASURED.items():
-        f = fc.phase(m.prefill(1, p).totals("prefill"), include_dispatch=False)
-        implied = f.latency / meas
+        r = api.forecast(scenario("bf16-bf16", prompt_len=p, gen_len=1),
+                         "cpu", include_dispatch=False)
         out.append((f"table6/cpu/p{p}", {
-            "forecast_100pct_s": round(f.latency, 2),
-            "forecast_50pct_s": round(f.latency * 2, 2),
+            "forecast_100pct_s": round(r.ttft_s, 2),
+            "forecast_50pct_s": round(r.ttft_s * 2, 2),
             "paper_measured_s": meas,
-            "implied_efficiency": round(implied, 3),
+            "implied_efficiency": round(r.ttft_s / meas, 3),
             "paper_efficiency": eff}))
-    fc = Forecaster(hardware.NVIDIA_V100)
-    m = wm("fp16-fp16")
     for p, (meas, eff) in V100_MEASURED.items():
-        f = fc.phase(m.prefill(1, p).totals("prefill"), include_dispatch=False)
+        r = api.forecast(scenario("fp16-fp16", prompt_len=p, gen_len=1),
+                         "v100", include_dispatch=False)
         out.append((f"table6/v100/p{p}", {
-            "forecast_100pct_s": round(f.latency, 3),
+            "forecast_100pct_s": round(r.ttft_s, 3),
             "paper_measured_s": meas,
-            "implied_efficiency": round(f.latency / meas, 3),
+            "implied_efficiency": round(r.ttft_s / meas, 3),
             "paper_efficiency": eff}))
     return out

@@ -1,33 +1,40 @@
 """Hardware what-if analysis across the whole assigned architecture pool —
-LIFE as a deployment-planning tool (paper §5.1.2 generalized):
+LIFE as a deployment-planning tool (paper §5.1.2 generalized), driven by
+the Scenario→Report API:
 
 * per-arch decode TPS on CPU / V100 / TPU v5e at realistic efficiencies
 * compute-vs-memory boundary (t_c/t_m) per arch at 4k prefill
-* multi-chip scaling: LIFE-distributed forecast of a TP=8 v5e slice
+* a synthetic TOPS×BW sweep (paper Fig. 5 style) for one workload
+* multi-chip scaling: LIFE-distributed forecast of a TP slice (power-user
+  path — `repro.core` stays public underneath the API)
 
     PYTHONPATH=src python examples/forecast_hardware.py
 """
-from repro import configs
+from repro import api, configs
 from repro.configs.base import Variant
-from repro.core import (WorkloadModel, Forecaster, hardware,
-                        DistributedForecaster, ShardingPlan)
+from repro.core import (WorkloadModel, DistributedForecaster, ShardingPlan)
+
+INT4 = Variant(name="int4-fused", dtype_w="int4", fused=True)
 
 print(f"{'arch':20s} {'params':>8s} | {'CPU tps':>8s} {'V100 tps':>9s} "
-      f"{'v5e tps':>8s} | {'tc/tm @4k prefill':>18s}")
+      f"{'v5e tps':>8s} | {'TTFT bound @4k':>14s}")
 for name in configs.ASSIGNED:
-    cfg = configs.get(name)
-    wm = WorkloadModel(cfg, Variant(dtype_w="int4", fused=True))
-    dec = wm.decode_step(1, 2048)
-    pre = wm.prefill(1, 4096)
-    row = [f"{name:20s}", f"{cfg.param_count()/1e9:7.1f}B |"]
-    for hw, em in ((hardware.RYZEN_9_HX370_CPU, 0.5),
-                   (hardware.NVIDIA_V100, 0.5), (hardware.TPU_V5E, 0.8)):
-        fc = Forecaster(hw)
-        row.append(f"{fc.tps(dec, em=em):8.1f}")
-    fc = Forecaster(hardware.TPU_V5E)
-    ratio = fc.phase(pre.totals('prefill')).ratio
-    row.append(f" | {ratio:17.2f}")
+    scn = api.Scenario(model=name, variant=INT4, prompt_len=4096,
+                       gen_len=128, past_lens=(2048,))
+    row = [f"{name:20s}",
+           f"{scn.arch.param_count()/1e9:7.1f}B |"]
+    for hw, em in (("cpu", 0.5), ("v100", 0.5), ("v5e", 0.8)):
+        row.append(f"{api.forecast(scn, hw, em=em).tps:8.1f}")
+    r = api.forecast(scn, "v5e", em=0.8)
+    row.append(f" | {r.ttft_bound:>13s}")
     print(" ".join(row))
+
+print("\nTOPS×BW grid (llama2-7b int4, 2k prompt): TPS per synthetic device")
+scn = api.Scenario(model="llama2-7b", variant=INT4, prompt_len=2048,
+                   gen_len=256)
+for r in api.sweep(scn, tops=[10, 50, 200], bw=[100, 400, 1600], em=0.8):
+    print(f"  {r.hardware:24s} TTFT={r.ttft_s*1e3:9.1f}ms "
+          f"({r.ttft_bound:7s}-bound)  TPS={r.tps:7.1f}")
 
 print("\nMulti-chip (beyond-paper): llama3-405b decode on a v5e TP slice")
 cfg = configs.get("llama3-405b")

@@ -1,43 +1,38 @@
-"""Quickstart: LIFE in 40 lines.
+"""Quickstart: LIFE in 30 lines via the unified Scenario→Report API.
 
-Characterize an LLM inference workload analytically (no weights, no data,
-no accelerator) and forecast TTFT/TPOT/TPS on several hardware targets —
-the paper's core loop (Fig. 2).
+Declare an inference workload once, forecast TTFT/TPOT/TPS on any
+hardware (no weights, no data, no accelerator) — the paper's core loop
+(Fig. 2) as three calls: Scenario → forecast → Report.
 
     PYTHONPATH=src python examples/quickstart.py
+
+(The same pipeline is a CLI: ``python -m repro forecast --model llama2-7b
+--variant bf16-int4-kv4 --hw tpu-v5e --prompt 2048 --gen 256``.)
 """
-from repro.configs import get, PAPER_VARIANTS
-from repro.core import WorkloadModel, Forecaster, hardware
+import dataclasses
 
-# 1. pick a model + optimization variant (paper Table 3)
-arch = get("llama2-7b")
-variant = PAPER_VARIANTS["bf16-int4-kv4"]       # int4 weights, int4 KV, fused
-wm = WorkloadModel(arch, variant)
+from repro import api
 
-# 2. characterize: prefill a 2048-token prompt, then one decode step
-prefill = wm.prefill(batch=1, seq=2048)
-decode = wm.decode_step(batch=1, past_len=2048)
+# 1. declare the workload: model × optimization variant × traffic
+scn = api.Scenario(model="llama2-7b", variant="bf16-int4-kv4",
+                   prompt_len=2048, gen_len=256)
 
-t = prefill.totals("prefill")
-print(f"prefill 2048: {t.ops/1e12:.2f} TOPs, "
-      f"{t.mem_rd/1e9:.1f} GB read, {t.kv_wr/1e9:.2f} GB KV written, "
-      f"{t.dispatches} dispatches")
-d = decode.totals("decode")
-print(f"decode @2048: {d.ops/1e9:.2f} GOPs, {d.mem_total/1e9:.2f} GB touched")
+# 2. characterize: the Report carries the analytical workload per phase
+r = api.forecast(scn, "tpu-v5e", em=0.8)
+pre, dec = r.phases["prefill"], r.phases["decode"]
+print(f"prefill 2048: {pre.ops/1e12:.2f} TOPs, {pre.mem_rd/1e9:.1f} GB read, "
+      f"{pre.kv_wr/1e9:.2f} GB KV written, {pre.dispatches} dispatches")
+print(f"decode @2048: {dec.ops/1e9:.2f} GOPs, {dec.mem_total/1e9:.2f} GB touched")
 
-# 3. forecast on real hardware — only TOPS + bandwidth needed (Eqs. 1-6)
-for hw in (hardware.RYZEN_9_HX370_CPU, hardware.NVIDIA_V100,
-           hardware.TPU_V5E):
-    fc = Forecaster(hw)
-    ttft = fc.ttft(prefill)
-    tps = fc.tps(decode, em=0.8)
-    print(f"{hw.name:22s} TTFT={ttft.latency*1e3:9.1f} ms "
-          f"({ttft.bound}-bound)   TPS={tps:8.1f} @ em=0.8")
+# 3. forecast across hardware — only TOPS + bandwidth needed (Eqs. 1-6)
+for r in api.sweep(scn, ["cpu", "nvidia-v100", "v5e"], em=0.8):
+    print(f"{r.hardware:22s} TTFT={r.ttft_s*1e3:9.1f} ms "
+          f"({r.ttft_bound}-bound)   TPS={r.tps:8.1f} @ em=0.8")
 
-# 4. what would KV-cache compression buy on this device? (paper §3.3.3)
-base = WorkloadModel(arch, PAPER_VARIANTS["bf16-int4"])
-fc = Forecaster(hardware.TPU_V5E)
-tps_base = fc.tps(base.decode_step(1, 8192), em=0.8)
-tps_kv4 = fc.tps(wm.decode_step(1, 8192), em=0.8)
+# 4. what would KV-cache compression buy at 8k context? (paper §3.3.3)
+long_ctx = dataclasses.replace(scn, past_lens=(8192,))
+tps_base = api.forecast(dataclasses.replace(long_ctx, variant="bf16-int4"),
+                        "tpu-v5e", em=0.8).tps
+tps_kv4 = api.forecast(long_ctx, "tpu-v5e", em=0.8).tps
 print(f"\nKV4 compression at 8k context: {tps_base:.0f} -> {tps_kv4:.0f} "
       f"tok/s ({tps_kv4/tps_base:.2f}x)")

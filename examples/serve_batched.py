@@ -1,58 +1,42 @@
 """Serve a stream of requests through the continuous-batching engine —
-the paper's optimization menu live: chunked-prefill admission (§3.3.4),
-int8 slot-paged KV cache (§3.3.3), greedy and sampled decoding; the LIFE
-twin's forecast for the same schedule printed next to host wall-clock.
+the paper's optimization menu live, via the Scenario→Report API: chunked-
+prefill admission (§3.3.4), int8 slot-paged KV cache (§3.3.3), greedy and
+sampled decoding.  Each measured run's own scheduler trace is replayed
+through the analytical twin (``api.forecast(..., trace=...)``), and the
+measured-vs-forecast delta is one ``api.compare`` call.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
-import jax
-import jax.numpy as jnp
+import dataclasses
 
-from repro import configs
+from repro import api
 from repro.configs.base import Variant
-from repro.core import hardware
-from repro.engine import Engine, EngineConfig, ForecastTwin, Request
-from repro.models import init_params
-from repro.runtime import ShardingPolicy
-from repro.launch.mesh import make_host_mesh
 
-ARCH = "qwen2-7b"
-N_REQ, SLOTS, PROMPT, NEW = 6, 3, 64, 24
+# 6 requests over 3 slots with staggered budgets: slots free mid-flight
+# and are reused by the queue (continuous batching, not lockstep)
+BASE = api.Scenario(
+    model="qwen2-7b", reduced=True, batch=3, prompt_len=64, gen_len=24,
+    gen_lens=tuple(24 - 4 * (i % 3) for i in range(6)))
 
-full = configs.get(ARCH)
-cfg = configs.reduced(full)
-mesh = make_host_mesh()
-params = init_params(cfg, jax.random.PRNGKey(0))
-prompts = jax.random.randint(jax.random.PRNGKey(1), (N_REQ, PROMPT), 0,
-                             cfg.vocab_size, jnp.int32)
-
-
-def requests():
-    # staggered budgets: slots free mid-flight and are reused by the queue
-    return [Request(rid=i, prompt=list(map(int, prompts[i])),
-                    max_new=NEW - 4 * (i % 3)) for i in range(N_REQ)]
-
-
-for label, ec in [
-    ("baseline bf16-KV", EngineConfig(max_slots=SLOTS, max_len=128)),
-    ("chunked admission(16)", EngineConfig(max_slots=SLOTS, max_len=128,
-                                           chunk_size=16)),
-    ("int8 KV slots", EngineConfig(max_slots=SLOTS, max_len=128,
-                                   kv_dtype="int8")),
-    ("sampled T=0.8", EngineConfig(max_slots=SLOTS, max_len=128,
-                                   temperature=0.8)),
+for label, scn in [
+    ("baseline bf16-KV", BASE),
+    ("chunked admission(16)", dataclasses.replace(BASE, chunk=16)),
+    ("int8 KV slots", dataclasses.replace(
+        BASE, variant=Variant(name="bf16-int8kv", kv_dtype="int8",
+                              fused=True))),
+    ("sampled T=0.8", dataclasses.replace(BASE, temperature=0.8)),
 ]:
-    with mesh:
-        eng = Engine(cfg, params, mesh, ShardingPolicy(), ec)
-        eng.warmup()   # compile outside the measured tok/s
-        results = eng.run(requests())
-    twin = ForecastTwin(full, hardware.TPU_V5E,
-                        Variant(kv_dtype=ec.kv_dtype, fused=True), em=0.8)
-    fcst = twin.replay(eng.trace)
-    done = sum(len(r.tokens) for r in results)
-    print(f"{label:22s} -> {done} toks over {len(results)} reqs on "
-          f"{ec.max_slots} slots  host {eng.aggregate_tps():6.1f} tok/s  "
-          f"[twin→v5e: {fcst.tps:7.1f} tok/s, "
-          f"ttft {fcst.mean_ttft*1e3:5.1f}ms, "
-          f"tpot {fcst.mean_tpot*1e3:5.2f}ms]  first req: "
-          f"{results[0].tokens[:5]}")
+    measured = api.measure(scn)
+    # same-schedule forecasts: the reduced twin on the paper's CPU spec
+    # (apples-to-apples) and the FULL model on the deployment target
+    twin_cpu = api.forecast(scn, "cpu", em=0.8, trace=measured.trace)
+    twin_v5e = api.forecast(dataclasses.replace(scn, reduced=False),
+                            "tpu-v5e", em=0.8, trace=measured.trace)
+    delta = api.compare(twin_cpu, measured)
+    print(f"{label:22s} -> {measured.extras['tokens']} toks over "
+          f"{measured.extras['requests']} reqs on {scn.batch} slots  "
+          f"host {measured.tps:6.1f} tok/s "
+          f"(cpu-twin ratio {delta.tps.ratio:5.1f}x)  "
+          f"[full model→v5e: {twin_v5e.tps:7.1f} tok/s, "
+          f"ttft {twin_v5e.ttft_s*1e3:5.1f}ms, "
+          f"tpot {twin_v5e.tpot_s*1e3:5.2f}ms]")

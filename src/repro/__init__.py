@@ -1,1 +1,8 @@
-"""repro: LIFE (LLM Inference Forecast Engine) as a multi-pod JAX framework."""
+"""repro: LIFE (LLM Inference Forecast Engine) as a multi-pod JAX framework.
+
+Public front door: :mod:`repro.api` — declarative ``Scenario`` →
+``forecast``/``measure``/``sweep`` → ``Report`` (also a CLI:
+``python -m repro``).  ``repro.core`` and ``repro.engine`` stay public as
+the analytical and executable implementations underneath it.
+"""
+from . import api  # noqa: F401  (re-export: `import repro; repro.api...`)

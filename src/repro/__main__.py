@@ -1,0 +1,248 @@
+"""``python -m repro`` — the Scenario→Report pipeline as a CLI.
+
+    python -m repro forecast --model llama2-7b --variant bf16-int4-kv4 \\
+        --hw tpu-v5e --prompt 2048 --gen 256 [--json]
+    python -m repro measure  --model qwen2-7b --reduced --prompt 64 --gen 32
+    python -m repro sweep    --model llama2-7b --hw cpu,v100,v5e --prompt 512
+    python -m repro sweep    --model llama2-7b --tops 10,50,100 --bw 100,800
+    python -m repro compare  forecast.json measured.json
+
+Every subcommand prints a human table by default or the Report's stable
+JSON with ``--json`` (pipe into a file to feed ``compare`` later).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro import api
+from repro.core import hardware
+
+
+# ---------------------------------------------------------------------------
+# argument plumbing
+# ---------------------------------------------------------------------------
+
+def _csv(text: str) -> List[str]:
+    return [t for t in (s.strip() for s in text.split(",")) if t]
+
+
+def _csv_floats(text: str) -> List[float]:
+    return [float(t) for t in _csv(text)]
+
+
+def _csv_ints(text: str) -> List[int]:
+    return [int(t) for t in _csv(text)]
+
+
+def _add_scenario_args(p: argparse.ArgumentParser, measured: bool) -> None:
+    p.add_argument("--model", required=True,
+                   help="architecture name (see repro.configs.ARCHS)")
+    p.add_argument("--variant", default="bf16-bf16",
+                   help="optimization variant (paper Table 3 name)")
+    p.add_argument("--batch", type=int, default=1,
+                   help="concurrent sequences (engine slots)")
+    p.add_argument("--prompt", type=int, default=512, dest="prompt_len",
+                   help="prompt tokens per request")
+    p.add_argument("--gen", type=int, default=128, dest="gen_len",
+                   help="generation budget per request")
+    p.add_argument("--chunk", type=int, default=None,
+                   help="chunked-prefill chunk size (default: one shot)")
+    p.add_argument("--past-lens", type=_csv_ints, default=None,
+                   metavar="L1,L2,...",
+                   help="per-slot KV lengths of a mixed decode batch")
+    p.add_argument("--lora-rank", type=int, default=None,
+                   help="include a one-time LoRA merge of this rank")
+    p.add_argument("--reduced", action="store_true",
+                   help="use the CPU-sized reduced config")
+    if measured:
+        p.add_argument("--requests", type=int, default=None,
+                       dest="n_requests", help="offered requests (default: "
+                       "--batch)")
+        p.add_argument("--decode-block", type=int, default=8)
+        p.add_argument("--temperature", type=float, default=0.0)
+        p.add_argument("--seed", type=int, default=0)
+
+
+def _add_knob_args(p: argparse.ArgumentParser) -> None:
+    p.add_argument("--ec", type=float, default=1.0,
+                   help="prefill compute efficiency (Eq. 1)")
+    p.add_argument("--em", type=float, default=1.0,
+                   help="memory efficiency (Eqs. 2, 4)")
+    p.add_argument("--decode-ec", type=float, default=None,
+                   help="add the decode compute term at this efficiency")
+
+
+def _scenario(args: argparse.Namespace) -> api.Scenario:
+    kw = dict(model=args.model, variant=args.variant, batch=args.batch,
+              prompt_len=args.prompt_len, gen_len=args.gen_len,
+              chunk=args.chunk, past_lens=args.past_lens,
+              lora_rank=args.lora_rank, reduced=args.reduced)
+    for name in ("n_requests", "decode_block", "temperature", "seed"):
+        if hasattr(args, name):
+            kw[name] = getattr(args, name)
+    return api.Scenario(**kw)
+
+
+# ---------------------------------------------------------------------------
+# table rendering
+# ---------------------------------------------------------------------------
+
+def _fmt_si(v: float, unit: str) -> str:
+    for scale, prefix in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")):
+        if abs(v) >= scale:
+            return f"{v / scale:8.2f} {prefix}{unit}"
+    return f"{v:8.2f}  {unit}"
+
+
+def _print_report(r: api.Report) -> None:
+    scn = r.scenario
+    traffic = (f"batch={scn.get('batch')} prompt={scn.get('prompt_len')} "
+               f"gen={scn.get('gen_len')}")
+    if scn.get("chunk"):
+        traffic += f" chunk={scn['chunk']}"
+    if scn.get("past_lens"):
+        traffic += f" past_lens={scn['past_lens']}"
+    print(f"[{r.source}] {r.model} · {r.variant} · {r.hardware}  ({traffic})")
+    bound = f"  ({r.ttft_bound}-bound)" if r.ttft_bound else ""
+    print(f"  TTFT  {r.ttft_s * 1e3:12.2f} ms{bound}")
+    bound = f"  ({r.tpot_bound}-bound)" if r.tpot_bound else ""
+    print(f"  TPOT  {r.tpot_s * 1e3:12.3f} ms{bound}")
+    print(f"  TPS   {r.tps:12.1f} tok/s")
+    for name, ph in r.phases.items():
+        print(f"  {name:12s}{_fmt_si(ph.ops, 'OPs')}  "
+              f"{_fmt_si(ph.mem_total, 'B')}  {ph.dispatches:7d} dispatches")
+    knobs = f"  knobs: ec={r.ec:g} em={r.em:g}"
+    if r.extras:
+        knobs += "   " + " ".join(
+            f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in r.extras.items())
+    print(knobs)
+
+
+def _print_delta(d: api.ReportDelta) -> None:
+    print(f"{d.model} · {d.variant}:  forecast[{d.forecast_hw}] vs "
+          f"measured[{d.measured_hw}]")
+    print(f"  {'metric':8s}{'forecast':>14s}{'measured':>14s}{'ratio':>9s}")
+    for name, m, unit in (("TTFT", d.ttft, "ms"), ("TPOT", d.tpot, "ms"),
+                          ("TPS", d.tps, "tok/s")):
+        scale = 1e3 if unit == "ms" else 1.0
+        print(f"  {name:8s}{m.forecast * scale:12.3f} {unit:<3s}"
+              f"{m.measured * scale:10.3f} {unit:<3s}{m.ratio:9.2f}")
+
+
+def _emit(obj, as_json: bool, printer) -> None:
+    if as_json:
+        print(json.dumps(obj.to_dict() if hasattr(obj, "to_dict") else obj,
+                         indent=1))
+    else:
+        printer(obj)
+
+
+# ---------------------------------------------------------------------------
+# subcommands
+# ---------------------------------------------------------------------------
+
+def _cmd_forecast(args) -> int:
+    r = api.forecast(_scenario(args), args.hw, ec=args.ec, em=args.em,
+                     decode_ec=args.decode_ec)
+    _emit(r, args.json, _print_report)
+    return 0
+
+
+def _cmd_measure(args) -> int:
+    r = api.measure(_scenario(args), hw=args.hw)
+    _emit(r, args.json, _print_report)
+    return 0
+
+
+def _cmd_sweep(args) -> int:
+    if not args.hw and not (args.tops and args.bw):
+        print("sweep: pass --hw and/or both --tops and --bw",
+              file=sys.stderr)
+        return 2
+    reports = api.sweep(_scenario(args), args.hw or None, tops=args.tops,
+                        bw=args.bw, ec=args.ec, em=args.em,
+                        decode_ec=args.decode_ec)
+    if args.json:
+        print(json.dumps([r.to_dict() for r in reports], indent=1))
+        return 0
+    print(f"{'hardware':26s}{'TTFT ms':>12s}{'TPOT ms':>12s}{'TPS':>12s}"
+          f"  bound")
+    for r in reports:
+        print(f"{r.hardware:26s}{r.ttft_s * 1e3:12.2f}"
+              f"{r.tpot_s * 1e3:12.3f}{r.tps:12.1f}  {r.ttft_bound}")
+    return 0
+
+
+def _cmd_compare(args) -> int:
+    def load(path: str) -> api.Report:
+        with open(path) as f:
+            return api.Report.from_json(f.read())
+
+    d = api.compare(load(args.forecast), load(args.measured))
+    _emit(d, args.json, _print_delta)
+    return 0
+
+
+def _cmd_hardware(args) -> int:
+    for name in hardware.list():
+        spec = hardware.get(name)
+        print(f"{name:26s}{spec.tops:8.1f} TOPS{spec.bw_gbps:9.1f} GB/s")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="LIFE Scenario→Report forecasting pipeline")
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("forecast", help="analytical forecast (Eqs. 1-6)")
+    _add_scenario_args(p, measured=False)
+    _add_knob_args(p)
+    p.add_argument("--hw", required=True,
+                   help="hardware name or alias (see `hardware` subcommand)")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_forecast)
+
+    p = sub.add_parser("measure", help="run the real engine on the host")
+    _add_scenario_args(p, measured=True)
+    p.add_argument("--hw", default=None, help="label only; run is on host")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_measure)
+
+    p = sub.add_parser("sweep", help="forecast across hardware targets")
+    _add_scenario_args(p, measured=False)
+    _add_knob_args(p)
+    p.add_argument("--hw", type=_csv, default=[],
+                   help="comma-separated hardware names/aliases")
+    p.add_argument("--tops", type=_csv_floats, default=None,
+                   help="grid TOPS values (with --bw)")
+    p.add_argument("--bw", type=_csv_floats, default=None,
+                   help="grid bandwidth GB/s values (with --tops)")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_sweep)
+
+    p = sub.add_parser("compare",
+                       help="diff two report JSON files (forecast, measured)")
+    p.add_argument("forecast", help="forecast report JSON path")
+    p.add_argument("measured", help="measured report JSON path")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_compare)
+
+    p = sub.add_parser("hardware", help="list known hardware specs")
+    p.set_defaults(fn=_cmd_hardware)
+
+    args = parser.parse_args(argv)
+    try:
+        return args.fn(args)
+    except (KeyError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

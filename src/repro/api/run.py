@@ -1,0 +1,250 @@
+"""Scenario→Report runners: the analytical and measured pipelines.
+
+``forecast``  — paper Eqs. 1–6 on a :class:`~repro.core.hardware.HardwareSpec`
+                (pure analytical; no JAX, runs anywhere in milliseconds).
+``measure``   — the real continuous-batching engine on the host (or the
+                legacy lockstep server for families the engine doesn't
+                cover), returning the SAME Report schema.
+``sweep``     — ``forecast`` across a hardware list or a TOPS×BW grid.
+
+Both runners share the Scenario resolution and the analytical phase
+workload, so a forecast and a measurement of the same Scenario are
+directly :func:`repro.api.compare`-able.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Union
+
+from repro.core import hardware
+from repro.core.forecast import Forecaster
+from repro.core.hardware import HardwareSpec
+from repro.core.stats import Totals
+from repro.core.workload import WorkloadModel
+
+from .report import PhaseStats, Report
+from .scenario import Scenario
+
+HardwareLike = Union[str, HardwareSpec]
+
+
+def _phase_totals(wm: WorkloadModel, scn: Scenario) -> Dict[str, Totals]:
+    """Hardware-agnostic workload of the scenario's phases (Fig. 2-F)."""
+    if scn.chunk:
+        pre_db = wm.chunked_prefill(scn.batch, scn.prompt_len, scn.chunk)
+    else:
+        pre_db = wm.prefill(scn.batch, scn.prompt_len)
+    out = {"prefill": pre_db.totals("prefill")}
+    pls = scn.decode_past_lens
+    if len(set(pls)) == 1:
+        # uniform batch: take the paper's direct path so forecasts match the
+        # legacy Forecaster.tpot wiring bit-for-bit (tested)
+        out["decode"] = wm.decode_step(len(pls), pls[0]).totals("decode")
+    else:
+        out["decode"] = wm.decode_totals_mixed(pls)
+    if scn.lora_rank is not None:
+        out["lora_update"] = wm.lora_update().totals("lora_update")
+    return out
+
+
+def _phase_stats(totals: Dict[str, Totals]) -> Dict[str, PhaseStats]:
+    return {k: PhaseStats.from_totals(t) for k, t in totals.items()}
+
+
+def forecast(scenario: Scenario, hw: HardwareLike, *,
+             ec: float = 1.0, em: float = 1.0,
+             decode_ec: Optional[float] = None,
+             include_dispatch: bool = True,
+             trace: Optional[Sequence] = None) -> Report:
+    """Analytical forecast of ``scenario`` on ``hw`` (paper Eqs. 1–6).
+
+    ``ec``/``em`` are the prefill compute/memory operating efficiencies;
+    decode is memory-bound per the paper (pass ``decode_ec`` to add the
+    compute term as ``max(t_c, t_m)`` on very fast-memory hardware).
+    ``include_dispatch`` drops the per-kernel dispatch term from TTFT
+    (Table 6 convention).
+
+    ``trace`` replays a measured engine scheduler trace (e.g.
+    ``measure(...).trace``) through the analytical twin instead of the
+    uniform model — TTFT/TPOT/TPS then reflect the exact admission order,
+    slot reuse and mixed KV lengths the engine executed.  The knobs keep
+    one meaning either way: ``ec``/``em`` scale the prefill chunks and
+    ``em`` the decode steps of the replay just as they scale the uniform
+    phases.  ``phases`` and the ``*_bound`` verdicts always characterize
+    the declared (uniform) scenario, and ``include_dispatch`` only affects
+    that uniform TTFT — the replay prices every dispatch, like the engine
+    it mirrors.
+    """
+    spec = hardware.get(hw)
+    arch, variant = scenario.arch, scenario.variant_obj
+    wm = WorkloadModel(arch, variant)
+    fc = Forecaster(spec)
+    totals = _phase_totals(wm, scenario)
+
+    pre = fc.phase(totals["prefill"], ec=ec, em=em,
+                   include_dispatch=include_dispatch)
+    dec = totals["decode"]
+    tpot = fc.step_latency(dec, em=em, ec=decode_ec)
+    # classify the decode step even when the compute term isn't added
+    dec_tc = dec.ops / ((decode_ec or 1.0) * spec.flops)
+    dec_tm = dec.mem_total / (em * spec.bw)
+
+    extras: Dict[str, object] = {}
+    if "lora_update" in totals:
+        extras["lora_update_s"] = fc.phase(totals["lora_update"],
+                                           ec=ec, em=em).latency
+    if trace is not None:
+        # lazy import: the twin pulls the engine (and with it JAX), which the
+        # pure analytical path must not require
+        from repro.engine.forecast_twin import ForecastTwin
+        twin = ForecastTwin(arch, spec, variant, ec=decode_ec, em=em,
+                            prefill_ec=ec, prefill_em=em)
+        tf = twin.replay(trace)
+        ttft_s, tpot_s, tps = tf.mean_ttft, tf.mean_tpot, tf.tps
+        extras["trace_total_time_s"] = tf.total_time
+        extras["trace_total_tokens"] = tf.total_tokens
+    else:
+        ttft_s, tpot_s = pre.latency, tpot
+        tps = scenario.batch / tpot
+
+    return Report(
+        source="forecast", model=arch.name, variant=variant.name,
+        hardware=spec.name, ttft_s=ttft_s, tpot_s=tpot_s, tps=tps,
+        ttft_bound=pre.bound,
+        tpot_bound="compute" if dec_tc > dec_tm else "memory",
+        ec=ec, em=em, phases=_phase_stats(totals),
+        scenario=scenario.to_dict(), extras=extras,
+        trace=tuple(trace) if trace is not None else None)
+
+
+def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
+    """Run ``scenario`` on the real engine and report measured metrics.
+
+    Engine-supported families go through the continuous-batching engine
+    (slot-paged KV cache, chunked-prefill admission, fused decode blocks);
+    the rest fall back to the legacy lockstep server.  ``hw`` only labels
+    the report (the run happens on the host backend); the measured report's
+    ``trace`` attribute can be replayed via ``forecast(..., trace=...)``
+    for a same-schedule forecast on any target.
+
+    Measured TTFT includes queue time; forecast TTFT is admission → first
+    token (see ``repro.engine.forecast_twin``).
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.engine import (Engine, EngineConfig, Request, engine_supported)
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import init_params
+    from repro.runtime import ShardingPolicy, Server, ServeConfig
+
+    arch, variant = scenario.arch, scenario.variant_obj
+    hw_name = hardware.get(hw).name if hw is not None else "host"
+    totals = _phase_totals(WorkloadModel(arch, variant), scenario)
+    # the engine stores KV in bf16 or int8; int4 variants measure as int8
+    kv_dtype = "int8" if variant.kv_dtype.startswith("int") else "bf16"
+
+    mesh = make_host_mesh()
+    params = init_params(arch, jax.random.PRNGKey(scenario.seed))
+    gen_lens = scenario.request_gen_lens
+    n_req = len(gen_lens)
+    max_len = scenario.prompt_len + max(gen_lens) + max(8, scenario.decode_block)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(scenario.seed + 1), (n_req, scenario.prompt_len),
+        0, arch.vocab_size, jnp.int32)
+
+    extras: Dict[str, object] = {}
+    trace = None
+    if engine_supported(arch):
+        ec = EngineConfig(max_slots=scenario.batch, max_len=max_len,
+                          chunk_size=scenario.chunk or scenario.prompt_len,
+                          decode_block=scenario.decode_block,
+                          kv_dtype=kv_dtype,
+                          temperature=scenario.temperature,
+                          seed=scenario.seed)
+        reqs = [Request(rid=i, prompt=list(map(int, prompts[i])),
+                        max_new=gen_lens[i]) for i in range(n_req)]
+        with mesh:
+            eng = Engine(arch, params, mesh, ShardingPolicy(), ec)
+            eng.warmup()               # compile outside the measured window
+            t0 = time.perf_counter()
+            results = eng.run(reqs)
+            wall = time.perf_counter() - t0
+        ttft_s = sum(r.ttft for r in results) / len(results)
+        with_tpot = [r for r in results if len(r.tokens) > 1]
+        tpot_s = (sum(r.tpot for r in with_tpot) / len(with_tpot)
+                  if with_tpot else 0.0)
+        tps = eng.aggregate_tps()
+        trace = tuple(eng.trace)
+        extras.update(mode="engine", wall_s=wall,
+                      tokens=sum(len(r.tokens) for r in results),
+                      requests=n_req)
+    else:
+        # legacy lockstep server: whole-batch generation, timed in two legs
+        # (prefill+first token, then the remaining decode steps)
+        from repro.engine.sampling import sample
+        sc = ServeConfig(batch=n_req, max_len=max_len,
+                         chunk_size=scenario.chunk, kv_dtype=kv_dtype,
+                         temperature=scenario.temperature)
+        n_new = max(gen_lens)
+        with mesh:
+            server = Server(arch, params, mesh, ShardingPolicy(), sc)
+            server.generate(prompts, 2)            # compile both paths
+            t0 = time.perf_counter()
+            state = server.init_state()
+            rng = jax.random.PRNGKey(scenario.seed)
+            chunk = sc.chunk_size or scenario.prompt_len
+            logits = None
+            for off in range(0, scenario.prompt_len, chunk):
+                logits, state = server.prefill_fn(
+                    server.params, state, prompts[:, off:off + chunk], {})
+            tok = sample(logits, sc.temperature, rng)
+            jax.block_until_ready(tok)
+            ttft_s = time.perf_counter() - t0
+            n_toks = n_req
+            for _ in range(n_new - 1):
+                rng, sub = jax.random.split(rng)
+                logits, state = server.decode_fn(server.params, state,
+                                                 tok[:, None])
+                tok = sample(logits, sc.temperature, sub)
+                n_toks += n_req
+            jax.block_until_ready(tok)
+            wall = time.perf_counter() - t0
+        tpot_s = (wall - ttft_s) / max(n_new - 1, 1)
+        tps = n_toks / wall
+        extras.update(mode="legacy-lockstep", wall_s=wall, tokens=n_toks,
+                      requests=n_req)
+
+    return Report(
+        source="measured", model=arch.name, variant=variant.name,
+        hardware=hw_name, ttft_s=ttft_s, tpot_s=tpot_s, tps=tps,
+        phases=_phase_stats(totals), scenario=scenario.to_dict(),
+        extras=extras, trace=trace)
+
+
+def sweep(scenario: Scenario,
+          hardware_list: Optional[Iterable[HardwareLike]] = None, *,
+          tops: Optional[Sequence[float]] = None,
+          bw: Optional[Sequence[float]] = None,
+          ec: float = 1.0, em: float = 1.0,
+          decode_ec: Optional[float] = None) -> List[Report]:
+    """Forecast ``scenario`` across hardware targets (paper Fig. 5 style).
+
+    Pass named/spec'd targets via ``hardware_list``, and/or a synthetic
+    TOPS×BW grid via ``tops`` + ``bw`` (both in the paper's units: TOPS and
+    GB/s); the grid cross-product is appended after the named targets.
+    """
+    specs: List[HardwareSpec] = [hardware.get(h) for h in hardware_list or ()]
+    if (tops is None) != (bw is None):
+        raise ValueError("tops and bw must be given together")
+    if tops is not None:
+        for t in tops:
+            for b in bw:
+                specs.append(HardwareSpec(
+                    name=f"grid-{t:g}tops-{b:g}gbps", tops=float(t),
+                    bw_gbps=float(b)))
+    if not specs:
+        raise ValueError("sweep needs hardware_list and/or a tops×bw grid")
+    return [forecast(scenario, s, ec=ec, em=em, decode_ec=decode_ec)
+            for s in specs]

@@ -1,0 +1,155 @@
+"""Declarative inference scenarios (paper Fig. 2: model × variant × traffic).
+
+A :class:`Scenario` is the hardware-independent half of a forecast: which
+architecture, which software/model-optimization :class:`Variant`, and what
+traffic hits it (batch, prompt length, generation budget, chunked-prefill
+chunk, LoRA adapter, mixed continuous-batching ``past_lens``).  It is the
+single input consumed by :func:`repro.api.forecast` (analytical path),
+:func:`repro.api.measure` (real engine) and :func:`repro.api.sweep`
+(hardware what-ifs), replacing the per-script
+``configs.get → WorkloadModel → StatsDB → Forecaster`` wiring.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+from repro import configs
+from repro.configs.base import ArchConfig, Variant, PAPER_VARIANTS
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One inference workload: architecture × variant × traffic shape.
+
+    ``model`` / ``variant`` accept registry names (``"llama2-7b"``,
+    ``"bf16-int4-kv4"``) or resolved ``ArchConfig`` / ``Variant`` objects.
+
+    Traffic:
+      * ``batch``       — concurrent sequences (decode slots for the engine)
+      * ``prompt_len``  — prompt tokens per request (drives TTFT)
+      * ``gen_len``     — generation budget per request (drives TPS)
+      * ``chunk``       — chunked-prefill chunk size (§3.3.4); ``None`` = one shot
+      * ``past_lens``   — per-slot KV lengths of ONE mixed continuous-batching
+                          decode step; overrides ``batch`` (= ``len(past_lens)``)
+      * ``lora_rank``   — include a one-time LoRA adapter merge (Eq. 7)
+      * ``gen_lens``    — per-request budgets for the measured path (staggered
+                          completions exercise slot reuse); overrides
+                          ``n_requests``
+    Measured-path knobs (``repro.api.measure`` only): ``reduced`` serves the
+    CPU-sized reduced config, ``n_requests`` decouples offered traffic from
+    ``batch`` slots, ``decode_block``/``temperature``/``seed`` mirror
+    ``EngineConfig``.
+    """
+    model: Union[str, ArchConfig]
+    variant: Union[str, Variant] = "bf16-bf16"
+    batch: int = 1
+    prompt_len: int = 512
+    gen_len: int = 128
+    chunk: Optional[int] = None
+    past_lens: Optional[Sequence[int]] = None
+    lora_rank: Optional[int] = None
+    # measured-path traffic shape
+    reduced: bool = False
+    n_requests: Optional[int] = None
+    gen_lens: Optional[Sequence[int]] = None
+    decode_block: int = 8
+    temperature: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        # fail fast on registry names (also catches stale names coming back
+        # through from_dict) — object forms are already resolved
+        if isinstance(self.model, str) and self.model not in configs.ARCHS:
+            raise KeyError(f"unknown arch {self.model!r}; known: "
+                           f"{sorted(configs.ARCHS)}")
+        if (isinstance(self.variant, str)
+                and self.variant not in PAPER_VARIANTS):
+            raise KeyError(f"unknown variant {self.variant!r}; known: "
+                           f"{sorted(PAPER_VARIANTS)}")
+        if self.past_lens is not None:
+            pls = tuple(int(p) for p in self.past_lens)
+            if not pls or any(p < 0 for p in pls):
+                raise ValueError("past_lens must be non-empty, >= 0 each")
+            object.__setattr__(self, "past_lens", pls)
+            object.__setattr__(self, "batch", len(pls))
+        if self.gen_lens is not None:
+            gls = tuple(int(g) for g in self.gen_lens)
+            if not gls or any(g < 1 for g in gls):
+                raise ValueError("gen_lens must be non-empty, >= 1 each")
+            object.__setattr__(self, "gen_lens", gls)
+            object.__setattr__(self, "n_requests", len(gls))
+        if self.batch < 1 or self.prompt_len < 1 or self.gen_len < 1:
+            raise ValueError("batch, prompt_len and gen_len must be >= 1")
+        if self.chunk is not None and self.chunk < 1:
+            raise ValueError("chunk must be >= 1")
+
+    # ------------------------------------------------------------------
+    # resolution
+    # ------------------------------------------------------------------
+    @property
+    def arch(self) -> ArchConfig:
+        """The architecture this scenario runs (honors ``reduced``)."""
+        cfg = (configs.get(self.model) if isinstance(self.model, str)
+               else self.model)
+        return configs.reduced(cfg) if self.reduced else cfg
+
+    @property
+    def variant_obj(self) -> Variant:
+        v = (PAPER_VARIANTS[self.variant] if isinstance(self.variant, str)
+             else self.variant)
+        if self.lora_rank is not None:
+            v = dataclasses.replace(v, lora_rank=self.lora_rank)
+        return v
+
+    @property
+    def model_name(self) -> str:
+        return self.model if isinstance(self.model, str) else self.model.name
+
+    @property
+    def variant_name(self) -> str:
+        return (self.variant if isinstance(self.variant, str)
+                else self.variant.name)
+
+    @property
+    def decode_past_lens(self) -> Tuple[int, ...]:
+        """Per-slot KV lengths of the decode step being forecast."""
+        if self.past_lens is not None:
+            return self.past_lens
+        return (self.prompt_len,) * self.batch
+
+    @property
+    def request_gen_lens(self) -> Tuple[int, ...]:
+        """Per-request generation budgets for the measured path."""
+        if self.gen_lens is not None:
+            return self.gen_lens
+        return (self.gen_len,) * (self.n_requests or self.batch)
+
+    # ------------------------------------------------------------------
+    # serialization (JSON round-trip for registry-named scenarios)
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict:
+        d = {
+            "model": self.model_name,
+            "variant": self.variant_name,
+            "batch": self.batch,
+            "prompt_len": self.prompt_len,
+            "gen_len": self.gen_len,
+            "chunk": self.chunk,
+            "past_lens": list(self.past_lens) if self.past_lens else None,
+            "lora_rank": self.lora_rank,
+            "reduced": self.reduced,
+            "n_requests": self.n_requests,
+            "gen_lens": list(self.gen_lens) if self.gen_lens else None,
+            "decode_block": self.decode_block,
+            "temperature": self.temperature,
+            "seed": self.seed,
+        }
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Scenario":
+        return cls(**{k: d[k] for k in (
+            "model", "variant", "batch", "prompt_len", "gen_len", "chunk",
+            "past_lens", "lora_rank", "reduced", "n_requests", "gen_lens",
+            "decode_block", "temperature", "seed") if k in d})

@@ -9,7 +9,7 @@ target with pod-level interconnect for the distributed extension
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,8 +69,41 @@ TPU_V5E = _reg(HardwareSpec(
     ici_gbps_per_link=50.0, ici_links=4, hbm_bytes=16 * 2**30))
 
 
-def get(name: str) -> HardwareSpec:
+#: Short aliases accepted by :func:`get` (case-insensitive, like names).
+ALIASES: Dict[str, str] = {
+    "cpu": "ryzen-9-hx370-cpu",
+    "npu": "ryzen-ai-max-395-npu",
+    "igpu": "ryzen-ai-max-395-igpu",
+    "v100": "nvidia-v100",
+    "v5e": "tpu-v5e",
+    "tpu": "tpu-v5e",
+}
+
+
+def names() -> List[str]:
+    """Sorted names of every registered hardware spec."""
+    return sorted(REGISTRY)
+
+
+def get(name: Union[str, HardwareSpec]) -> HardwareSpec:
+    """Resolve a hardware target uniformly.
+
+    Accepts a registered name (case-insensitive), a short alias
+    (``"v100"`` → ``"nvidia-v100"``), or an already-resolved
+    :class:`HardwareSpec` (returned as-is, so callers can thread either
+    form through without branching).
+    """
+    if isinstance(name, HardwareSpec):
+        return name
+    key = str(name).strip().lower()
+    key = ALIASES.get(key, key)
     try:
-        return REGISTRY[name]
+        return REGISTRY[key]
     except KeyError:
-        raise KeyError(f"unknown hardware {name!r}; known: {sorted(REGISTRY)}") from None
+        raise KeyError(f"unknown hardware {name!r}; known: {sorted(REGISTRY)}"
+                       f" (aliases: {sorted(ALIASES)})") from None
+
+
+# public registry-listing alias; kept LAST so the builtin `list` is never
+# shadowed inside this module's own code above
+list = names

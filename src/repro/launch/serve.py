@@ -13,6 +13,12 @@ multi-request traffic.
 
 ``--legacy`` keeps the old single-shot lockstep ``Server`` path (also the
 only path for engine-unsupported families: ssm / hybrid / encdec / MLA).
+
+NOTE: for the common cases (no mesh/sharding control needed) prefer the
+unified front door — ``python -m repro {forecast,measure,sweep,compare}``
+(``repro.api``).  This launcher remains for production mesh layouts and
+multi-pod sharding; its single-request orientation forecast is itself
+served by ``repro.api`` now.
 """
 from __future__ import annotations
 
@@ -23,9 +29,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import api, configs
 from repro.configs.base import Variant
-from repro.core import WorkloadModel, Forecaster, hardware
+from repro.core import hardware
 from repro.engine import (Engine, EngineConfig, ForecastTwin, Request,
                           engine_supported)
 from repro.models import init_params
@@ -122,13 +128,13 @@ def main() -> None:
 
     # single-request LIFE forecast (paper Eqs. 1-6) for orientation
     variant = Variant(kv_dtype=args.kv_dtype, fused=True)
-    wm = WorkloadModel(full_cfg, variant)
-    fc = Forecaster(hardware.TPU_V5E)
-    ttft = fc.ttft(wm.prefill(1, args.prompt_len))
-    tpot = fc.tpot(wm.decode_step(1, args.prompt_len), em=0.8)
+    scn = api.Scenario(model=args.arch, variant=variant,
+                       prompt_len=args.prompt_len, gen_len=args.new_tokens,
+                       chunk=args.chunk or None)
+    r = api.forecast(scn, "tpu-v5e", em=0.8)
     print(f"[LIFE → tpu-v5e] {full_cfg.name}: single-request "
-          f"TTFT={ttft.latency*1e3:.1f}ms ({ttft.bound}-bound)  "
-          f"TPOT={tpot*1e3:.2f}ms  TPS={1/tpot:.1f} (1 chip, em=0.8)")
+          f"TTFT={r.ttft_s*1e3:.1f}ms ({r.ttft_bound}-bound)  "
+          f"TPOT={r.tpot_s*1e3:.2f}ms  TPS={r.tps:.1f} (1 chip, em=0.8)")
 
     params = init_params(cfg, jax.random.PRNGKey(0))
     if args.legacy or not engine_supported(cfg):
