@@ -14,14 +14,17 @@ scheduler trace through the analytical twin
 
 The point (paper Fig. 2 loop, extended to multi-request traffic): the
 same trace drives measured and forecast sides, so scheduling effects
-(admission order, slot reuse, mixed KV lengths) are identical.  The twin
-costs the schedule's useful work (active slots, valid chunk tokens); the
-measured engine also pays for static-shape padding (masked slots, padded
-chunk tails) — see the scope note in ``repro.engine.forecast_twin``.
+(admission order, slot reuse, mixed KV lengths, radix prefix-cache hits)
+are identical.  The ``shared-prefix`` setting exercises the block-paged
+cache's prefix reuse — warm admissions skip the shared system prompt and
+both sides report the hit rate.  The twin costs the schedule's useful
+work (active slots, valid chunk tokens); the measured engine also pays
+for static-shape padding (masked slots, padded chunk tails) — see the
+scope note in ``repro.engine.forecast_twin``.
 
-Note: the API applies ``em`` uniformly to prefill and decode memory
-terms, so forecast TTFT/TPS here sit ~1/em above the pre-API version of
-this benchmark, which ran the twin's prefill at em=1.0.
+``benchmarks.run`` turns these rows into the ``BENCH_engine.json``
+artifact (measured TPS, forecast TPS, delta, mean TTFT per setting) via
+:func:`bench_artifact`, tracking the perf trajectory across PRs.
 
     PYTHONPATH=src python -m benchmarks.engine_throughput
 """
@@ -33,41 +36,72 @@ from repro.configs.base import Variant
 ARCH = "qwen2-7b"
 PROMPT, NEW = 32, 16
 
-#: (label, n_requests, max_slots, decode_block)
+#: (label, n_requests, max_slots, decode_block, shared_prefix_len)
 SETTINGS = [
-    ("serial-1slot", 4, 1, 8),
-    ("batch-2slot", 4, 2, 8),
-    ("batch-4slot", 8, 4, 8),
-    ("overload-2slot-8req", 8, 2, 4),
+    ("serial-1slot", 4, 1, 8, None),
+    ("batch-2slot", 4, 2, 8, None),
+    ("batch-4slot", 8, 4, 8, None),
+    ("overload-2slot-8req", 8, 2, 4, None),
+    ("shared-prefix-16of32", 6, 2, 8, 16),
 ]
 
 
 def rows():
     out = []
-    for label, n_req, slots, block in SETTINGS:
+    for label, n_req, slots, block, shared in SETTINGS:
         # mixed budgets so completions (and slot frees) happen mid-flight
         scn = api.Scenario(
             model=ARCH, variant=Variant(name="bf16-fused", fused=True),
             reduced=True, batch=slots, prompt_len=PROMPT, gen_len=NEW,
             gen_lens=tuple(NEW - 3 * (i % 3) for i in range(n_req)),
-            chunk=16, decode_block=block)
+            chunk=16, decode_block=block, shared_prefix_len=shared,
+            block_size=8 if shared else None)
         measured = api.measure(scn)
         cpu = api.forecast(scn, "cpu", em=0.8, trace=measured.trace)
         v5e = api.forecast(dataclasses.replace(scn, reduced=False),
                            "tpu-v5e", em=0.8, trace=measured.trace)
         delta = api.compare(cpu, measured)
-        out.append((f"engine/{label}", {
+        derived = {
             "requests": n_req, "slots": slots,
             "tokens": measured.extras["tokens"],
             "wall_s": round(measured.extras["wall_s"], 2),
             "measured_tps_host": round(measured.tps, 1),
+            "measured_ttft_ms_host": round(measured.ttft_s * 1e3, 2),
             "forecast_tps_cpu": round(cpu.tps, 1),
             "cpu_twin_tps_ratio": round(delta.tps.ratio, 2),
             "forecast_tps_v5e": round(v5e.tps, 1),
             "forecast_ttft_ms_v5e": round(v5e.ttft_s * 1e3, 2),
             "forecast_tpot_ms_v5e": round(v5e.tpot_s * 1e3, 3),
-        }))
+        }
+        if shared:
+            derived.update(
+                measured_hit_rate=round(
+                    measured.extras["prefix_hit_rate"], 3),
+                forecast_hit_rate=round(
+                    v5e.extras["trace_prefix_hit_rate"], 3),
+                forecast_ttft_savings_ms_v5e=round(
+                    v5e.extras["trace_ttft_savings_s"] * 1e3, 3))
+        out.append((f"engine/{label}", derived))
     return out
+
+
+def bench_artifact(rows_out):
+    """BENCH_engine.json payload: the cross-PR perf trajectory."""
+    settings = {}
+    for name, d in rows_out:
+        settings[name.split("/", 1)[1]] = {
+            "measured_tps": d["measured_tps_host"],
+            "forecast_tps": d["forecast_tps_cpu"],
+            "tps_delta_ratio": d["cpu_twin_tps_ratio"],
+            "mean_ttft_ms": d["measured_ttft_ms_host"],
+        }
+    return {
+        "benchmark": "engine_throughput",
+        "arch": ARCH,
+        "prompt_len": PROMPT,
+        "gen_len": NEW,
+        "settings": settings,
+    }
 
 
 if __name__ == "__main__":

@@ -4,9 +4,19 @@ Prints ``name,us_per_call,derived`` CSV.  ``us_per_call`` is the wall time
 of the LIFE simulation that produced the row (the paper's point: full
 workload characterization runs in seconds on a laptop); ``derived`` packs
 the reproduced metrics next to the paper's published values.
+
+Modules may expose ``bench_artifact(rows) -> dict``; the driver then
+writes ``BENCH_<shortname>.json`` (e.g. ``BENCH_engine.json`` from
+``engine_throughput``) so the perf trajectory is tracked across PRs.
+
+    python -m benchmarks.run                       # everything
+    python -m benchmarks.run --only engine_throughput
+    python -m benchmarks.run table4_prefill_ops roofline
 """
+import argparse
 import importlib
 import json
+import os
 import sys
 import time
 
@@ -32,7 +42,18 @@ MODULES = [
 
 
 def main() -> None:
-    only = sys.argv[1:] or None
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("modules", nargs="*",
+                    help="benchmark modules to run (default: all)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset (same as positional)")
+    ap.add_argument("--artifact-dir", default=".",
+                    help="where BENCH_*.json artifacts are written")
+    args = ap.parse_args()
+    only = list(args.modules)
+    if args.only:
+        only += [m for m in args.only.split(",") if m]
+    only = only or None
     if only:
         unknown = [m for m in only if m not in MODULES]
         if unknown:
@@ -57,6 +78,14 @@ def main() -> None:
         for name, derived in rows:
             payload = json.dumps(derived, separators=(",", ":")).replace('"', "'")
             print(f"{name},{per_row:.1f},\"{payload}\"")
+        artifact_fn = getattr(mod, "bench_artifact", None)
+        if artifact_fn is not None:
+            short = modname.split("_")[0]
+            path = os.path.join(args.artifact_dir, f"BENCH_{short}.json")
+            with open(path, "w") as f:
+                json.dump(artifact_fn(rows), f, indent=1)
+                f.write("\n")
+            print(f"wrote {path}", file=sys.stderr)
     if failed:
         print(f"{len(failed)} benchmark module(s) failed: "
               f"{', '.join(failed)}", file=sys.stderr)

@@ -55,6 +55,16 @@ def _add_scenario_args(p: argparse.ArgumentParser, measured: bool) -> None:
                    help="per-slot KV lengths of a mixed decode batch")
     p.add_argument("--lora-rank", type=int, default=None,
                    help="include a one-time LoRA merge of this rank")
+    p.add_argument("--shared-prefix", type=int, default=None,
+                   dest="shared_prefix_len",
+                   help="leading prompt tokens shared by all requests "
+                   "(common system prompt; served from shared KV blocks)")
+    p.add_argument("--block-size", type=int, default=None,
+                   help="KV block size of the paged cache (default: "
+                   "engine default)")
+    p.add_argument("--no-prefix-cache", action="store_false",
+                   dest="prefix_cache",
+                   help="disable radix prefix caching (cache-cold)")
     p.add_argument("--reduced", action="store_true",
                    help="use the CPU-sized reduced config")
     if measured:
@@ -79,7 +89,10 @@ def _scenario(args: argparse.Namespace) -> api.Scenario:
     kw = dict(model=args.model, variant=args.variant, batch=args.batch,
               prompt_len=args.prompt_len, gen_len=args.gen_len,
               chunk=args.chunk, past_lens=args.past_lens,
-              lora_rank=args.lora_rank, reduced=args.reduced)
+              lora_rank=args.lora_rank,
+              shared_prefix_len=args.shared_prefix_len,
+              block_size=args.block_size, prefix_cache=args.prefix_cache,
+              reduced=args.reduced)
     for name in ("n_requests", "decode_block", "temperature", "seed"):
         if hasattr(args, name):
             kw[name] = getattr(args, name)
@@ -105,6 +118,9 @@ def _print_report(r: api.Report) -> None:
         traffic += f" chunk={scn['chunk']}"
     if scn.get("past_lens"):
         traffic += f" past_lens={scn['past_lens']}"
+    if scn.get("shared_prefix_len"):
+        traffic += (f" shared_prefix={scn['shared_prefix_len']}"
+                    f"×{scn.get('n_requests') or scn.get('batch')}req")
     print(f"[{r.source}] {r.model} · {r.variant} · {r.hardware}  ({traffic})")
     bound = f"  ({r.ttft_bound}-bound)" if r.ttft_bound else ""
     print(f"  TTFT  {r.ttft_s * 1e3:12.2f} ms{bound}")

@@ -34,6 +34,13 @@ def _phase_totals(wm: WorkloadModel, scn: Scenario) -> Dict[str, Totals]:
     else:
         pre_db = wm.prefill(scn.batch, scn.prompt_len)
     out = {"prefill": pre_db.totals("prefill")}
+    if scn.shared_prefix_len is not None:
+        # prefix-reuse regime (block-paged cache): one warm admission's
+        # cache-miss suffix, batch 1 like the engine's per-request prefill
+        warm = wm.prefill_cached(1, scn.prompt_len, scn.cached_prefix_len,
+                                 chunk=scn.chunk,
+                                 block_size=scn.engine_block_size)
+        out["prefill_warm"] = warm.totals("prefill")
     pls = scn.decode_past_lens
     if len(set(pls)) == 1:
         # uniform batch: take the paper's direct path so forecasts match the
@@ -92,19 +99,66 @@ def forecast(scenario: Scenario, hw: HardwareLike, *,
     if "lora_update" in totals:
         extras["lora_update_s"] = fc.phase(totals["lora_update"],
                                            ec=ec, em=em).latency
+    if scenario.shared_prefix_len is not None:
+        # per-admission TTFT physics of the prefix-reuse regime: the first
+        # request prefills the full prompt cold (batch 1, like the engine
+        # admits), warm requests only their cache-miss suffix
+        wm_cold = wm.prefill_cached(1, scenario.prompt_len, 0,
+                                    chunk=scenario.chunk,
+                                    block_size=scenario.engine_block_size)
+        ttft_cold = fc.phase(wm_cold.totals("prefill"), ec=ec, em=em,
+                             include_dispatch=include_dispatch).latency
+        ttft_warm = fc.phase(totals["prefill_warm"], ec=ec, em=em,
+                             include_dispatch=include_dispatch).latency
+        n = scenario.n_requests or scenario.batch
+        cached = scenario.cached_prefix_len
+        extras.update(
+            ttft_cold_s=ttft_cold, ttft_warm_s=ttft_warm,
+            ttft_savings_s=ttft_cold - ttft_warm,
+            cached_tokens=cached,
+            prefix_hit_rate=(cached * (n - 1))
+                            / (scenario.prompt_len * n),
+            # what the engine charges: prompt plus all but the final
+            # sampled token (Engine._blocks_needed)
+            blocks_per_request=-(-(scenario.prompt_len + scenario.gen_len
+                                   - 1) // scenario.engine_block_size),
+            shared_blocks=cached // scenario.engine_block_size,
+            block_size=scenario.engine_block_size)
     if trace is not None:
         # lazy import: the twin pulls the engine (and with it JAX), which the
         # pure analytical path must not require
         from repro.engine.forecast_twin import ForecastTwin
+        # block-paged scenarios price table reads in the replay too, so the
+        # trace and declarative paths apply one physics; plain scenarios
+        # keep the None default (PR-2 bit-for-bit no-drift, tested)
+        twin_bs = (scenario.engine_block_size
+                   if (scenario.block_size is not None
+                       or scenario.shared_prefix_len is not None) else None)
         twin = ForecastTwin(arch, spec, variant, ec=decode_ec, em=em,
-                            prefill_ec=ec, prefill_em=em)
+                            prefill_ec=ec, prefill_em=em,
+                            block_size=twin_bs)
         tf = twin.replay(trace)
         ttft_s, tpot_s, tps = tf.mean_ttft, tf.mean_tpot, tf.tps
         extras["trace_total_time_s"] = tf.total_time
         extras["trace_total_tokens"] = tf.total_tokens
+        if tf.cached_tokens:
+            # hit-aware replay: quantify what prefix caching bought by
+            # re-pricing the same schedule cache-cold
+            from repro.engine.forecast_twin import cold_trace
+            cold = twin.replay(cold_trace(trace))
+            extras["trace_prefix_hit_rate"] = tf.prefix_hit_rate
+            extras["trace_cached_tokens"] = tf.cached_tokens
+            extras["trace_ttft_savings_s"] = (cold.mean_ttft - tf.mean_ttft)
+            extras["trace_prefill_savings_s"] = (cold.prefill_time
+                                                 - tf.prefill_time)
     else:
         ttft_s, tpot_s = pre.latency, tpot
         tps = scenario.batch / tpot
+        if scenario.shared_prefix_len is not None:
+            # mean admission TTFT over 1 cold + (n-1) warm requests
+            n = scenario.n_requests or scenario.batch
+            ttft_s = (extras["ttft_cold_s"]
+                      + (n - 1) * extras["ttft_warm_s"]) / n
 
     return Report(
         source="forecast", model=arch.name, variant=variant.name,
@@ -153,6 +207,13 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
     prompts = jax.random.randint(
         jax.random.PRNGKey(scenario.seed + 1), (n_req, scenario.prompt_len),
         0, arch.vocab_size, jnp.int32)
+    if scenario.shared_prefix_len:
+        # common system prompt: every request opens with the same tokens
+        shared = jax.random.randint(
+            jax.random.PRNGKey(scenario.seed + 2),
+            (scenario.shared_prefix_len,), 0, arch.vocab_size, jnp.int32)
+        prompts = prompts.at[:, :scenario.shared_prefix_len].set(
+            shared[None, :])
 
     extras: Dict[str, object] = {}
     trace = None
@@ -160,6 +221,8 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
         ec = EngineConfig(max_slots=scenario.batch, max_len=max_len,
                           chunk_size=scenario.chunk or scenario.prompt_len,
                           decode_block=scenario.decode_block,
+                          block_size=scenario.engine_block_size,
+                          prefix_cache=scenario.prefix_cache,
                           kv_dtype=kv_dtype,
                           temperature=scenario.temperature,
                           seed=scenario.seed)
@@ -179,7 +242,11 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
         trace = tuple(eng.trace)
         extras.update(mode="engine", wall_s=wall,
                       tokens=sum(len(r.tokens) for r in results),
-                      requests=n_req)
+                      requests=n_req,
+                      block_size=ec.block_size,
+                      prefix_hit_tokens=eng.prefix_hit_tokens,
+                      prefix_hit_rate=eng.prefix_hit_rate,
+                      peak_blocks_in_use=eng.peak_blocks_in_use)
     else:
         # legacy lockstep server: whole-batch generation, timed in two legs
         # (prefill+first token, then the remaining decode steps)

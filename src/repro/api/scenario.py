@@ -36,6 +36,15 @@ class Scenario:
       * ``gen_lens``    — per-request budgets for the measured path (staggered
                           completions exercise slot reuse); overrides
                           ``n_requests``
+      * ``shared_prefix_len`` — the requests share this many leading prompt
+                          tokens (a common system prompt); with the
+                          block-paged engine's radix prefix cache, warm
+                          admissions skip the shared blocks, and the
+                          analytical side forecasts the same hit
+      * ``block_size``  — KV block size of the paged cache (``None``:
+                          engine default)
+      * ``prefix_cache`` — disable to measure/forecast the same traffic
+                          cache-cold
     Measured-path knobs (``repro.api.measure`` only): ``reduced`` serves the
     CPU-sized reduced config, ``n_requests`` decouples offered traffic from
     ``batch`` slots, ``decode_block``/``temperature``/``seed`` mirror
@@ -49,6 +58,10 @@ class Scenario:
     chunk: Optional[int] = None
     past_lens: Optional[Sequence[int]] = None
     lora_rank: Optional[int] = None
+    # prefix-reuse traffic shape (paper's "local agent" scenario)
+    shared_prefix_len: Optional[int] = None
+    block_size: Optional[int] = None
+    prefix_cache: bool = True
     # measured-path traffic shape
     reduced: bool = False
     n_requests: Optional[int] = None
@@ -83,6 +96,11 @@ class Scenario:
             raise ValueError("batch, prompt_len and gen_len must be >= 1")
         if self.chunk is not None and self.chunk < 1:
             raise ValueError("chunk must be >= 1")
+        if self.shared_prefix_len is not None and not (
+                0 <= self.shared_prefix_len <= self.prompt_len):
+            raise ValueError("shared_prefix_len must be in [0, prompt_len]")
+        if self.block_size is not None and self.block_size < 1:
+            raise ValueError("block_size must be >= 1")
 
     # ------------------------------------------------------------------
     # resolution
@@ -125,6 +143,27 @@ class Scenario:
             return self.gen_lens
         return (self.gen_len,) * (self.n_requests or self.batch)
 
+    @property
+    def engine_block_size(self) -> int:
+        """KV block size the engine/analytical sides agree on."""
+        if self.block_size is not None:
+            return self.block_size
+        from repro.core.workload import DEFAULT_KV_BLOCK_SIZE
+        return DEFAULT_KV_BLOCK_SIZE
+
+    @property
+    def cached_prefix_len(self) -> int:
+        """Prompt tokens a warm admission maps from shared blocks.
+
+        The radix index shares full blocks only, and at least one prompt
+        token must be computed to produce first-token logits — the same
+        capping the engine applies (``Engine._allocate``).
+        """
+        if not self.prefix_cache or not self.shared_prefix_len:
+            return 0
+        bs = self.engine_block_size
+        return min((self.shared_prefix_len // bs) * bs, self.prompt_len - 1)
+
     # ------------------------------------------------------------------
     # serialization (JSON round-trip for registry-named scenarios)
     # ------------------------------------------------------------------
@@ -138,6 +177,9 @@ class Scenario:
             "chunk": self.chunk,
             "past_lens": list(self.past_lens) if self.past_lens else None,
             "lora_rank": self.lora_rank,
+            "shared_prefix_len": self.shared_prefix_len,
+            "block_size": self.block_size,
+            "prefix_cache": self.prefix_cache,
             "reduced": self.reduced,
             "n_requests": self.n_requests,
             "gen_lens": list(self.gen_lens) if self.gen_lens else None,
@@ -151,5 +193,6 @@ class Scenario:
     def from_dict(cls, d: dict) -> "Scenario":
         return cls(**{k: d[k] for k in (
             "model", "variant", "batch", "prompt_len", "gen_len", "chunk",
-            "past_lens", "lora_rank", "reduced", "n_requests", "gen_lens",
+            "past_lens", "lora_rank", "shared_prefix_len", "block_size",
+            "prefix_cache", "reduced", "n_requests", "gen_lens",
             "decode_block", "temperature", "seed") if k in d})

@@ -20,6 +20,12 @@ from .stats import StatsDB, Totals
 
 from repro.configs.base import ArchConfig, Variant
 
+#: default tokens per KV block of the paged cache — shared by the engine
+#: (``EngineConfig.block_size``) and the analytical side
+#: (``Scenario.engine_block_size``), and kept here so the pure analytical
+#: path never has to import the engine (and with it JAX) to read it
+DEFAULT_KV_BLOCK_SIZE = 16
+
 
 @dataclasses.dataclass
 class TimelinePoint:
@@ -80,6 +86,50 @@ class WorkloadModel:
             self.prefill(batch, step, db=db, past_len=done)
             done += step
         return db
+
+    def prefill_cached(self, batch: int, seq: int, cached: int,
+                       chunk: Optional[int] = None,
+                       block_size: Optional[int] = None,
+                       db: Optional[StatsDB] = None) -> StatsDB:
+        """Prefix-reuse prefill (block-paged cache, PR 3): only the
+        cache-miss suffix ``seq - cached`` is computed, on top of
+        ``cached`` tokens already materialized in shared KV blocks.
+
+        ``cached == 0`` reduces exactly to :meth:`prefill` /
+        :meth:`chunked_prefill`.  ``block_size`` adds the block-table
+        gather overhead of addressing the paged cache (one int32 id per
+        ``block_size`` KV positions per attention layer per chunk).
+        """
+        if not 0 <= cached < seq:
+            raise ValueError(f"cached must be in [0, seq), got "
+                             f"{cached} of {seq}")
+        db = db or StatsDB()
+        done, suffix = 0, seq - cached
+        step = chunk or suffix
+        while done < suffix:
+            c = min(step, suffix - done)
+            self.prefill(batch, c, db=db, past_len=cached + done)
+            if block_size:
+                self.block_table_reads(db, batch, cached + done + c,
+                                       block_size)
+            done += c
+        return db
+
+    def block_table_totals(self, batch: int, kv_len: int,
+                           block_size: int) -> Totals:
+        """Block-table gather overhead of one paged-attention pass: per
+        attention layer, read the int32 block ids covering ``kv_len``
+        positions.  Tiny by design — it is the price of paging."""
+        n_attn = sum(1 for k in self.arch.block_kinds() if k == "attn")
+        entries = -(-kv_len // block_size)
+        return Totals(mem_rd=float(batch * n_attn * entries * 4))
+
+    def block_table_reads(self, db: StatsDB, batch: int, kv_len: int,
+                          block_size: int) -> None:
+        """Record :meth:`block_table_totals` into ``db`` (current phase)."""
+        t = self.block_table_totals(batch, kv_len, block_size)
+        db.record("block_table", mem_rd=t.mem_rd, dispatches=0,
+                  op_class="gather")
 
     def decode_step(self, batch: int, past_len: int,
                     db: Optional[StatsDB] = None) -> StatsDB:

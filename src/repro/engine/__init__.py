@@ -1,27 +1,33 @@
 """Continuous-batching serving engine + its LIFE analytical twin.
 
 Subsystem layout:
-    kv_cache      — slot-paged KV cache (per-slot cursors, int8 storage,
-                    slot reset/reuse)
+    block_pool    — ref-counted global KV block pool + radix prefix index
+                    (host-side: prefix matching, eviction, copy-on-write)
+    kv_cache      — block-paged KV cache descriptor (block tables, int8
+                    storage, COW block copy, slot reset)
     decode_loop   — jitted chunked-prefill admission + fused multi-token
-                    decode scan with active-slot masking
-    scheduler     — request queue, admission into free slots, mid-flight
-                    completion, per-request metrics, trace emission
+                    decode scan, gathering attention over block tables
+    scheduler     — request queue, admission with prefix-cache hits and
+                    block-pool backpressure, mid-flight completion,
+                    per-request metrics, trace emission
     forecast_twin — replays the scheduler trace through WorkloadModel /
                     Forecaster: per-request TTFT/TPOT + aggregate TPS
-                    forecasts for mixed continuous-batching traffic
+                    forecasts for mixed continuous-batching traffic,
+                    prefix-hit aware (cold_trace for savings forecasts)
 """
 from .sampling import sample, kv_jnp_dtype, KV_DTYPES
-from .kv_cache import PagedKVCache, engine_supported
+from .block_pool import BlockPool, PoolExhausted, RadixIndex
+from .kv_cache import BlockPagedKVCache, PagedKVCache, engine_supported
 from .decode_loop import make_engine_fns
 from .scheduler import (Engine, EngineConfig, Request, RequestResult,
                         TraceEvent)
 from .forecast_twin import (ForecastTwin, TraceForecast, RequestForecast,
-                            replay_trace)
+                            cold_trace, replay_trace)
 
 __all__ = [
-    "sample", "kv_jnp_dtype", "KV_DTYPES", "PagedKVCache",
-    "engine_supported", "make_engine_fns", "Engine", "EngineConfig",
-    "Request", "RequestResult", "TraceEvent", "ForecastTwin",
-    "TraceForecast", "RequestForecast", "replay_trace",
+    "sample", "kv_jnp_dtype", "KV_DTYPES", "BlockPool", "PoolExhausted",
+    "RadixIndex", "BlockPagedKVCache", "PagedKVCache", "engine_supported",
+    "make_engine_fns", "Engine", "EngineConfig", "Request", "RequestResult",
+    "TraceEvent", "ForecastTwin", "TraceForecast", "RequestForecast",
+    "cold_trace", "replay_trace",
 ]

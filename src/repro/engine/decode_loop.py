@@ -1,18 +1,30 @@
-"""Fused engine steps: chunked-prefill admission + multi-token decode scan.
+"""Fused engine steps: chunked-prefill admission + multi-token decode scan,
+gathering attention over block tables (block-paged KV cache).
 
 Replaces the per-token Python dispatch of the legacy ``Server.generate``
 loop with two jitted entry points:
 
-* ``prefill_chunk``  — admit one prompt chunk of one request into its slot
-  (paper §3.3.4 chunked prefill, against the slot-paged cache).
+* ``prefill_chunk``  — admit one prompt chunk of one request into its
+  block table (paper §3.3.4 chunked prefill).  Chunk token positions are
+  absolute, so a prefix-cached request simply starts its chunks at
+  ``cached_len`` — the shared blocks already hold the prefix K/V and the
+  causal mask admits them like any other past tokens.
 * ``decode_block``   — ``jax.lax.scan`` over ``decode_block`` tokens for
   *all* slots at once: embedding → layer stack → LM head → sampling all
   inside one jit, with active-slot masking so slots that finish (EOS /
   budget) mid-block stop writing KV and stop advancing, while fresh slots
   keep decoding.  One dispatch per block instead of one per token.
 
-Both operate on the state dict created by ``PagedKVCache.init_state`` and
-donate it, so cache pages are updated in place across engine steps.
+KV reads/writes address physical storage through each slot's block table:
+a token at absolute position ``p`` lives in physical block
+``table[p // block_size]`` at offset ``p % block_size``, and attention
+gathers the table's blocks back into the slot's contiguous virtual
+sequence.  Writable blocks are exclusively owned (shared blocks are full
+and immutable — the scheduler copy-on-writes before any divergence), so
+scatter indices never collide across active slots.
+
+Both operate on the state dict created by ``BlockPagedKVCache.init_state``
+and donate it, so cache blocks are updated in place across engine steps.
 """
 from __future__ import annotations
 
@@ -29,12 +41,12 @@ from repro.models.layers import apply_norm
 from repro.models.model import _lm_head
 from repro.runtime import sharding as S
 
-from .kv_cache import PagedKVCache
+from .kv_cache import BlockPagedKVCache
 from .sampling import sample
 
 
 # ---------------------------------------------------------------------------
-# per-layer bodies against one slot page / all slot pages
+# per-layer bodies against one block table / all block tables
 # ---------------------------------------------------------------------------
 
 def _channel_mix(cfg: ArchConfig, p, x):
@@ -48,27 +60,28 @@ def _channel_mix(cfg: ArchConfig, p, x):
     return x + y
 
 
-def _prefill_layer(cfg: ArchConfig, p, x, ck, cv, slot, pos_q, valid_end):
+def _prefill_layer(cfg: ArchConfig, p, x, ck, cv, bt_slot, pos_q, valid_end):
     """One layer of a single-slot prompt chunk.
 
-    x: (1, C, d); ck/cv: (S, L, Hk, hd) full slot-paged buffers of this
-    layer; pos_q: (C,) absolute positions of the chunk tokens; positions
-    ``>= valid_end`` are padding (their K/V writes are dropped and their
-    outputs ignored by the caller).
+    x: (1, C, d); ck/cv: (N, bs, Hk, hd) full block-pool buffers of this
+    layer; bt_slot: (max_bps,) the slot's block table; pos_q: (C,)
+    absolute positions of the chunk tokens; positions ``>= valid_end`` are
+    padding (their K/V scatter targets block id N — out of bounds, so the
+    writes are dropped — and their outputs are ignored by the caller).
     """
-    L = ck.shape[1]
+    N, bs = ck.shape[0], ck.shape[1]
+    L_virt = bt_slot.shape[0] * bs
     h = apply_norm(cfg.norm_kind, x, p["ln1"])
     q, k_new, v_new = A._project_qkv(cfg, p["attn"], h, pos_q[None, :])
-    # write the chunk's K/V into this slot's page; padding rows target
-    # index L which is out of bounds => scatter drops them
-    idx = jnp.where(pos_q < valid_end, pos_q, L)
-    page_k = jax.lax.dynamic_slice_in_dim(ck, slot, 1, axis=0)
-    page_v = jax.lax.dynamic_slice_in_dim(cv, slot, 1, axis=0)
-    page_k = page_k.at[0, idx].set(k_new[0].astype(ck.dtype))
-    page_v = page_v.at[0, idx].set(v_new[0].astype(cv.dtype))
-    ck = jax.lax.dynamic_update_slice_in_dim(ck, page_k, slot, axis=0)
-    cv = jax.lax.dynamic_update_slice_in_dim(cv, page_v, slot, axis=0)
-    k_pos = jnp.arange(L, dtype=jnp.int32)
+    # scatter the chunk's K/V through the block table
+    blk = jnp.where(pos_q < valid_end, bt_slot[pos_q // bs], N)
+    off = pos_q % bs
+    ck = ck.at[blk, off].set(k_new[0].astype(ck.dtype))
+    cv = cv.at[blk, off].set(v_new[0].astype(cv.dtype))
+    # gather the slot's pages back into its contiguous virtual sequence
+    page_k = ck[bt_slot].reshape(1, L_virt, *ck.shape[2:])
+    page_v = cv[bt_slot].reshape(1, L_virt, *cv.shape[2:])
+    k_pos = jnp.arange(L_virt, dtype=jnp.int32)
     mask = ((k_pos[None, :] <= pos_q[:, None])
             & (k_pos[None, :] < valid_end))[None, None, None]
     out = A._gqa_scores_softmax_out(q, page_k.astype(x.dtype),
@@ -81,26 +94,31 @@ def _prefill_layer(cfg: ArchConfig, p, x, ck, cv, slot, pos_q, valid_end):
     return _channel_mix(cfg, p, x + y), ck, cv
 
 
-def _decode_layer(cfg: ArchConfig, p, x, ck, cv, pos, active):
+def _decode_layer(cfg: ArchConfig, p, x, ck, cv, bt, pos, active):
     """One layer of a one-token step for ALL slots.
 
-    x: (S, 1, d); ck/cv: (S, L, Hk, hd); pos: (S,) per-slot cursors;
-    active: (S,) bool — inactive slots neither write KV nor advance (their
-    scatter index is forced out of bounds and dropped).
+    x: (S, 1, d); ck/cv: (N, bs, Hk, hd); bt: (S, max_bps) block tables;
+    pos: (S,) per-slot cursors; active: (S,) bool — inactive slots neither
+    write KV nor advance (their scatter block id is forced out of bounds
+    and dropped).
     """
-    S_, L = ck.shape[0], ck.shape[1]
+    N, bs = ck.shape[0], ck.shape[1]
+    S_, max_bps = bt.shape
+    L_virt = max_bps * bs
     h = apply_norm(cfg.norm_kind, x, p["ln1"])
     q, k_new, v_new = A._project_qkv(cfg, p["attn"], h, pos[:, None])
-    idx = jnp.where(active, pos, L)
     rows = jnp.arange(S_, dtype=jnp.int32)
-    ck = ck.at[rows, idx].set(k_new[:, 0].astype(ck.dtype))
-    cv = cv.at[rows, idx].set(v_new[:, 0].astype(cv.dtype))
-    k_pos = jnp.arange(L, dtype=jnp.int32)
-    # per-slot causal mask over its own page (keys strictly before + the
-    # token just written at pos)
+    blk = jnp.where(active, bt[rows, pos // bs], N)
+    ck = ck.at[blk, pos % bs].set(k_new[:, 0].astype(ck.dtype))
+    cv = cv.at[blk, pos % bs].set(v_new[:, 0].astype(cv.dtype))
+    page_k = ck[bt].reshape(S_, L_virt, *ck.shape[2:])
+    page_v = cv[bt].reshape(S_, L_virt, *cv.shape[2:])
+    k_pos = jnp.arange(L_virt, dtype=jnp.int32)
+    # per-slot causal mask over its virtual sequence (keys strictly before
+    # + the token just written at pos)
     mask = (k_pos[None, :] <= pos[:, None])[:, None, None, None, :]
-    out = A._gqa_scores_softmax_out(q, ck.astype(x.dtype),
-                                    cv.astype(x.dtype), mask,
+    out = A._gqa_scores_softmax_out(q, page_k.astype(x.dtype),
+                                    page_v.astype(x.dtype), mask,
                                     cfg.head_dim ** -0.5)
     y = jnp.einsum("bshd,hde->bse",
                    out.reshape(S_, 1, cfg.n_heads, cfg.head_dim),
@@ -113,7 +131,7 @@ def _decode_layer(cfg: ArchConfig, p, x, ck, cv, pos, active):
 # ---------------------------------------------------------------------------
 
 def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
-                    cache: PagedKVCache, *, chunk_size: int,
+                    cache: BlockPagedKVCache, *, chunk_size: int,
                     decode_block: int, temperature: float = 0.0,
                     eos_id: Optional[int] = None):
     """Returns jit'd ``(prefill_fn, decode_fn, shardings)``.
@@ -132,10 +150,11 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
         x = params["embed"][tokens]                       # (1, C, d)
         pos_q = start + jnp.arange(chunk_size, dtype=jnp.int32)
         valid_end = start + valid
+        bt_slot = state["block_tables"][slot]             # (max_bps,)
 
         def scan_fn(h, inp):
             p_layer, ck, cv = inp
-            h, ck, cv = _prefill_layer(cfg, p_layer, h, ck, cv, slot,
+            h, ck, cv = _prefill_layer(cfg, p_layer, h, ck, cv, bt_slot,
                                        pos_q, valid_end)
             return h, (ck, cv)
 
@@ -151,13 +170,16 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
         return logits, new_state
 
     def decode(params, state, active, remaining, rng):
+        bt = state["block_tables"]
+
         def step_fn(carry, _):
             ck_all, cv_all, pos, tok, act, rem, key = carry
             x = params["embed"][tok[:, None]]             # (S, 1, d)
 
             def layer_fn(h, inp):
                 p_layer, ck, cv = inp
-                h, ck, cv = _decode_layer(cfg, p_layer, h, ck, cv, pos, act)
+                h, ck, cv = _decode_layer(cfg, p_layer, h, ck, cv, bt,
+                                          pos, act)
                 return h, (ck, cv)
 
             x, (cks, cvs) = jax.lax.scan(

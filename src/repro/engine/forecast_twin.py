@@ -8,6 +8,13 @@ whose slots retire as their budgets drain — exactly the schedule the real
 engine executed, but costed with ``WorkloadModel`` + ``Forecaster`` on a
 target :class:`HardwareSpec`.
 
+Prefix caching is replayed for free: a prefix-hit admission's trace simply
+starts its chunks at ``past_len == cached`` (the shared blocks were never
+prefilled), so the twin prices only the cache-miss suffix — the same
+physics as the engine.  :func:`cold_trace` rewrites a hit trace into its
+cache-cold counterfactual, which is how the TTFT savings of prefix reuse
+are forecast (``TraceForecast.prefill_time`` hit vs. cold).
+
 This extends the paper's forecasting (single uniform request, Eqs. 1–6) to
 mixed continuous-batching traffic: per-request TTFT/TPOT forecasts and an
 aggregate forecast TPS for the whole served trace, comparable against the
@@ -16,16 +23,20 @@ engine's measured metrics (``benchmarks/engine_throughput.py``).
 Scope note: the twin costs the *useful* work of the schedule — only the
 slots active at each step and only the valid tokens of each chunk.  The
 executable engine, being jit-compiled with static shapes, additionally
-burns compute on masked-out slots and padded chunk tails; that padding
-overhead is an implementation artifact of the XLA engine, not part of the
-analytical serving scenario, so forecast-vs-measured deltas include it.
+burns compute on masked-out slots and padded chunk tails, and its paged
+attention gathers each slot's blocks back into a contiguous virtual
+sequence per layer (a data movement the ``block_size`` table-read model
+prices only as id reads — XLA may or may not fuse the rematerialization
+away); both overheads are implementation artifacts of the XLA engine, not
+part of the analytical serving scenario, so forecast-vs-measured deltas
+include them.
 Forecast TTFT is admission → first token (queue time excluded); the
 engine's measured TTFT includes queueing.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import ArchConfig, Variant
 from repro.core.forecast import Forecaster
@@ -41,6 +52,7 @@ class RequestForecast:
     ttft: float = 0.0           # s, admission → first token (queue excluded)
     finished: float = 0.0       # s, simulated clock at completion
     n_tokens: int = 0
+    cached_tokens: int = 0      # prompt tokens served from shared blocks
     _admitted_at: float = 0.0
     _first_token_at: float = 0.0
 
@@ -48,7 +60,11 @@ class RequestForecast:
     def tpot(self) -> float:
         if self.n_tokens <= 1:
             return 0.0
-        return (self.finished - self._first_token_at) / (self.n_tokens - 1)
+        return (self.finished - self.first_token_at) / (self.n_tokens - 1)
+
+    @property
+    def first_token_at(self) -> float:
+        return self._first_token_at
 
 
 @dataclasses.dataclass
@@ -56,34 +72,89 @@ class TraceForecast:
     total_time: float           # s, simulated clock at trace end
     total_tokens: int
     requests: Dict[int, RequestForecast]
+    prefill_time: float = 0.0   # s spent in prefill chunks (TTFT work)
+    cached_tokens: int = 0      # prompt tokens the schedule served from cache
+    prompt_tokens: int = 0      # prompt tokens offered (cached + prefilled)
 
     @property
     def tps(self) -> float:
         """Aggregate generated-tokens/s forecast for the served trace."""
+        if self.total_tokens == 0:
+            return 0.0
         return self.total_tokens / max(self.total_time, 1e-30)
 
     @property
     def mean_ttft(self) -> float:
         rs = self.requests.values()
-        return sum(r.ttft for r in rs) / max(len(rs), 1)
+        if not rs:
+            return 0.0
+        return sum(r.ttft for r in rs) / len(rs)
 
     @property
     def mean_tpot(self) -> float:
         rs = [r for r in self.requests.values() if r.n_tokens > 1]
-        return sum(r.tpot for r in rs) / max(len(rs), 1)
+        if not rs:
+            return 0.0
+        return sum(r.tpot for r in rs) / len(rs)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of offered prompt tokens served from shared blocks."""
+        if self.prompt_tokens == 0:
+            return 0.0
+        return self.cached_tokens / self.prompt_tokens
+
+
+def cold_trace(trace: Sequence[TraceEvent]) -> List[TraceEvent]:
+    """Rewrite a (possibly prefix-hit) trace into its cache-cold twin.
+
+    Every admission whose chunks start at ``past_len == cached > 0`` gains
+    leading chunks covering ``[0, cached)`` and all its events drop to
+    ``cached = 0``.  Backfill granularity is the largest chunk observed
+    anywhere in the trace — the best estimate of the engine's chunk_size
+    (cold admissions emit full-size chunks; a warm admission's own suffix
+    chunks can be tail remainders as small as one token).  Replaying the
+    result forecasts the same schedule without prefix caching; by
+    construction its prefill work is a superset of the hit trace's, which
+    grounds the TTFT-savings forecast.
+    """
+    step = max((ev.chunk for ev in trace if ev.kind == "prefill_chunk"),
+               default=1)
+    step = max(step, 1)
+    out: List[TraceEvent] = []
+    for ev in trace:
+        if ev.kind != "prefill_chunk" or ev.cached == 0:
+            out.append(ev)
+            continue
+        if ev.past_len == ev.cached:
+            # admission start: backfill the cached region in chunk steps
+            for off in range(0, ev.cached, step):
+                out.append(dataclasses.replace(
+                    ev, chunk=min(step, ev.cached - off), past_len=off,
+                    cached=0, last=False))
+        out.append(dataclasses.replace(ev, cached=0))
+    return out
 
 
 class ForecastTwin:
-    """Forecasts engine traces on a target hardware spec."""
+    """Forecasts engine traces on a target hardware spec.
+
+    ``block_size`` (optional) prices the block-paged cache's table reads:
+    each chunk/step adds the block-table gather overhead modeled by
+    ``WorkloadModel.block_table_reads``.  Left ``None`` (default), replay
+    reproduces the pre-paging analytical numbers bit-for-bit.
+    """
 
     def __init__(self, arch: ArchConfig, hw: HardwareSpec,
                  variant: Optional[Variant] = None, *,
                  ec: Optional[float] = None, em: float = 1.0,
-                 prefill_ec: float = 1.0, prefill_em: float = 1.0):
+                 prefill_ec: float = 1.0, prefill_em: float = 1.0,
+                 block_size: Optional[int] = None):
         self.wm = WorkloadModel(arch, variant)
         self.fc = Forecaster(hw)
         self.ec, self.em = ec, em
         self.prefill_ec, self.prefill_em = prefill_ec, prefill_em
+        self.block_size = block_size
         self._prefill_memo: Dict[tuple, float] = {}
 
     # ------------------------------------------------------------------
@@ -91,6 +162,9 @@ class ForecastTwin:
         key = (chunk, past_len)
         if key not in self._prefill_memo:
             db = self.wm.prefill(1, chunk, past_len=past_len)
+            if self.block_size:
+                self.wm.block_table_reads(db, 1, past_len + chunk,
+                                          self.block_size)
             self._prefill_memo[key] = self.fc.phase(
                 db.totals("prefill"), ec=self.prefill_ec,
                 em=self.prefill_em).latency
@@ -98,6 +172,10 @@ class ForecastTwin:
 
     def decode_step_latency(self, past_lens: Sequence[int]) -> float:
         totals = self.wm.decode_totals_mixed(past_lens)
+        if self.block_size:
+            for p in past_lens:
+                totals = totals.plus(self.wm.block_table_totals(
+                    1, p + 1, self.block_size))
         return self.fc.step_latency(totals, em=self.em, ec=self.ec)
 
     # ------------------------------------------------------------------
@@ -105,12 +183,22 @@ class ForecastTwin:
         clock = 0.0
         requests: Dict[int, RequestForecast] = {}
         total_tokens = 0
+        prefill_time = 0.0
+        cached_tokens = 0
+        prompt_tokens = 0
         for ev in trace:
             if ev.kind == "prefill_chunk":
                 rf = requests.setdefault(ev.rid, RequestForecast(rid=ev.rid))
-                if ev.past_len == 0:
+                if ev.past_len == ev.cached:
+                    # admission start (cache-hit tokens were never chunked)
                     rf._admitted_at = clock
-                clock += self.prefill_chunk_latency(ev.chunk, ev.past_len)
+                    rf.cached_tokens = ev.cached
+                    cached_tokens += ev.cached
+                    prompt_tokens += ev.cached
+                dt = self.prefill_chunk_latency(ev.chunk, ev.past_len)
+                clock += dt
+                prefill_time += dt
+                prompt_tokens += ev.chunk
                 if ev.last:
                     # admission ends: the first token comes from these logits
                     rf.ttft = clock - rf._admitted_at
@@ -141,7 +229,9 @@ class ForecastTwin:
             else:
                 raise ValueError(f"unknown trace event kind {ev.kind!r}")
         return TraceForecast(total_time=clock, total_tokens=total_tokens,
-                             requests=requests)
+                             requests=requests, prefill_time=prefill_time,
+                             cached_tokens=cached_tokens,
+                             prompt_tokens=prompt_tokens)
 
 
 def replay_trace(arch: ArchConfig, hw: HardwareSpec,

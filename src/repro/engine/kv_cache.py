@@ -1,18 +1,28 @@
-"""Slot-paged KV cache for the continuous-batching engine.
+"""Block-paged KV cache for the continuous-batching engine.
 
-Each of ``max_slots`` concurrent requests owns one *slot* — a page of
-``max_len`` positions — in preallocated, sharded cache buffers shaped
+KV storage is one global pool of ``n_blocks`` fixed-size blocks of
+``block_size`` token positions, in preallocated, sharded cache buffers
+shaped
 
-    (n_attn_layers, max_slots, max_len, n_kv_heads, head_dim)
+    (n_attn_layers, n_blocks, block_size, n_kv_heads, head_dim)
 
-with a per-slot write cursor ``pos`` (the number of tokens cached for that
-slot).  Slots are freed on request completion (EOS or token budget) and
-reused by the next admission without reallocating: resetting ``pos`` to 0
-is sufficient because every attention mask only admits keys at positions
-``< pos``, so stale entries from the previous occupant are never read.
+Each of ``max_slots`` concurrent requests owns a *block table* — a row of
+physical block ids whose concatenation is the request's virtual KV
+sequence (attention gathers pages through the table) — plus a write
+cursor ``pos`` (tokens cached for that slot, prefix hits included).
+Blocks are ref-counted by the host-side :class:`~.block_pool.BlockPool`,
+so requests whose prompts share a block-aligned prefix map the same
+physical blocks (radix prefix caching, copy-on-write on divergence);
+see ``repro.engine.block_pool``.
 
-Supports quantized KV storage (``int8`` buffers, paper §3.3.3) — attention
-math reads the cache cast back to the activation dtype.
+Supports quantized KV storage (``int8`` buffers, paper §3.3.3) —
+attention math reads the cache cast back to the activation dtype.
+
+Migration note (PR 3): the former slot-paged ``PagedKVCache(cfg,
+max_slots, max_len)`` — one contiguous ``max_len`` page per slot — was
+replaced by :class:`BlockPagedKVCache`.  ``PagedKVCache`` remains as a
+constructor-compatible alias that maps the old geometry onto blocks
+(``n_blocks = max_slots * ceil(max_len / block_size)``).
 """
 from __future__ import annotations
 
@@ -51,38 +61,54 @@ def check_supported(cfg: ArchConfig) -> None:
 
 
 @dataclasses.dataclass(frozen=True)
-class PagedKVCache:
-    """Geometry + (de)allocation of the slot-paged cache buffers.
+class BlockPagedKVCache:
+    """Geometry + (de)allocation of the block-paged cache buffers.
 
     The buffers themselves live inside the engine's device state dict (so
     they can be donated through jit); this object is the static descriptor
-    that creates, shards and interprets them.
+    that creates, shards and interprets them.  ``max_blocks_per_seq`` is
+    the block-table width — the per-request virtual KV capacity is
+    ``max_blocks_per_seq * block_size`` positions.
     """
     cfg: ArchConfig
     max_slots: int
-    max_len: int
+    n_blocks: int
+    block_size: int
+    max_blocks_per_seq: int
     kv_dtype: str = "bf16"
 
     def __post_init__(self):
         check_supported(self.cfg)
+        if min(self.max_slots, self.n_blocks, self.block_size,
+               self.max_blocks_per_seq) < 1:
+            raise ValueError("cache geometry fields must all be >= 1")
 
     @property
     def n_layers(self) -> int:
         return self.cfg.n_layers
 
+    @property
+    def max_len(self) -> int:
+        """Virtual KV positions addressable by one request's table."""
+        return self.max_blocks_per_seq * self.block_size
+
     def buffer_shape(self):
         c = self.cfg
-        return (c.n_layers, self.max_slots, self.max_len,
+        return (c.n_layers, self.n_blocks, self.block_size,
                 c.n_kv_heads, c.head_dim)
 
     def init_state(self) -> Dict[str, jax.Array]:
-        """Fresh engine device state: empty cache + per-slot cursors."""
+        """Fresh engine device state: empty block pool + per-slot tables."""
         kvd = kv_jnp_dtype(self.kv_dtype)
         shape = self.buffer_shape()
         return {
             "cache_k": jnp.zeros(shape, kvd),
             "cache_v": jnp.zeros(shape, kvd),
-            # per-slot number of cached tokens (the slot's write cursor)
+            # per-slot block table: physical block id of each virtual page
+            "block_tables": jnp.zeros(
+                (self.max_slots, self.max_blocks_per_seq), jnp.int32),
+            # per-slot number of cached tokens (the slot's write cursor;
+            # counts prefix-hit tokens mapped from shared blocks too)
             "pos": jnp.zeros((self.max_slots,), jnp.int32),
             # last sampled token per slot (input to the next decode step)
             "tok": jnp.zeros((self.max_slots,), jnp.int32),
@@ -92,17 +118,18 @@ class PagedKVCache:
         return jax.eval_shape(self.init_state)
 
     def logical_axes(self) -> Dict[str, tuple]:
+        # the block axis is a global pool any slot may address, so it is
+        # replicated; TP shards the head axis as in the lockstep state
         return {
-            "cache_k": (None, "batch", "kv_len", "kv_heads", None),
-            "cache_v": (None, "batch", "kv_len", "kv_heads", None),
+            "cache_k": (None, None, "kv_len", "kv_heads", None),
+            "cache_v": (None, None, "kv_len", "kv_heads", None),
+            "block_tables": ("batch", None),
             "pos": ("batch",),
             "tok": ("batch",),
         }
 
     def shardings(self, mesh: Mesh, policy: S.ShardingPolicy
                   ) -> Dict[str, NamedSharding]:
-        """Slot axis shards like a batch (DP), heads over TP, same
-        divisibility fallbacks as the lockstep decode state."""
         axes = self.logical_axes()
         out = {}
         for k, sds in self.abstract_state().items():
@@ -115,17 +142,44 @@ class PagedKVCache:
     # ------------------------------------------------------------------
     def reset_slot(self, state: Dict[str, jax.Array], slot: int
                    ) -> Dict[str, jax.Array]:
-        """Free a slot for reuse.  O(1): only the cursor is cleared —
-        stale KV entries are unreachable once ``pos == 0``."""
+        """Clear a slot's cursor for reuse.  O(1): stale KV entries are
+        unreachable once ``pos == 0`` (block frees happen in the pool)."""
         state = dict(state)
         state["pos"] = state["pos"].at[slot].set(0)
         state["tok"] = state["tok"].at[slot].set(0)
         return state
 
-    def bytes_per_slot(self) -> int:
+    def copy_block(self, state: Dict[str, jax.Array], src: int, dst: int
+                   ) -> Dict[str, jax.Array]:
+        """Copy-on-write fork: duplicate physical block ``src`` into the
+        freshly allocated ``dst`` across all layers and both K/V buffers,
+        so the owner of ``dst`` may write without dirtying the shared
+        ``src``."""
+        state = dict(state)
+        for c in ("cache_k", "cache_v"):
+            state[c] = state[c].at[:, dst].set(state[c][:, src])
+        return state
+
+    def bytes_per_block(self) -> int:
         c = self.cfg
         el = jnp.dtype(kv_jnp_dtype(self.kv_dtype)).itemsize
-        return 2 * c.n_layers * self.max_len * c.n_kv_heads * c.head_dim * el
+        return (2 * c.n_layers * self.block_size * c.n_kv_heads
+                * c.head_dim * el)
 
     def total_bytes(self) -> int:
-        return self.max_slots * self.bytes_per_slot()
+        return self.n_blocks * self.bytes_per_block()
+
+
+def PagedKVCache(cfg: ArchConfig, max_slots: int, max_len: int,
+                 kv_dtype: str = "bf16", *,
+                 block_size: int = 16) -> BlockPagedKVCache:
+    """Deprecated alias for the pre-block-paging constructor signature.
+
+    Maps the old slot-paged geometry (one ``max_len`` page per slot) onto
+    an equivalently sized block pool.  New code should construct
+    :class:`BlockPagedKVCache` directly.
+    """
+    bps = -(-max_len // block_size)
+    return BlockPagedKVCache(cfg, max_slots, n_blocks=max_slots * bps,
+                             block_size=block_size, max_blocks_per_seq=bps,
+                             kv_dtype=kv_dtype)

@@ -8,9 +8,18 @@ decode block releases its slot for the next admission while the remaining
 slots keep decoding — which is what distinguishes continuous batching from
 the legacy lockstep ``Server``.
 
+KV storage is block-paged (``repro.engine.block_pool``): admission maps
+the longest block-aligned prompt prefix already present in the radix
+index onto shared physical blocks — those *cached* tokens are never
+prefilled — and charges only the cache-miss suffix to chunked prefill.
+When the pool cannot supply the blocks a request needs (after evicting
+cold index entries), admission stalls: the request waits in the queue
+until running requests release blocks (admission backpressure).
+
 Every step appends a :class:`TraceEvent`; the trace is both the measured
 run's structure and the input replayed by the analytical twin
-(``repro.engine.forecast_twin``) to forecast the same serving schedule.
+(``repro.engine.forecast_twin``) to forecast the same serving schedule —
+including how many prompt tokens each admission served from cache.
 """
 from __future__ import annotations
 
@@ -25,22 +34,35 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
+from repro.core.workload import DEFAULT_KV_BLOCK_SIZE
 from repro.runtime.sharding import ShardingPolicy
 
-from .kv_cache import PagedKVCache
+from .block_pool import BlockPool, RadixIndex
+from .kv_cache import BlockPagedKVCache
 from .decode_loop import make_engine_fns, sample
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    max_slots: int                      # concurrent requests (KV slot pages)
-    max_len: int                        # tokens per slot page
+    max_slots: int                      # concurrent requests
+    max_len: int                        # max prompt+budget tokens per request
     chunk_size: int = 32                # chunked-prefill admission chunk
     decode_block: int = 8               # tokens per fused decode dispatch
+    block_size: int = DEFAULT_KV_BLOCK_SIZE  # tokens per KV block (paging)
+    n_blocks: Optional[int] = None      # pool size (default: slots worth)
+    prefix_cache: bool = True           # radix prefix caching across requests
     kv_dtype: str = "bf16"              # bf16 | int8 (KV compression §3.3.3)
     temperature: float = 0.0            # 0 = greedy
     eos_id: Optional[int] = None        # stop token (None: budget only)
     seed: int = 0
+
+    @property
+    def blocks_per_seq(self) -> int:
+        return -(-self.max_len // self.block_size)
+
+    @property
+    def pool_blocks(self) -> int:
+        return self.n_blocks or self.max_slots * self.blocks_per_seq
 
 
 @dataclasses.dataclass
@@ -60,6 +82,7 @@ class RequestResult:
     rid: int
     tokens: List[int]                   # generated tokens (incl. first)
     prompt_len: int
+    cached_tokens: int = 0              # prompt tokens served from the cache
     # measured wall-clock timestamps (s, engine-relative)
     arrival: float = 0.0
     admitted: float = 0.0               # prefill started (left the queue)
@@ -89,7 +112,9 @@ class TraceEvent:
 
     kind == "prefill_chunk": one prompt chunk of ``rid`` into ``slot``
         (batch 1, ``chunk`` new tokens on top of ``past_len`` cached);
-        ``last`` marks the chunk that produces the request's first token.
+        ``cached`` is the request's prefix-cache hit length (constant
+        across its chunks — the first chunk has ``past_len == cached``),
+        and ``last`` marks the chunk that produces the first token.
     kind == "decode_block": ``n_steps`` fused steps over the active slots;
         ``slots`` holds (rid, past_len, remaining_budget) per active slot
         at block start, enough for the twin to replay per-step attrition.
@@ -99,13 +124,22 @@ class TraceEvent:
     slot: int = -1
     chunk: int = 0
     past_len: int = 0
+    cached: int = 0
     last: bool = False
     n_steps: int = 0
     slots: Tuple[Tuple[int, int, int], ...] = ()
 
 
+@dataclasses.dataclass
+class _Allocation:
+    """Outcome of block accounting for one admission."""
+    table: List[int]                    # physical block ids, virtual order
+    cached: int                         # prompt tokens mapped from the index
+    cow: Optional[Tuple[int, int]]      # (src, dst) partial-block fork
+
+
 class Engine:
-    """Continuous-batching serving engine over a slot-paged KV cache."""
+    """Continuous-batching serving engine over a block-paged KV cache."""
 
     def __init__(self, cfg: ArchConfig, params, mesh: Mesh,
                  policy: ShardingPolicy, ec: EngineConfig):
@@ -113,8 +147,12 @@ class Engine:
             raise ValueError("chunk_size exceeds max_len")
         self.cfg, self.params, self.ec = cfg, params, ec
         self.mesh = mesh
-        self.cache = PagedKVCache(cfg, ec.max_slots, ec.max_len,
-                                  kv_dtype=ec.kv_dtype)
+        self.cache = BlockPagedKVCache(
+            cfg, ec.max_slots, n_blocks=ec.pool_blocks,
+            block_size=ec.block_size,
+            max_blocks_per_seq=ec.blocks_per_seq, kv_dtype=ec.kv_dtype)
+        self.pool = BlockPool(ec.pool_blocks, ec.block_size)
+        self.index = RadixIndex(self.pool) if ec.prefix_cache else None
         self.prefill_fn, self.decode_fn, self.shardings = make_engine_fns(
             cfg, mesh, policy, self.cache, chunk_size=ec.chunk_size,
             decode_block=ec.decode_block, temperature=ec.temperature,
@@ -129,6 +167,11 @@ class Engine:
         self.step_idx = 0
         self._t0 = time.perf_counter()
         self._arrivals: Dict[int, float] = {}
+        self._slot_blocks: Dict[int, List[int]] = {}   # slot -> owned refs
+        # prefix-cache counters over the run
+        self.prefix_hit_tokens = 0
+        self.prompt_tokens = 0
+        self.peak_blocks_in_use = 0
 
     # ------------------------------------------------------------------
     def _now(self) -> float:
@@ -141,8 +184,12 @@ class Engine:
         if len(req.prompt) + req.max_new > self.ec.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt+budget "
-                f"{len(req.prompt)}+{req.max_new} exceeds slot page "
-                f"{self.ec.max_len}")
+                f"{len(req.prompt)}+{req.max_new} exceeds per-request "
+                f"capacity {self.ec.max_len}")
+        if self._blocks_needed(req) > self.pool.n_blocks:
+            raise ValueError(
+                f"request {req.rid}: needs {self._blocks_needed(req)} KV "
+                f"blocks but the pool only has {self.pool.n_blocks}")
         self.queue.append(req)
         self._arrivals[req.rid] = self._now()
 
@@ -154,18 +201,91 @@ class Engine:
     def done(self) -> bool:
         return not self.queue and not self.running
 
+    @property
+    def blocks_in_use(self) -> int:
+        return self.pool.in_use
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of offered prompt tokens served from shared blocks."""
+        return self.prefix_hit_tokens / max(self.prompt_tokens, 1)
+
     # ------------------------------------------------------------------
-    # admission: chunked prefill of one request into one free slot
+    # block accounting: prefix match → evict → allocate (or stall)
     # ------------------------------------------------------------------
-    def _admit(self, req: Request, slot: int) -> None:
+    def _blocks_needed(self, req: Request) -> int:
+        # positions written: prompt plus all but the final sampled token
+        bs = self.ec.block_size
+        return -(-(len(req.prompt) + req.max_new - 1) // bs)
+
+    def _allocate(self, req: Request) -> Optional[_Allocation]:
+        """Map the request onto physical blocks, or None (backpressure).
+
+        The longest indexed full-block prefix is mapped read-only into the
+        table; if the usable prefix ends mid-block (a hit capped at
+        ``prompt_len - 1`` so at least one token feeds the LM head), the
+        partial block is copy-on-write forked.  Fresh blocks cover the
+        suffix and the generation budget.  If the COW attempt cannot get
+        blocks (the fork's source pin can occupy the last free block of an
+        exactly-sized pool), the hit is aligned down to full blocks and
+        retried before admission stalls.
+        """
+        bs = self.ec.block_size
+        prompt = [int(t) for t in req.prompt]
+        hits = self.index.match(prompt) if self.index is not None else []
+        # at least one prompt token must be computed to produce logits
+        cached = min(len(hits) * bs, len(prompt) - 1)
+        alloc = self._try_allocate(req, hits, cached)
+        if alloc is None and cached % bs:
+            alloc = self._try_allocate(req, hits, (cached // bs) * bs)
+        return alloc
+
+    def _try_allocate(self, req: Request, hits: List[int], cached: int
+                      ) -> Optional[_Allocation]:
+        bs = self.ec.block_size
+        keep, cow_src = hits[:cached // bs], None
+        if cached % bs:
+            cow_src = hits[cached // bs]
+        for b in keep + ([cow_src] if cow_src is not None else []):
+            self.pool.incref(b)      # pin against eviction while we build
+        n_total = self._blocks_needed(req)
+        n_new = n_total - len(keep)
+        if self.pool.n_free < n_new and self.index is not None:
+            self.index.evict(n_new - self.pool.n_free)
+        if self.pool.n_free < n_new:
+            for b in keep + ([cow_src] if cow_src is not None else []):
+                self.pool.decref(b)
+            return None              # stall: wait for running requests
+        fresh = [self.pool.alloc() for _ in range(n_new)]
+        cow = None
+        if cow_src is not None:
+            cow = (cow_src, fresh[0])
+            self.pool.decref(cow_src)   # only the fork is kept in the table
+        return _Allocation(table=keep + fresh, cached=cached, cow=cow)
+
+    # ------------------------------------------------------------------
+    # admission: chunked prefill of the cache-miss suffix into one slot
+    # ------------------------------------------------------------------
+    def _admit(self, req: Request, slot: int, alloc: _Allocation) -> None:
         ec = self.ec
         prompt = np.asarray(req.prompt, np.int32)
-        n = len(prompt)
+        n, cached = len(prompt), alloc.cached
+        self._slot_blocks[slot] = alloc.table
+        self.prefix_hit_tokens += cached
+        self.prompt_tokens += n
+        if alloc.cow is not None:
+            self.state = self.cache.copy_block(self.state, *alloc.cow)
+        row = np.zeros((self.cache.max_blocks_per_seq,), np.int32)
+        row[:len(alloc.table)] = alloc.table
+        self.state["block_tables"] = (
+            self.state["block_tables"].at[slot].set(jnp.asarray(row)))
+        self.state["pos"] = self.state["pos"].at[slot].set(cached)
         res = RequestResult(rid=req.rid, tokens=[], prompt_len=n,
+                            cached_tokens=cached,
                             arrival=self._arrivals.get(req.rid, 0.0),
                             admitted=self._now())
         logits = None
-        for off in range(0, n, ec.chunk_size):
+        for off in range(cached, n, ec.chunk_size):
             piece = prompt[off:off + ec.chunk_size]
             valid = len(piece)
             if valid < ec.chunk_size:
@@ -176,7 +296,14 @@ class Engine:
                 jnp.int32(slot), jnp.int32(off), jnp.int32(valid))
             self.trace.append(TraceEvent(
                 kind="prefill_chunk", rid=req.rid, slot=slot,
-                chunk=valid, past_len=off, last=last))
+                chunk=valid, past_len=off, cached=cached, last=last))
+        if self.index is not None:
+            # the prompt's full blocks are now populated and immutable:
+            # publish them for future admissions (dedupe keeps first-comer)
+            self.index.insert(prompt[:(n // ec.block_size) * ec.block_size],
+                              alloc.table[:n // ec.block_size])
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.pool.in_use)
         # the request's first token is sampled from the final prefill logits
         self._rng, sub = jax.random.split(self._rng)
         first = int(sample(logits[None], ec.temperature, sub)[0])
@@ -192,6 +319,8 @@ class Engine:
 
     def _free(self, slot: int) -> None:
         del self.running[slot]
+        for b in self._slot_blocks.pop(slot):
+            self.pool.decref(b)        # index refs keep shared blocks warm
         self.state = self.cache.reset_slot(self.state, slot)
         self.free_slots.append(slot)
 
@@ -202,7 +331,10 @@ class Engine:
         ec = self.ec
         while (self.free_slots and self.queue
                and self.queue[0].arrival_step <= self.step_idx):
-            self._admit(self.queue.popleft(), self.free_slots.pop(0))
+            alloc = self._allocate(self.queue[0])
+            if alloc is None:
+                break                  # pool exhausted: admission backpressure
+            self._admit(self.queue.popleft(), self.free_slots.pop(0), alloc)
         if self.running:
             slots_meta = []
             active = np.zeros((ec.max_slots,), bool)
@@ -256,15 +388,18 @@ class Engine:
 
     # ------------------------------------------------------------------
     def reset_metrics(self) -> None:
-        """Clear results/trace/clock while keeping compiled functions and
-        cache buffers — call after a warm-up run so measured wall-clock
-        excludes one-time XLA compilation."""
+        """Clear results/trace/clock while keeping compiled functions,
+        cache blocks and the prefix index — call after a warm-up run so
+        measured wall-clock excludes one-time XLA compilation."""
         if not self.done:
             raise RuntimeError("reset_metrics with requests in flight")
         self.results.clear()
         self.trace.clear()
         self._arrivals.clear()
         self.step_idx = 0
+        self.prefix_hit_tokens = 0
+        self.prompt_tokens = 0
+        self.peak_blocks_in_use = 0
         self._t0 = time.perf_counter()
 
     def warmup(self) -> None:
@@ -273,6 +408,10 @@ class Engine:
                          self.ec.max_len - self.ec.decode_block - 2)
         self.run([Request(rid=-1, prompt=[0] * max(prompt_len, 1),
                           max_new=self.ec.decode_block + 1)])
+        if self.index is not None:
+            # drop the throwaway prompt's index entries so the measured
+            # run starts with a cold cache and an empty pool
+            self.index.evict(self.pool.n_blocks)
         self.reset_metrics()
 
     def aggregate_tps(self) -> float:

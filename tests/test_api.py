@@ -258,6 +258,73 @@ def test_measure_and_trace_replay_compare():
 
 
 # ---------------------------------------------------------------------------
+# shared-prefix traffic: analytical knobs + measured/forecast agreement
+# ---------------------------------------------------------------------------
+
+def test_scenario_shared_prefix_roundtrip_and_validation():
+    scn = api.Scenario(model="llama2-7b", prompt_len=64,
+                       shared_prefix_len=48, block_size=16,
+                       prefix_cache=False)
+    back = api.Scenario.from_dict(scn.to_dict())
+    assert back == scn
+    assert back.shared_prefix_len == 48 and back.block_size == 16
+    assert not back.prefix_cache
+    assert back.cached_prefix_len == 0        # cache disabled: no hit
+    with pytest.raises(ValueError, match="shared_prefix_len"):
+        api.Scenario(model="llama2-7b", prompt_len=64, shared_prefix_len=65)
+    with pytest.raises(ValueError, match="block_size"):
+        api.Scenario(model="llama2-7b", block_size=0)
+
+
+def test_scenario_cached_prefix_block_alignment():
+    # hits are full blocks only, capped at prompt_len - 1
+    scn = api.Scenario(model="llama2-7b", prompt_len=64,
+                       shared_prefix_len=40, block_size=16)
+    assert scn.cached_prefix_len == 32        # 40 aligned down to 2 blocks
+    full = api.Scenario(model="llama2-7b", prompt_len=64,
+                        shared_prefix_len=64, block_size=16)
+    assert full.cached_prefix_len == 63       # one token must compute logits
+
+
+def test_forecast_shared_prefix_ttft_between_warm_and_cold():
+    base = api.Scenario(model="llama2-7b", batch=4, prompt_len=512,
+                        gen_len=64, chunk=128)
+    shared = dataclasses.replace(base, shared_prefix_len=384, block_size=16)
+    r = api.forecast(shared, "tpu-v5e", em=0.8)
+    x = r.extras
+    assert x["ttft_warm_s"] < r.ttft_s < x["ttft_cold_s"]
+    assert x["ttft_savings_s"] == pytest.approx(
+        x["ttft_cold_s"] - x["ttft_warm_s"])
+    assert x["cached_tokens"] == 384
+    assert x["prefix_hit_rate"] == pytest.approx(384 * 3 / (512 * 4))
+    assert "prefill_warm" in r.phases
+    assert r.phases["prefill_warm"].ops < r.phases["prefill"].ops
+    # the no-prefix scenario is untouched by the new knobs (legacy path)
+    plain = api.forecast(base, "tpu-v5e", em=0.8)
+    assert "ttft_warm_s" not in plain.extras
+    assert "prefill_warm" not in plain.phases
+
+
+def test_measure_shared_prefix_hit_rate_agrees_with_forecast():
+    """Measured radix-cache hit rate vs the analytical forecast of the
+    same traffic: identical, because both share full blocks only."""
+    scn = api.Scenario(model="qwen2-7b", reduced=True, batch=2,
+                       n_requests=3, prompt_len=24, gen_len=4, chunk=8,
+                       shared_prefix_len=16, block_size=8, decode_block=2)
+    measured = api.measure(scn)
+    assert measured.extras["prefix_hit_tokens"] == 16 * 2   # 2 warm reqs
+    fc = api.forecast(scn, "cpu", em=0.8)
+    assert measured.extras["prefix_hit_rate"] == pytest.approx(
+        fc.extras["prefix_hit_rate"])
+    # replaying the measured trace reports the same hit rate + a savings
+    replay = api.forecast(scn, "cpu", em=0.8, trace=measured.trace)
+    assert replay.extras["trace_prefix_hit_rate"] == pytest.approx(
+        measured.extras["prefix_hit_rate"])
+    assert replay.extras["trace_ttft_savings_s"] > 0
+    assert replay.extras["trace_prefill_savings_s"] > 0
+
+
+# ---------------------------------------------------------------------------
 # CLI smoke
 # ---------------------------------------------------------------------------
 

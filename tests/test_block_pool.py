@@ -1,0 +1,213 @@
+"""Block pool allocator, radix prefix index, and the hit-aware twin's
+edge cases — all host-side (no JAX model runs)."""
+import pytest
+
+from repro import configs
+from repro.core import hardware
+from repro.configs.base import Variant
+from repro.engine import (BlockPool, ForecastTwin, PoolExhausted, RadixIndex,
+                          TraceEvent, cold_trace, replay_trace)
+
+
+# ---------------------------------------------------------------------------
+# BlockPool: ref-counted free-list
+# ---------------------------------------------------------------------------
+
+def test_pool_refcount_free():
+    pool = BlockPool(4, block_size=16)
+    a = pool.alloc()
+    assert pool.refcount(a) == 1 and pool.in_use == 1
+    pool.incref(a)
+    assert not pool.decref(a)            # one ref left: still allocated
+    assert pool.in_use == 1
+    assert pool.decref(a)                # last ref: back on the free list
+    assert pool.in_use == 0 and pool.n_free == 4
+
+
+def test_pool_exhaustion_and_misuse():
+    pool = BlockPool(2, block_size=4)
+    a, _b = pool.alloc(), pool.alloc()
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    pool.decref(a)
+    assert pool.alloc() == a             # recycled
+    pool.decref(a)
+    with pytest.raises(ValueError, match="free block"):
+        pool.incref(a)                   # refcount ops on a freed block
+    with pytest.raises(ValueError, match="free block"):
+        pool.decref(a)
+
+
+# ---------------------------------------------------------------------------
+# RadixIndex: full-block prefix matching, dedupe, LRU leaf eviction
+# ---------------------------------------------------------------------------
+
+def _chain(pool, index, tokens):
+    bs = index.block_size
+    blocks = [pool.alloc() for _ in range(len(tokens) // bs)]
+    index.insert(tokens, blocks)
+    return blocks
+
+
+def test_radix_match_full_blocks_only():
+    pool = BlockPool(8, block_size=4)
+    idx = RadixIndex(pool)
+    toks = list(range(10))                       # 2 full blocks + tail of 2
+    blocks = _chain(pool, idx, toks)
+    assert len(blocks) == 2                      # the partial tail is private
+    assert idx.match(toks) == blocks
+    assert idx.match(toks[:7]) == blocks[:1]     # only 1 full block matches
+    assert idx.match([99] + toks[1:]) == []      # diverges in block 0
+
+
+def test_radix_insert_dedupes_first_comer():
+    pool = BlockPool(8, block_size=4)
+    idx = RadixIndex(pool)
+    toks = list(range(8))
+    first = _chain(pool, idx, toks)
+    dup = [pool.alloc() for _ in range(2)]
+    assert idx.insert(toks, dup) == 0            # chain exists: nothing new
+    assert idx.match(toks) == first              # first-comer blocks win
+    assert pool.refcount(dup[0]) == 1            # no index ref added
+
+
+def test_radix_evict_lru_leaf_first():
+    pool = BlockPool(8, block_size=4)
+    idx = RadixIndex(pool)
+    cold = _chain(pool, idx, [1, 2, 3, 4, 5, 6, 7, 8])     # 2-node chain
+    warm = _chain(pool, idx, [9, 10, 11, 12])
+    for b in cold + warm:
+        pool.decref(b)                           # only index refs remain
+    idx.match([9, 10, 11, 12])                   # touch: warm is MRU
+    assert idx.evict(1) == 1
+    # the cold chain's LEAF went first; its root block still matches
+    assert idx.match([1, 2, 3, 4, 5, 6, 7, 8]) == cold[:1]
+    assert idx.match([9, 10, 11, 12]) == warm
+    assert idx.evict(10) == 2                    # drains the rest
+    assert idx.n_indexed == 0 and pool.n_free == pool.n_blocks
+
+
+def test_radix_evict_skips_blocks_still_referenced():
+    pool = BlockPool(4, block_size=2)
+    idx = RadixIndex(pool)
+    held = _chain(pool, idx, [1, 2])             # request still holds a ref
+    assert idx.evict(1) == 0                     # nothing freeable: no-op
+    assert idx.n_indexed == 1                    # the warm entry survives
+    assert idx.match([1, 2]) == held             # and stays matchable
+    pool.decref(held[0])                         # request completes
+    assert idx.evict(1) == 1                     # now it can be reclaimed
+    assert idx.n_indexed == 0 and pool.n_free == pool.n_blocks
+
+
+# ---------------------------------------------------------------------------
+# forecast twin: empty / degenerate traces (regression guards)
+# ---------------------------------------------------------------------------
+
+ARCH = configs.get("llama2-7b")
+
+
+def test_twin_replay_empty_trace():
+    tf = replay_trace(ARCH, hardware.TPU_V5E, [])
+    assert tf.total_time == 0.0 and tf.total_tokens == 0
+    assert tf.tps == 0.0
+    assert tf.mean_ttft == 0.0 and tf.mean_tpot == 0.0
+    assert tf.prefix_hit_rate == 0.0 and tf.requests == {}
+
+
+def test_twin_replay_empty_decode_block():
+    """A decode_block with no live slots (all budgets drained) is a no-op."""
+    tf = replay_trace(ARCH, hardware.TPU_V5E, [
+        TraceEvent(kind="decode_block", n_steps=4, slots=())])
+    assert tf.total_time == 0.0 and tf.mean_tpot == 0.0
+
+
+def test_twin_replay_rejects_unknown_event():
+    with pytest.raises(ValueError, match="unknown trace event"):
+        replay_trace(ARCH, hardware.TPU_V5E,
+                     [TraceEvent(kind="prefill_chunk", rid=0, chunk=8),
+                      TraceEvent(kind="mystery")])
+
+
+def test_twin_single_token_request_has_zero_tpot():
+    tf = replay_trace(ARCH, hardware.TPU_V5E, [
+        TraceEvent(kind="prefill_chunk", rid=0, chunk=8, last=True)])
+    assert tf.requests[0].n_tokens == 1
+    assert tf.requests[0].tpot == 0.0 and tf.mean_tpot == 0.0
+    assert tf.mean_ttft > 0.0
+
+
+# ---------------------------------------------------------------------------
+# hit-aware replay: a prefix-hit trace never out-costs its cold twin
+# ---------------------------------------------------------------------------
+
+def _hit_trace(prompt_len, cached, chunk, rid=0):
+    """Chunk events exactly as ``Engine._admit`` emits them."""
+    events = []
+    for off in range(cached, prompt_len, chunk):
+        valid = min(chunk, prompt_len - off)
+        events.append(TraceEvent(
+            kind="prefill_chunk", rid=rid, chunk=valid, past_len=off,
+            cached=cached, last=off + valid >= prompt_len))
+    return events
+
+
+def test_cold_trace_backfills_cached_region():
+    trace = _hit_trace(72, cached=32, chunk=16)
+    cold = cold_trace(trace)
+    assert all(ev.cached == 0 for ev in cold)
+    assert sum(ev.chunk for ev in cold) == 72          # whole prompt chunked
+    assert sum(ev.chunk for ev in trace) == 40         # only the miss suffix
+    assert [ev.past_len for ev in cold] == [0, 16, 32, 48, 64]
+    # exactly one admission-ending chunk either way
+    assert sum(ev.last for ev in cold) == sum(ev.last for ev in trace) == 1
+
+
+def test_hit_trace_never_costs_more_prefill_than_cold():
+    twin = ForecastTwin(ARCH, hardware.TPU_V5E, Variant(), em=0.8)
+    for prompt_len, cached, chunk in [(40, 32, 16), (64, 63, 16),
+                                      (128, 16, 32), (17, 0, 8)]:
+        hit = twin.replay(_hit_trace(prompt_len, cached, chunk))
+        cold = twin.replay(cold_trace(_hit_trace(prompt_len, cached, chunk)))
+        assert hit.prefill_time <= cold.prefill_time * (1 + 1e-12)
+        assert hit.cached_tokens == cached and cold.cached_tokens == 0
+        assert hit.prompt_tokens == cold.prompt_tokens == prompt_len
+
+
+def test_twin_block_size_prices_table_reads_on_both_phases():
+    """Regression: the opt-in block_size knob must replay prefill AND
+    decode events (it once crashed on decode), adding a small positive
+    table-read overhead on top of the default replay."""
+    trace = _hit_trace(40, cached=0, chunk=16) + [
+        TraceEvent(kind="decode_block", n_steps=2, slots=((0, 40, 2),))]
+    plain = ForecastTwin(ARCH, hardware.TPU_V5E, Variant(), em=0.8)
+    paged = ForecastTwin(ARCH, hardware.TPU_V5E, Variant(), em=0.8,
+                         block_size=16)
+    t0, t1 = plain.replay(trace), paged.replay(trace)
+    assert t1.total_time > t0.total_time
+    assert t1.prefill_time > t0.prefill_time
+    assert (t1.total_time - t0.total_time) < 0.01 * t0.total_time
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(prompt_len=st.integers(2, 160), chunk=st.integers(1, 48),
+           data=st.data())
+    def test_hit_le_cold_prefill_property(prompt_len, chunk, data):
+        """Replaying a prefix-hit schedule must never forecast MORE
+        prefill work than the cache-cold schedule of the same prompt."""
+        cached = data.draw(st.integers(0, prompt_len - 1))
+        twin = ForecastTwin(ARCH, hardware.TPU_V5E, Variant())
+        trace = _hit_trace(prompt_len, cached, chunk)
+        hit = twin.replay(trace)
+        cold = twin.replay(cold_trace(trace))
+        assert hit.prefill_time <= cold.prefill_time * (1 + 1e-12)
+        # TTFT of the lone request shrinks (or stays) with the hit
+        assert (hit.requests[0].ttft
+                <= cold.requests[0].ttft * (1 + 1e-12))

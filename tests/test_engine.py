@@ -114,7 +114,7 @@ def test_engine_rejects_invalid_requests(mesh, cfg, params):
                                   decode_block=2))
     with pytest.raises(ValueError, match="max_new"):
         eng.submit(Request(rid=0, prompt=[1, 2], max_new=0))
-    with pytest.raises(ValueError, match="exceeds slot page"):
+    with pytest.raises(ValueError, match="exceeds per-request capacity"):
         eng.submit(Request(rid=1, prompt=[1] * 30, max_new=8))
     with pytest.raises(ValueError, match="empty prompt"):
         Request(rid=2, prompt=[], max_new=4)
@@ -130,6 +130,118 @@ def test_engine_int8_kv_runs(mesh, cfg, params):
                                    max_new=4) for i in range(2)])
     assert eng.state["cache_k"].dtype == jnp.int8
     assert all(len(r.tokens) == 4 for r in results)
+
+
+# ---------------------------------------------------------------------------
+# block-paged prefix caching (radix index, COW, backpressure)
+# ---------------------------------------------------------------------------
+
+def test_prefix_hit_skips_shared_prompt_blocks(mesh, cfg, params):
+    """Two requests sharing a 32-token prefix: the second admission maps
+    the shared blocks and prefills only its 16-token suffix (acceptance:
+    ~N fewer prompt tokens prefilled, trace shows cached > 0)."""
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size, 32).tolist()
+    reqs = [Request(rid=i,
+                    prompt=shared + rng.integers(0, cfg.vocab_size,
+                                                 16).tolist(),
+                    max_new=4) for i in range(2)]
+    with mesh:
+        eng = Engine(cfg, params, mesh, ShardingPolicy(),
+                     EngineConfig(max_slots=2, max_len=96, chunk_size=16,
+                                  decode_block=2, block_size=16))
+        results = eng.run(reqs)
+    assert results[0].cached_tokens == 0          # cold: indexes the prefix
+    assert results[1].cached_tokens == 32         # warm: full 2-block hit
+    chunks1 = [e for e in eng.trace
+               if e.kind == "prefill_chunk" and e.rid == 1]
+    assert sum(e.chunk for e in chunks1) == 16    # only the suffix chunked
+    assert all(e.cached == 32 for e in chunks1)
+    assert chunks1[0].past_len == 32
+    assert eng.prefix_hit_tokens == 32
+    assert eng.prefix_hit_rate == pytest.approx(32 / 96)
+    assert all(len(r.tokens) == 4 for r in results)
+
+
+def test_cow_fork_identical_prompts_int8_roundtrip(mesh, cfg, params):
+    """An identical prompt across two runs is a full-prompt hit capped at
+    prompt_len-1 — the partial tail block is copy-on-write forked.  With
+    int8 KV the warm request decodes from blocks the cold one quantized,
+    so equal greedy outputs are an int8 block round-trip check."""
+    prompt = list(_prompts(cfg, 1, 32, seed=3)[0])
+    with mesh:
+        eng = Engine(cfg, params, mesh, ShardingPolicy(),
+                     EngineConfig(max_slots=1, max_len=64, chunk_size=16,
+                                  decode_block=2, block_size=16,
+                                  kv_dtype="int8"))
+        eng.run([Request(rid=0, prompt=prompt, max_new=6)])
+        eng.run([Request(rid=1, prompt=prompt, max_new=6)])
+    assert eng.state["cache_k"].dtype == jnp.int8
+    cold, warm = eng.results[0], eng.results[1]
+    assert cold.cached_tokens == 0
+    assert warm.cached_tokens == 31               # capped at prompt_len - 1
+    assert warm.tokens == cold.tokens             # greedy + shared KV bytes
+
+
+def test_pool_exhaustion_admission_backpressure(mesh, cfg, params):
+    """A pool with room for one request serializes two: the second stalls
+    in the queue (admission backpressure) until the first releases its
+    blocks, and both still complete."""
+    prompts = _prompts(cfg, 2, 32, seed=5)
+    reqs = [Request(rid=i, prompt=list(prompts[i]), max_new=8)
+            for i in range(2)]                    # 39 positions -> 3 blocks
+    with mesh:
+        eng = Engine(cfg, params, mesh, ShardingPolicy(),
+                     EngineConfig(max_slots=2, max_len=64, chunk_size=16,
+                                  decode_block=2, block_size=16,
+                                  n_blocks=3))
+        results = eng.run(reqs)
+    assert all(len(r.tokens) == 8 for r in results)
+    # never enough blocks for both: no decode block saw both rids
+    for ev in eng.trace:
+        if ev.kind == "decode_block":
+            assert len({rid for rid, _, _ in ev.slots}) == 1
+    assert eng.peak_blocks_in_use <= 3
+    assert results[1].queue_time > 0
+    # a request that can never fit the pool is rejected, not deadlocked
+    with pytest.raises(ValueError, match="KV blocks"):
+        eng.submit(Request(rid=9, prompt=list(prompts[0]), max_new=18))
+
+
+def test_tight_pool_cow_retry_degrades_to_aligned_hit(mesh, cfg, params):
+    """Regression: an exactly-sized pool where the COW fork's source pin
+    would eat the last free block must fall back to a block-aligned hit
+    (no COW) instead of crashing or deadlocking — and warmup must leave
+    the pool cold (no index residue from the throwaway request)."""
+    prompt = list(_prompts(cfg, 1, 32, seed=13)[0])
+    with mesh:
+        eng = Engine(cfg, params, mesh, ShardingPolicy(),
+                     EngineConfig(max_slots=1, max_len=64, chunk_size=16,
+                                  decode_block=2, block_size=16,
+                                  n_blocks=3))
+        eng.warmup()
+        assert eng.index.n_indexed == 0 and eng.pool.in_use == 0
+        eng.run([Request(rid=0, prompt=prompt, max_new=6)])
+        eng.run([Request(rid=1, prompt=prompt, max_new=6)])
+    # full-prompt hit (31) needs a COW block the 3-block pool can't pin;
+    # the retry keeps the one evictable-free aligned block instead
+    assert eng.results[1].cached_tokens == 16
+    assert eng.results[0].tokens == eng.results[1].tokens
+
+
+def test_prefix_cache_disabled_is_cold(mesh, cfg, params):
+    prompt = list(_prompts(cfg, 1, 32, seed=9)[0])
+    with mesh:
+        eng = Engine(cfg, params, mesh, ShardingPolicy(),
+                     EngineConfig(max_slots=1, max_len=64, chunk_size=16,
+                                  decode_block=2, prefix_cache=False))
+        eng.run([Request(rid=0, prompt=prompt, max_new=4)])
+        eng.run([Request(rid=1, prompt=prompt, max_new=4)])
+    assert eng.index is None
+    assert all(r.cached_tokens == 0 for r in eng.results.values())
+    assert all(e.cached == 0 for e in eng.trace
+               if e.kind == "prefill_chunk")
+    assert eng.results[0].tokens == eng.results[1].tokens
 
 
 # ---------------------------------------------------------------------------
@@ -182,3 +294,38 @@ def test_twin_forecast_matches_single_request_tpot(mesh, cfg, params):
     # aggregate forecast covers every generated token
     assert fcst.total_tokens == n_new
     assert fcst.tps == pytest.approx(n_new / fcst.total_time)
+
+
+def test_twin_replays_prefix_hit_schedule(mesh, cfg, params):
+    """The twin prices a warm admission as exactly its cache-miss suffix
+    chunks (acceptance: hit-aware replay within existing tolerance), and
+    the cold counterfactual of the same trace prices the full prompt."""
+    from repro.engine import cold_trace
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, cfg.vocab_size, 32).tolist()
+    reqs = [Request(rid=i,
+                    prompt=shared + rng.integers(0, cfg.vocab_size,
+                                                 16).tolist(),
+                    max_new=4) for i in range(2)]
+    with mesh:
+        eng = Engine(cfg, params, mesh, ShardingPolicy(),
+                     EngineConfig(max_slots=1, max_len=96, chunk_size=16,
+                                  decode_block=2, block_size=16))
+        eng.run(reqs)
+    twin = ForecastTwin(cfg, hardware.TPU_V5E, Variant(), em=0.8)
+    fcst = twin.replay(eng.trace)
+    assert fcst.cached_tokens == 32
+    assert fcst.prefix_hit_rate == pytest.approx(32 / 96)
+    # warm TTFT == the one 16-token suffix chunk at past_len 32, exactly
+    assert fcst.requests[1].ttft == pytest.approx(
+        twin.prefill_chunk_latency(16, 32), rel=1e-12)
+    # cold request paid for every chunk of the same prompt length
+    assert fcst.requests[0].ttft == pytest.approx(
+        sum(twin.prefill_chunk_latency(16, p) for p in (0, 16, 32)),
+        rel=1e-12)
+    cold = twin.replay(cold_trace(eng.trace))
+    assert cold.cached_tokens == 0
+    assert cold.prefill_time > fcst.prefill_time
+    assert cold.requests[1].ttft > fcst.requests[1].ttft
+    # decode side of the schedule is untouched by the rewrite
+    assert cold.total_tokens == fcst.total_tokens
