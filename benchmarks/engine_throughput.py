@@ -1,30 +1,40 @@
 """Engine throughput: measured continuous-batching TPS vs the LIFE twin,
-via the Scenario→Report API.
+via the Scenario→Report API — for BOTH attention read paths.
 
 Runs the serving engine on CPU (reduced model) across several
 batch/traffic settings (``api.measure``), then replays each run's own
 scheduler trace through the analytical twin
-(``api.forecast(..., trace=measured.trace)``).  Two forecasts per setting:
+(``api.forecast(..., trace=measured.trace)``).  Per setting:
 
 * ``forecast_tps_cpu``  — twin of the REDUCED model (the one actually
-  measured) on the paper's Ryzen CPU spec: the apples-to-apples
-  comparison, diffed against the measured report with ``api.compare``;
-* ``forecast_tps_v5e``  — twin of the FULL model on the TPU v5e target,
-  the deployment forecast the ROADMAP cares about.
+  measured, priced for the attention impl actually run) on the paper's
+  Ryzen CPU spec: the apples-to-apples comparison, diffed against the
+  measured report with ``api.compare``;
+* ``forecast_tps_v5e_gather`` / ``forecast_tps_v5e_paged`` — twins of the
+  FULL model on the TPU v5e target, one per attention impl: the gather
+  path pays the per-layer page rematerialization of its block-table
+  gather, the paged path prices the Pallas paged flash kernels (fused
+  attention core, no page buffer).  Their ratio is the forecast speedup
+  of shipping the kernel — the gather-vs-paged delta as a forecastable
+  quantity.
 
 The point (paper Fig. 2 loop, extended to multi-request traffic): the
 same trace drives measured and forecast sides, so scheduling effects
 (admission order, slot reuse, mixed KV lengths, radix prefix-cache hits)
 are identical.  The ``shared-prefix`` setting exercises the block-paged
-cache's prefix reuse — warm admissions skip the shared system prompt and
-both sides report the hit rate.  The twin costs the schedule's useful
-work (active slots, valid chunk tokens); the measured engine also pays
-for static-shape padding (masked slots, padded chunk tails) — see the
-scope note in ``repro.engine.forecast_twin``.
+cache's prefix reuse; the ``paged-*`` setting measures the Pallas kernels
+themselves — in interpret mode on this CPU container, where skipping
+past-cursor KV blocks still beats rematerializing the gather path's full
+padded virtual width (~2× TPS at the same geometry; on TPU the kernels
+lower natively and the win is the fusion itself, see README).  The twin
+costs the schedule's useful work (active slots, valid
+chunk tokens); the measured engine also pays for static-shape padding —
+see the scope note in ``repro.engine.forecast_twin``.
 
 ``benchmarks.run`` turns these rows into the ``BENCH_engine.json``
-artifact (measured TPS, forecast TPS, delta, mean TTFT per setting) via
-:func:`bench_artifact`, tracking the perf trajectory across PRs.
+artifact (measured TPS, forecast TPS, delta, both-impl deployment
+forecasts per setting) via :func:`bench_artifact`, tracking the perf
+trajectory across PRs.
 
     PYTHONPATH=src python -m benchmarks.engine_throughput
 """
@@ -36,51 +46,58 @@ from repro.configs.base import Variant
 ARCH = "qwen2-7b"
 PROMPT, NEW = 32, 16
 
-#: (label, n_requests, max_slots, decode_block, shared_prefix_len)
+#: (label, n_requests, max_slots, decode_block, shared_prefix_len, attn_impl)
 SETTINGS = [
-    ("serial-1slot", 4, 1, 8, None),
-    ("batch-2slot", 4, 2, 8, None),
-    ("batch-4slot", 8, 4, 8, None),
-    ("overload-2slot-8req", 8, 2, 4, None),
-    ("shared-prefix-16of32", 6, 2, 8, 16),
+    ("serial-1slot", 4, 1, 8, None, "gather"),
+    ("batch-2slot", 4, 2, 8, None, "gather"),
+    ("batch-4slot", 8, 4, 8, None, "gather"),
+    ("overload-2slot-8req", 8, 2, 4, None, "gather"),
+    ("shared-prefix-16of32", 6, 2, 8, 16, "gather"),
+    ("paged-2slot", 4, 2, 8, None, "paged"),
 ]
 
 
 def rows():
     out = []
-    for label, n_req, slots, block, shared in SETTINGS:
+    for label, n_req, slots, block, shared, impl in SETTINGS:
         # mixed budgets so completions (and slot frees) happen mid-flight
         scn = api.Scenario(
             model=ARCH, variant=Variant(name="bf16-fused", fused=True),
             reduced=True, batch=slots, prompt_len=PROMPT, gen_len=NEW,
             gen_lens=tuple(NEW - 3 * (i % 3) for i in range(n_req)),
             chunk=16, decode_block=block, shared_prefix_len=shared,
-            block_size=8 if shared else None)
+            block_size=8 if shared else None, attn_impl=impl)
         measured = api.measure(scn)
         cpu = api.forecast(scn, "cpu", em=0.8, trace=measured.trace)
-        v5e = api.forecast(dataclasses.replace(scn, reduced=False),
-                           "tpu-v5e", em=0.8, trace=measured.trace)
+        full = dataclasses.replace(scn, reduced=False)
+        v5e = {i: api.forecast(dataclasses.replace(full, attn_impl=i),
+                               "tpu-v5e", em=0.8, trace=measured.trace)
+               for i in ("gather", "paged")}
         delta = api.compare(cpu, measured)
         derived = {
-            "requests": n_req, "slots": slots,
+            "requests": n_req, "slots": slots, "attn_impl": impl,
             "tokens": measured.extras["tokens"],
             "wall_s": round(measured.extras["wall_s"], 2),
             "measured_tps_host": round(measured.tps, 1),
             "measured_ttft_ms_host": round(measured.ttft_s * 1e3, 2),
             "forecast_tps_cpu": round(cpu.tps, 1),
             "cpu_twin_tps_ratio": round(delta.tps.ratio, 2),
-            "forecast_tps_v5e": round(v5e.tps, 1),
-            "forecast_ttft_ms_v5e": round(v5e.ttft_s * 1e3, 2),
-            "forecast_tpot_ms_v5e": round(v5e.tpot_s * 1e3, 3),
+            "forecast_tps_v5e_gather": round(v5e["gather"].tps, 1),
+            "forecast_tps_v5e_paged": round(v5e["paged"].tps, 1),
+            # the kernel's forecast win over the gather path on the target
+            "forecast_paged_speedup_v5e": round(
+                v5e["paged"].tps / v5e["gather"].tps, 3),
+            "forecast_ttft_ms_v5e": round(v5e[impl].ttft_s * 1e3, 2),
+            "forecast_tpot_ms_v5e": round(v5e[impl].tpot_s * 1e3, 3),
         }
         if shared:
             derived.update(
                 measured_hit_rate=round(
                     measured.extras["prefix_hit_rate"], 3),
                 forecast_hit_rate=round(
-                    v5e.extras["trace_prefix_hit_rate"], 3),
+                    v5e[impl].extras["trace_prefix_hit_rate"], 3),
                 forecast_ttft_savings_ms_v5e=round(
-                    v5e.extras["trace_ttft_savings_s"] * 1e3, 3))
+                    v5e[impl].extras["trace_ttft_savings_s"] * 1e3, 3))
         out.append((f"engine/{label}", derived))
     return out
 
@@ -90,10 +107,14 @@ def bench_artifact(rows_out):
     settings = {}
     for name, d in rows_out:
         settings[name.split("/", 1)[1]] = {
+            "attn_impl": d["attn_impl"],
             "measured_tps": d["measured_tps_host"],
             "forecast_tps": d["forecast_tps_cpu"],
             "tps_delta_ratio": d["cpu_twin_tps_ratio"],
             "mean_ttft_ms": d["measured_ttft_ms_host"],
+            "forecast_tps_v5e_gather": d["forecast_tps_v5e_gather"],
+            "forecast_tps_v5e_paged": d["forecast_tps_v5e_paged"],
+            "forecast_paged_speedup_v5e": d["forecast_paged_speedup_v5e"],
         }
     return {
         "benchmark": "engine_throughput",

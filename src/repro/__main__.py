@@ -19,6 +19,7 @@ from typing import List, Optional
 
 from repro import api
 from repro.core import hardware
+from repro.core.workload import ENGINE_ATTN_IMPLS
 
 
 # ---------------------------------------------------------------------------
@@ -65,6 +66,13 @@ def _add_scenario_args(p: argparse.ArgumentParser, measured: bool) -> None:
     p.add_argument("--no-prefix-cache", action="store_false",
                    dest="prefix_cache",
                    help="disable radix prefix caching (cache-cold)")
+    p.add_argument("--attn-impl",
+                   choices=tuple(i for i in ENGINE_ATTN_IMPLS if i),
+                   default=None, dest="attn_impl",
+                   help="engine attention read path to measure/price: "
+                   "gather (XLA page rematerialization) or paged (Pallas "
+                   "paged flash kernels); default: plain analytical "
+                   "scenario / engine default")
     p.add_argument("--reduced", action="store_true",
                    help="use the CPU-sized reduced config")
     if measured:
@@ -92,7 +100,7 @@ def _scenario(args: argparse.Namespace) -> api.Scenario:
               lora_rank=args.lora_rank,
               shared_prefix_len=args.shared_prefix_len,
               block_size=args.block_size, prefix_cache=args.prefix_cache,
-              reduced=args.reduced)
+              attn_impl=args.attn_impl, reduced=args.reduced)
     for name in ("n_requests", "decode_block", "temperature", "seed"):
         if hasattr(args, name):
             kw[name] = getattr(args, name)
@@ -121,6 +129,8 @@ def _print_report(r: api.Report) -> None:
     if scn.get("shared_prefix_len"):
         traffic += (f" shared_prefix={scn['shared_prefix_len']}"
                     f"×{scn.get('n_requests') or scn.get('batch')}req")
+    if scn.get("attn_impl"):
+        traffic += f" attn={scn['attn_impl']}"
     print(f"[{r.source}] {r.model} · {r.variant} · {r.hardware}  ({traffic})")
     bound = f"  ({r.ttft_bound}-bound)" if r.ttft_bound else ""
     print(f"  TTFT  {r.ttft_s * 1e3:12.2f} ms{bound}")

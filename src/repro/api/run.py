@@ -27,9 +27,24 @@ from .scenario import Scenario
 HardwareLike = Union[str, HardwareSpec]
 
 
+def _workload_model(scn: Scenario) -> WorkloadModel:
+    """The scenario's analytical twin (attn-impl pricing mode included)."""
+    return WorkloadModel(scn.arch, scn.variant_obj, attn_impl=scn.attn_impl)
+
+
 def _phase_totals(wm: WorkloadModel, scn: Scenario) -> Dict[str, Totals]:
-    """Hardware-agnostic workload of the scenario's phases (Fig. 2-F)."""
-    if scn.chunk:
+    """Hardware-agnostic workload of the scenario's phases (Fig. 2-F).
+
+    When the scenario pins an engine attention impl, the block-table id
+    reads of addressing the paged cache are priced into every phase (the
+    remat / fusion deltas of the impl itself live inside ``wm``).
+    """
+    table_bs = scn.engine_block_size if scn.attn_impl else None
+    if table_bs:
+        # prefill_cached(cached=0) == prefill/chunked_prefill + table reads
+        pre_db = wm.prefill_cached(scn.batch, scn.prompt_len, 0,
+                                   chunk=scn.chunk, block_size=table_bs)
+    elif scn.chunk:
         pre_db = wm.chunked_prefill(scn.batch, scn.prompt_len, scn.chunk)
     else:
         pre_db = wm.prefill(scn.batch, scn.prompt_len)
@@ -48,6 +63,10 @@ def _phase_totals(wm: WorkloadModel, scn: Scenario) -> Dict[str, Totals]:
         out["decode"] = wm.decode_step(len(pls), pls[0]).totals("decode")
     else:
         out["decode"] = wm.decode_totals_mixed(pls)
+    if table_bs:
+        for p in pls:
+            out["decode"] = out["decode"].plus(
+                wm.block_table_totals(1, p + 1, table_bs))
     if scn.lora_rank is not None:
         out["lora_update"] = wm.lora_update().totals("lora_update")
     return out
@@ -83,7 +102,7 @@ def forecast(scenario: Scenario, hw: HardwareLike, *,
     """
     spec = hardware.get(hw)
     arch, variant = scenario.arch, scenario.variant_obj
-    wm = WorkloadModel(arch, variant)
+    wm = _workload_model(scenario)
     fc = Forecaster(spec)
     totals = _phase_totals(wm, scenario)
 
@@ -133,10 +152,12 @@ def forecast(scenario: Scenario, hw: HardwareLike, *,
         # keep the None default (PR-2 bit-for-bit no-drift, tested)
         twin_bs = (scenario.engine_block_size
                    if (scenario.block_size is not None
-                       or scenario.shared_prefix_len is not None) else None)
+                       or scenario.shared_prefix_len is not None
+                       or scenario.attn_impl is not None) else None)
         twin = ForecastTwin(arch, spec, variant, ec=decode_ec, em=em,
                             prefill_ec=ec, prefill_em=em,
-                            block_size=twin_bs)
+                            block_size=twin_bs,
+                            attn_impl=scenario.attn_impl)
         tf = twin.replay(trace)
         ttft_s, tpot_s, tps = tf.mean_ttft, tf.mean_tpot, tf.tps
         extras["trace_total_time_s"] = tf.total_time
@@ -195,7 +216,7 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
 
     arch, variant = scenario.arch, scenario.variant_obj
     hw_name = hardware.get(hw).name if hw is not None else "host"
-    totals = _phase_totals(WorkloadModel(arch, variant), scenario)
+    totals = _phase_totals(_workload_model(scenario), scenario)
     # the engine stores KV in bf16 or int8; int4 variants measure as int8
     kv_dtype = "int8" if variant.kv_dtype.startswith("int") else "bf16"
 
@@ -224,6 +245,7 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
                           block_size=scenario.engine_block_size,
                           prefix_cache=scenario.prefix_cache,
                           kv_dtype=kv_dtype,
+                          attn_impl=scenario.attn_impl or "gather",
                           temperature=scenario.temperature,
                           seed=scenario.seed)
         reqs = [Request(rid=i, prompt=list(map(int, prompts[i])),
@@ -243,6 +265,7 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
         extras.update(mode="engine", wall_s=wall,
                       tokens=sum(len(r.tokens) for r in results),
                       requests=n_req,
+                      attn_impl=ec.attn_impl,
                       block_size=ec.block_size,
                       prefix_hit_tokens=eng.prefix_hit_tokens,
                       prefix_hit_rate=eng.prefix_hit_rate,

@@ -45,6 +45,13 @@ class Scenario:
                           engine default)
       * ``prefix_cache`` — disable to measure/forecast the same traffic
                           cache-cold
+      * ``attn_impl``   — engine attention read path to measure AND price:
+                          ``"gather"`` (XLA page rematerialization) or
+                          ``"paged"`` (Pallas paged flash kernels).
+                          ``None`` (default) measures the engine default
+                          and forecasts the plain analytical scenario
+                          (neither impl's overhead priced — pre-engine
+                          numbers, bit-for-bit)
     Measured-path knobs (``repro.api.measure`` only): ``reduced`` serves the
     CPU-sized reduced config, ``n_requests`` decouples offered traffic from
     ``batch`` slots, ``decode_block``/``temperature``/``seed`` mirror
@@ -62,6 +69,7 @@ class Scenario:
     shared_prefix_len: Optional[int] = None
     block_size: Optional[int] = None
     prefix_cache: bool = True
+    attn_impl: Optional[str] = None
     # measured-path traffic shape
     reduced: bool = False
     n_requests: Optional[int] = None
@@ -101,6 +109,10 @@ class Scenario:
             raise ValueError("shared_prefix_len must be in [0, prompt_len]")
         if self.block_size is not None and self.block_size < 1:
             raise ValueError("block_size must be >= 1")
+        from repro.core.workload import ENGINE_ATTN_IMPLS
+        if self.attn_impl not in ENGINE_ATTN_IMPLS:
+            raise ValueError(f"attn_impl must be one of "
+                             f"{ENGINE_ATTN_IMPLS}, got {self.attn_impl!r}")
 
     # ------------------------------------------------------------------
     # resolution
@@ -180,6 +192,7 @@ class Scenario:
             "shared_prefix_len": self.shared_prefix_len,
             "block_size": self.block_size,
             "prefix_cache": self.prefix_cache,
+            "attn_impl": self.attn_impl,
             "reduced": self.reduced,
             "n_requests": self.n_requests,
             "gen_lens": list(self.gen_lens) if self.gen_lens else None,
@@ -194,5 +207,5 @@ class Scenario:
         return cls(**{k: d[k] for k in (
             "model", "variant", "batch", "prompt_len", "gen_len", "chunk",
             "past_lens", "lora_rank", "shared_prefix_len", "block_size",
-            "prefix_cache", "reduced", "n_requests", "gen_lens",
-            "decode_block", "temperature", "seed") if k in d})
+            "prefix_cache", "attn_impl", "reduced", "n_requests",
+            "gen_lens", "decode_block", "temperature", "seed") if k in d})

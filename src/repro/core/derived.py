@@ -210,6 +210,37 @@ def _kv_read_bytes(kv_len: int, n_kv_heads: int, head_dim: int,
     return qdt.storage_bytes(kv_len * n_kv_heads * head_dim, group_size)
 
 
+def page_rematerialization(
+    db: StatsDB,
+    batch: int,
+    kv_len: int,
+    n_kv_heads: int,
+    head_dim: int,
+    *,
+    kv_dtype: str = "bf16",
+    group_size: int = 128,
+    name: str = "page_remat",
+) -> None:
+    """Traffic of the block-paged *gather* attention path.
+
+    The XLA engine gathers each slot's KV blocks back into a contiguous
+    page buffer before attending: per layer pass it re-reads the slot's
+    K and V span from the pool and writes it back as a new contiguous
+    page (the attention core's ``kv_rd`` then covers reading that page).
+    The Pallas paged flash kernel elides this buffer entirely — pricing it
+    here is what makes the gather-vs-paged delta forecastable.
+
+    Priced at the useful span (``kv_len`` tokens, not the padded virtual
+    width), linear in ``kv_len`` so the mixed-decode affine identity of
+    ``WorkloadModel.decode_totals_mixed`` holds.
+    """
+    qdt = dtypes.get(kv_dtype)
+    span = qdt.storage_bytes(
+        batch * kv_len * n_kv_heads * head_dim * 2, group_size)  # K and V
+    db.record(name, ops=0.0, mem_rd=span, mem_wr=span, kv_rd=span,
+              dispatches=1, op_class="gather")
+
+
 # ---------------------------------------------------------------------------
 # Attention: MHA / GQA / MQA (eager + fused), with KV quant and padding
 # ---------------------------------------------------------------------------
@@ -295,8 +326,14 @@ def mha_block(
     rope_table: int = 4096,
     lora_rank: Optional[int] = None,
     window: Optional[int] = None,
+    attn_fused: Optional[bool] = None,
 ) -> None:
-    """Full attention block: QKV proj + RoPE + attention core + O proj."""
+    """Full attention block: QKV proj + RoPE + attention core + O proj.
+
+    ``attn_fused`` overrides ``fused`` for the attention core only — the
+    paged flash kernel fuses QK^T→softmax→PV regardless of whether the
+    surrounding variant is fused (score/prob intermediates elided).
+    """
     ntok = batch * q_len
     with db.scope("attn"):
         F.linear(db, ntok, hidden, n_heads * head_dim, dtype_act=dtype_act,
@@ -314,7 +351,8 @@ def mha_block(
              table_size=rope_table, fused=fused)
         attention(db, batch, q_len, kv_len, n_heads, n_kv_heads, head_dim,
                   dtype=dtype_act, kv_dtype=kv_dtype, kv_group_size=group_size,
-                  fused=fused, pad_to=pad_to, window=window)
+                  fused=fused if attn_fused is None else attn_fused,
+                  pad_to=pad_to, window=window)
         F.linear(db, ntok, n_heads * head_dim, hidden, dtype_act=dtype_act,
                  dtype_w=dtype_w, group_size=group_size,
                  lora_rank=lora_rank, name="o_proj")

@@ -34,12 +34,36 @@ class TimelinePoint:
     totals: Totals            # per-token workload
 
 
-class WorkloadModel:
-    """Analytical twin of one (architecture × variant)."""
+#: attention read paths of the block-paged serving engine the model can
+#: price: ``"gather"`` (XLA page rematerialization per layer pass) or
+#: ``"paged"`` (Pallas paged flash kernel — attention core fused, no page
+#: buffer).  ``None`` prices neither (pre-engine analytical scenario).
+ENGINE_ATTN_IMPLS = (None, "gather", "paged")
 
-    def __init__(self, arch: ArchConfig, variant: Optional[Variant] = None):
+
+class WorkloadModel:
+    """Analytical twin of one (architecture × variant).
+
+    ``attn_impl`` selects the serving engine's attention read path to
+    price (see :data:`ENGINE_ATTN_IMPLS`): ``"gather"`` adds the
+    page-rematerialization traffic of gathering each slot's KV blocks
+    into a contiguous buffer per attention layer, ``"paged"`` prices the
+    attention core as fused (flash: score/prob intermediates and the
+    dequant buffer elided) — the paper's §3.2.1 operator-fusion example
+    applied to paged KV.  The default ``None`` reproduces the paper's
+    plain analytical model bit-for-bit.  Block-table id reads are priced
+    separately (:meth:`block_table_totals`) since they need the block
+    size and are shared by both impls.
+    """
+
+    def __init__(self, arch: ArchConfig, variant: Optional[Variant] = None,
+                 attn_impl: Optional[str] = None):
+        if attn_impl not in ENGINE_ATTN_IMPLS:
+            raise ValueError(f"attn_impl must be one of "
+                             f"{ENGINE_ATTN_IMPLS}, got {attn_impl!r}")
         self.arch = arch
         self.variant = variant or Variant()
+        self.attn_impl = attn_impl
         if self.variant.use_mla and arch.mla is None:
             # MHA→MLA conversion (paper §3.3.2): attach default MLA geometry
             from repro.configs.base import MLAConfig
@@ -173,8 +197,31 @@ class WorkloadModel:
         identity ``decode_totals_mixed([p]*B) == decode_step(B, p)`` holds
         exactly (tested), so uniform batches reduce to the paper's model.
         ``pad_to`` (§3.2.2) and local windows break affinity at the slot
-        level; both are applied per slot before the affine evaluation.
+        level; both are applied per slot before the affine evaluation
+        (:meth:`effective_kv_lens`).  The ``attn_impl`` pricing modes
+        preserve affinity by construction: fusion elision and page
+        rematerialization are both linear in the KV length.
         """
+        eff = self.effective_kv_lens(past_lens)
+        B = len(eff)
+        key = B
+        if not hasattr(self, "_mixed_cache"):
+            self._mixed_cache = {}
+        if key not in self._mixed_cache:
+            base_v = dataclasses.replace(self.variant, pad_to=1)
+            base_wm = WorkloadModel(self.arch, base_v,
+                                    attn_impl=self.attn_impl)
+            t0 = base_wm.decode_step(B, 0).totals("decode")
+            t1 = base_wm.decode_step(B, 1).totals("decode")
+            slope = t1.minus(t0).scaled(1.0 / B)   # per slot, per cached tok
+            self._mixed_cache[key] = (t0, slope)
+        t0, slope = self._mixed_cache[key]
+        return t0.plus(slope, factor=float(sum(eff)))
+
+    def effective_kv_lens(self, past_lens: Sequence[int]) -> List[int]:
+        """Per-slot effective past lengths after ``pad_to`` / local-window
+        adjustment — the quantities :meth:`decode_totals_mixed` is affine
+        in (exposed so callers can memoize on ``(B, Σ eff)``)."""
         a, v = self.arch, self.variant
         eff = []
         for p in past_lens:
@@ -184,19 +231,7 @@ class WorkloadModel:
             if a.local_window:
                 kv = min(kv, a.local_window)
             eff.append(kv - 1)
-        B = len(eff)
-        key = B
-        if not hasattr(self, "_mixed_cache"):
-            self._mixed_cache = {}
-        if key not in self._mixed_cache:
-            base_v = dataclasses.replace(v, pad_to=1)
-            base_wm = WorkloadModel(self.arch, base_v)
-            t0 = base_wm.decode_step(B, 0).totals("decode")
-            t1 = base_wm.decode_step(B, 1).totals("decode")
-            slope = t1.minus(t0).scaled(1.0 / B)   # per slot, per cached tok
-            self._mixed_cache[key] = (t0, slope)
-        t0, slope = self._mixed_cache[key]
-        return t0.plus(slope, factor=float(sum(eff)))
+        return eff
 
     def generate_timeline(self, batch: int, prompt_len: int, n_new: int,
                           sample_every: int = 1) -> List[TimelinePoint]:
@@ -366,7 +401,15 @@ class WorkloadModel:
                             group_size=v.group_size, kv_dtype=v.kv_dtype,
                             qkv_bias=a.qkv_bias, fused=v.fused, pad_to=pad,
                             rope_table=a.max_position, lora_rank=lora,
-                            window=a.local_window or None)
+                            window=a.local_window or None,
+                            attn_fused=(True if self.attn_impl == "paged"
+                                        else None))
+                if self.attn_impl == "gather":
+                    span = (min(kv_len, a.local_window) if a.local_window
+                            else kv_len)
+                    D.page_rematerialization(
+                        db, batch, span, a.n_kv_heads, a.head_dim or 0,
+                        kv_dtype=v.kv_dtype, group_size=v.group_size)
             if a.n_encoder_layers:  # decoder cross-attention over encoder KV
                 D.residual_add(db, ntok, a.d_model, dtype=v.dtype_act,
                                fused=v.fused)

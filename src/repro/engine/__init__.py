@@ -6,7 +6,9 @@ Subsystem layout:
     kv_cache      — block-paged KV cache descriptor (block tables, int8
                     storage, COW block copy, slot reset)
     decode_loop   — jitted chunked-prefill admission + fused multi-token
-                    decode scan, gathering attention over block tables
+                    decode scan; attention reads the block tables either
+                    by XLA gather ("gather") or through the Pallas paged
+                    flash kernels ("paged", repro.kernels.paged_attention)
     scheduler     — request queue, admission with prefix-cache hits and
                     block-pool backpressure, mid-flight completion,
                     per-request metrics, trace emission
@@ -18,7 +20,7 @@ Subsystem layout:
 from .sampling import sample, kv_jnp_dtype, KV_DTYPES
 from .block_pool import BlockPool, PoolExhausted, RadixIndex
 from .kv_cache import BlockPagedKVCache, PagedKVCache, engine_supported
-from .decode_loop import make_engine_fns
+from .decode_loop import ATTN_IMPLS, make_engine_fns
 from .scheduler import (Engine, EngineConfig, Request, RequestResult,
                         TraceEvent)
 from .forecast_twin import (ForecastTwin, TraceForecast, RequestForecast,
@@ -27,7 +29,8 @@ from .forecast_twin import (ForecastTwin, TraceForecast, RequestForecast,
 __all__ = [
     "sample", "kv_jnp_dtype", "KV_DTYPES", "BlockPool", "PoolExhausted",
     "RadixIndex", "BlockPagedKVCache", "PagedKVCache", "engine_supported",
-    "make_engine_fns", "Engine", "EngineConfig", "Request", "RequestResult",
+    "ATTN_IMPLS", "make_engine_fns", "Engine", "EngineConfig", "Request",
+    "RequestResult",
     "TraceEvent", "ForecastTwin", "TraceForecast", "RequestForecast",
     "cold_trace", "replay_trace",
 ]

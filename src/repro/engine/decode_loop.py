@@ -25,6 +25,18 @@ scatter indices never collide across active slots.
 
 Both operate on the state dict created by ``BlockPagedKVCache.init_state``
 and donate it, so cache blocks are updated in place across engine steps.
+
+Two attention read paths (``EngineConfig.attn_impl``):
+
+* ``"gather"`` — XLA reference: gather the table's blocks back into the
+  slot's contiguous ``(L_virt, Hk, hd)`` virtual sequence and attend
+  eagerly.  Simple, but rematerializes the whole KV span in HBM per layer
+  per step — the data movement the paper's fusion example (§3.2.1) elides.
+* ``"paged"``  — Pallas paged flash kernels
+  (``repro.kernels.paged_attention``): K/V read block-by-block through the
+  block table with online softmax, no page buffer, blocks past the cursor
+  skipped, int8 KV dequantized in-kernel.  Interpret mode on CPU keeps it
+  correct (but slow) in this container; on TPU it is the hot path.
 """
 from __future__ import annotations
 
@@ -41,8 +53,15 @@ from repro.models.layers import apply_norm
 from repro.models.model import _lm_head
 from repro.runtime import sharding as S
 
+from repro.core.workload import ENGINE_ATTN_IMPLS
+from repro.kernels.paged_attention import ops as paged_ops
+
 from .kv_cache import BlockPagedKVCache
 from .sampling import sample
+
+#: the engine always runs exactly one impl (the analytical side's extra
+#: ``None`` means "price neither")
+ATTN_IMPLS = tuple(i for i in ENGINE_ATTN_IMPLS if i is not None)
 
 
 # ---------------------------------------------------------------------------
@@ -60,7 +79,8 @@ def _channel_mix(cfg: ArchConfig, p, x):
     return x + y
 
 
-def _prefill_layer(cfg: ArchConfig, p, x, ck, cv, bt_slot, pos_q, valid_end):
+def _prefill_layer(cfg: ArchConfig, p, x, ck, cv, bt_slot, pos_q, valid_end,
+                   attn_impl: str = "gather"):
     """One layer of a single-slot prompt chunk.
 
     x: (1, C, d); ck/cv: (N, bs, Hk, hd) full block-pool buffers of this
@@ -78,23 +98,30 @@ def _prefill_layer(cfg: ArchConfig, p, x, ck, cv, bt_slot, pos_q, valid_end):
     off = pos_q % bs
     ck = ck.at[blk, off].set(k_new[0].astype(ck.dtype))
     cv = cv.at[blk, off].set(v_new[0].astype(cv.dtype))
-    # gather the slot's pages back into its contiguous virtual sequence
-    page_k = ck[bt_slot].reshape(1, L_virt, *ck.shape[2:])
-    page_v = cv[bt_slot].reshape(1, L_virt, *cv.shape[2:])
-    k_pos = jnp.arange(L_virt, dtype=jnp.int32)
-    mask = ((k_pos[None, :] <= pos_q[:, None])
-            & (k_pos[None, :] < valid_end))[None, None, None]
-    out = A._gqa_scores_softmax_out(q, page_k.astype(x.dtype),
-                                    page_v.astype(x.dtype), mask,
-                                    cfg.head_dim ** -0.5)
     b, s = x.shape[0], x.shape[1]
+    if attn_impl == "paged":
+        # read K/V block-by-block through the table — no page buffer
+        out = paged_ops.paged_prefill(q[0], ck, cv, bt_slot, pos_q[0],
+                                      valid_end - pos_q[0])
+        out = out.reshape(1, s, -1)
+    else:
+        # gather the slot's pages back into its contiguous virtual sequence
+        page_k = ck[bt_slot].reshape(1, L_virt, *ck.shape[2:])
+        page_v = cv[bt_slot].reshape(1, L_virt, *cv.shape[2:])
+        k_pos = jnp.arange(L_virt, dtype=jnp.int32)
+        mask = ((k_pos[None, :] <= pos_q[:, None])
+                & (k_pos[None, :] < valid_end))[None, None, None]
+        out = A._gqa_scores_softmax_out(q, page_k.astype(x.dtype),
+                                        page_v.astype(x.dtype), mask,
+                                        cfg.head_dim ** -0.5)
     y = jnp.einsum("bshd,hde->bse",
                    out.reshape(b, s, cfg.n_heads, cfg.head_dim),
                    p["attn"]["wo"])
     return _channel_mix(cfg, p, x + y), ck, cv
 
 
-def _decode_layer(cfg: ArchConfig, p, x, ck, cv, bt, pos, active):
+def _decode_layer(cfg: ArchConfig, p, x, ck, cv, bt, pos, active,
+                  attn_impl: str = "gather"):
     """One layer of a one-token step for ALL slots.
 
     x: (S, 1, d); ck/cv: (N, bs, Hk, hd); bt: (S, max_bps) block tables;
@@ -111,15 +138,21 @@ def _decode_layer(cfg: ArchConfig, p, x, ck, cv, bt, pos, active):
     blk = jnp.where(active, bt[rows, pos // bs], N)
     ck = ck.at[blk, pos % bs].set(k_new[:, 0].astype(ck.dtype))
     cv = cv.at[blk, pos % bs].set(v_new[:, 0].astype(cv.dtype))
-    page_k = ck[bt].reshape(S_, L_virt, *ck.shape[2:])
-    page_v = cv[bt].reshape(S_, L_virt, *cv.shape[2:])
-    k_pos = jnp.arange(L_virt, dtype=jnp.int32)
-    # per-slot causal mask over its virtual sequence (keys strictly before
-    # + the token just written at pos)
-    mask = (k_pos[None, :] <= pos[:, None])[:, None, None, None, :]
-    out = A._gqa_scores_softmax_out(q, page_k.astype(x.dtype),
-                                    page_v.astype(x.dtype), mask,
-                                    cfg.head_dim ** -0.5)
+    if attn_impl == "paged":
+        # block-by-block flash decode per slot table — no page buffer,
+        # blocks past each slot's cursor are skipped inside the kernel
+        out = paged_ops.paged_decode(q[:, 0], ck, cv, bt, pos)
+        out = out.reshape(S_, 1, -1)
+    else:
+        page_k = ck[bt].reshape(S_, L_virt, *ck.shape[2:])
+        page_v = cv[bt].reshape(S_, L_virt, *cv.shape[2:])
+        k_pos = jnp.arange(L_virt, dtype=jnp.int32)
+        # per-slot causal mask over its virtual sequence (keys strictly
+        # before + the token just written at pos)
+        mask = (k_pos[None, :] <= pos[:, None])[:, None, None, None, :]
+        out = A._gqa_scores_softmax_out(q, page_k.astype(x.dtype),
+                                        page_v.astype(x.dtype), mask,
+                                        cfg.head_dim ** -0.5)
     y = jnp.einsum("bshd,hde->bse",
                    out.reshape(S_, 1, cfg.n_heads, cfg.head_dim),
                    p["attn"]["wo"])
@@ -133,7 +166,8 @@ def _decode_layer(cfg: ArchConfig, p, x, ck, cv, bt, pos, active):
 def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
                     cache: BlockPagedKVCache, *, chunk_size: int,
                     decode_block: int, temperature: float = 0.0,
-                    eos_id: Optional[int] = None):
+                    eos_id: Optional[int] = None,
+                    attn_impl: str = "gather"):
     """Returns jit'd ``(prefill_fn, decode_fn, shardings)``.
 
     prefill_fn(params, state, tokens(1,C), slot, start, valid)
@@ -142,6 +176,9 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
         -> (tokens (n,S), produced (n,S), active(S,), state)
     """
     from repro.models import act_sharding
+    if attn_impl not in ATTN_IMPLS:
+        raise ValueError(f"attn_impl must be one of {ATTN_IMPLS}, "
+                         f"got {attn_impl!r}")
     act_sharding.set_mesh(mesh, policy.dp_axes, policy.tp_axis)
     state_sh = cache.shardings(mesh, policy)
     param_sh = S.param_shardings(cfg, mesh, policy)
@@ -155,7 +192,7 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
         def scan_fn(h, inp):
             p_layer, ck, cv = inp
             h, ck, cv = _prefill_layer(cfg, p_layer, h, ck, cv, bt_slot,
-                                       pos_q, valid_end)
+                                       pos_q, valid_end, attn_impl)
             return h, (ck, cv)
 
         x, (cks, cvs) = jax.lax.scan(
@@ -179,7 +216,7 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
             def layer_fn(h, inp):
                 p_layer, ck, cv = inp
                 h, ck, cv = _decode_layer(cfg, p_layer, h, ck, cv, bt,
-                                          pos, act)
+                                          pos, act, attn_impl)
                 return h, (ck, cv)
 
             x, (cks, cvs) = jax.lax.scan(

@@ -23,13 +23,15 @@ engine's measured metrics (``benchmarks/engine_throughput.py``).
 Scope note: the twin costs the *useful* work of the schedule — only the
 slots active at each step and only the valid tokens of each chunk.  The
 executable engine, being jit-compiled with static shapes, additionally
-burns compute on masked-out slots and padded chunk tails, and its paged
-attention gathers each slot's blocks back into a contiguous virtual
-sequence per layer (a data movement the ``block_size`` table-read model
-prices only as id reads — XLA may or may not fuse the rematerialization
-away); both overheads are implementation artifacts of the XLA engine, not
-part of the analytical serving scenario, so forecast-vs-measured deltas
-include them.
+burns compute on masked-out slots and padded chunk tails — an
+implementation artifact the forecast-vs-measured delta includes.  The
+engine's attention read path IS priced when ``attn_impl`` is set:
+``"gather"`` adds the per-layer page rematerialization of gathering each
+slot's blocks into a contiguous virtual sequence (at the useful KV span —
+the static-shape engine actually remats the full padded virtual width),
+``"paged"`` prices the Pallas paged flash kernels that elide the page
+buffer and the score/prob intermediates.  Left unset, neither is priced
+(the pre-kernel analytical scenario).
 Forecast TTFT is admission → first token (queue time excluded); the
 engine's measured TTFT includes queueing.
 """
@@ -110,16 +112,20 @@ def cold_trace(trace: Sequence[TraceEvent]) -> List[TraceEvent]:
 
     Every admission whose chunks start at ``past_len == cached > 0`` gains
     leading chunks covering ``[0, cached)`` and all its events drop to
-    ``cached = 0``.  Backfill granularity is the largest chunk observed
-    anywhere in the trace — the best estimate of the engine's chunk_size
-    (cold admissions emit full-size chunks; a warm admission's own suffix
-    chunks can be tail remainders as small as one token).  Replaying the
-    result forecasts the same schedule without prefix caching; by
-    construction its prefill work is a superset of the hit trace's, which
-    grounds the TTFT-savings forecast.
+    ``cached = 0``.  Backfill granularity is the engine's ``chunk_size``
+    recorded in the trace's ``"engine"`` header event.  Traces predating
+    the header fall back to the largest chunk observed anywhere — a wrong
+    estimate when every admission is a warm hit with a small tail suffix
+    (a warm admission's own chunks can be tail remainders as small as one
+    token), which is exactly why the header exists.  Replaying the result
+    forecasts the same schedule without prefix caching; by construction
+    its prefill work is a superset of the hit trace's, which grounds the
+    TTFT-savings forecast.
     """
-    step = max((ev.chunk for ev in trace if ev.kind == "prefill_chunk"),
-               default=1)
+    step = next((ev.chunk for ev in trace if ev.kind == "engine"), 0)
+    if step < 1:
+        step = max((ev.chunk for ev in trace if ev.kind == "prefill_chunk"),
+                   default=1)
     step = max(step, 1)
     out: List[TraceEvent] = []
     for ev in trace:
@@ -143,19 +149,33 @@ class ForecastTwin:
     each chunk/step adds the block-table gather overhead modeled by
     ``WorkloadModel.block_table_reads``.  Left ``None`` (default), replay
     reproduces the pre-paging analytical numbers bit-for-bit.
+
+    ``attn_impl`` (optional) additionally prices the engine's attention
+    read path: ``"gather"`` adds the page-rematerialization traffic of the
+    XLA gather (each layer re-reads the KV span and writes it back as a
+    contiguous page), ``"paged"`` prices the Pallas paged flash kernels
+    (score/prob intermediates and the page buffer elided; block-table id
+    reads kept).  See ``WorkloadModel``; left ``None``, neither is priced
+    (pre-PR-4 numbers, bit-for-bit).
     """
 
     def __init__(self, arch: ArchConfig, hw: HardwareSpec,
                  variant: Optional[Variant] = None, *,
                  ec: Optional[float] = None, em: float = 1.0,
                  prefill_ec: float = 1.0, prefill_em: float = 1.0,
-                 block_size: Optional[int] = None):
-        self.wm = WorkloadModel(arch, variant)
+                 block_size: Optional[int] = None,
+                 attn_impl: Optional[str] = None):
+        if attn_impl is not None and block_size is None:
+            from repro.core.workload import DEFAULT_KV_BLOCK_SIZE
+            block_size = DEFAULT_KV_BLOCK_SIZE
+        self.wm = WorkloadModel(arch, variant, attn_impl=attn_impl)
         self.fc = Forecaster(hw)
         self.ec, self.em = ec, em
         self.prefill_ec, self.prefill_em = prefill_ec, prefill_em
         self.block_size = block_size
+        self.attn_impl = attn_impl
         self._prefill_memo: Dict[tuple, float] = {}
+        self._decode_memo: Dict[tuple, float] = {}
 
     # ------------------------------------------------------------------
     def prefill_chunk_latency(self, chunk: int, past_len: int) -> float:
@@ -170,13 +190,33 @@ class ForecastTwin:
                 em=self.prefill_em).latency
         return self._prefill_memo[key]
 
-    def decode_step_latency(self, past_lens: Sequence[int]) -> float:
-        totals = self.wm.decode_totals_mixed(past_lens)
+    def _decode_memo_key(self, past_lens: Sequence[int]) -> tuple:
+        """Exact memo key of one mixed decode step.
+
+        ``WorkloadModel.decode_totals_mixed`` is affine in the sum of the
+        *effective* per-slot KV lengths for a fixed batch size (documented
+        identity), so the step latency is fully determined by
+        ``(B, Σ eff)`` — plus, when table reads are priced, the total
+        block-table entries ``Σ ceil((p+1)/bs)`` (a step function of the
+        individual lengths, not of their sum).
+        """
+        eff = self.wm.effective_kv_lens(past_lens)
+        key = (len(eff), sum(eff))
         if self.block_size:
-            for p in past_lens:
-                totals = totals.plus(self.wm.block_table_totals(
-                    1, p + 1, self.block_size))
-        return self.fc.step_latency(totals, em=self.em, ec=self.ec)
+            key += (sum(-(-(p + 1) // self.block_size) for p in past_lens),)
+        return key
+
+    def decode_step_latency(self, past_lens: Sequence[int]) -> float:
+        key = self._decode_memo_key(past_lens)
+        if key not in self._decode_memo:
+            totals = self.wm.decode_totals_mixed(past_lens)
+            if self.block_size:
+                for p in past_lens:
+                    totals = totals.plus(self.wm.block_table_totals(
+                        1, p + 1, self.block_size))
+            self._decode_memo[key] = self.fc.step_latency(
+                totals, em=self.em, ec=self.ec)
+        return self._decode_memo[key]
 
     # ------------------------------------------------------------------
     def replay(self, trace: Sequence[TraceEvent]) -> TraceForecast:
@@ -187,6 +227,8 @@ class ForecastTwin:
         cached_tokens = 0
         prompt_tokens = 0
         for ev in trace:
+            if ev.kind == "engine":
+                continue            # config header: zero workload
             if ev.kind == "prefill_chunk":
                 rf = requests.setdefault(ev.rid, RequestForecast(rid=ev.rid))
                 if ev.past_len == ev.cached:

@@ -39,7 +39,7 @@ from repro.runtime.sharding import ShardingPolicy
 
 from .block_pool import BlockPool, RadixIndex
 from .kv_cache import BlockPagedKVCache
-from .decode_loop import make_engine_fns, sample
+from .decode_loop import ATTN_IMPLS, make_engine_fns, sample
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,9 +52,24 @@ class EngineConfig:
     n_blocks: Optional[int] = None      # pool size (default: slots worth)
     prefix_cache: bool = True           # radix prefix caching across requests
     kv_dtype: str = "bf16"              # bf16 | int8 (KV compression §3.3.3)
+    attn_impl: str = "gather"           # gather (XLA ref) | paged (Pallas)
     temperature: float = 0.0            # 0 = greedy
     eos_id: Optional[int] = None        # stop token (None: budget only)
     seed: int = 0
+
+    def __post_init__(self):
+        for name in ("max_slots", "max_len", "chunk_size", "decode_block",
+                     "block_size"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1, "
+                                 f"got {getattr(self, name)}")
+        # explicit 0 must not silently fall back to the default pool
+        if self.n_blocks is not None and self.n_blocks < 1:
+            raise ValueError(f"n_blocks must be >= 1 when given, "
+                             f"got {self.n_blocks}")
+        if self.attn_impl not in ATTN_IMPLS:
+            raise ValueError(f"attn_impl must be one of {ATTN_IMPLS}, "
+                             f"got {self.attn_impl!r}")
 
     @property
     def blocks_per_seq(self) -> int:
@@ -62,7 +77,9 @@ class EngineConfig:
 
     @property
     def pool_blocks(self) -> int:
-        return self.n_blocks or self.max_slots * self.blocks_per_seq
+        if self.n_blocks is not None:
+            return self.n_blocks
+        return self.max_slots * self.blocks_per_seq
 
 
 @dataclasses.dataclass
@@ -110,6 +127,12 @@ class RequestResult:
 class TraceEvent:
     """One engine step, hardware-agnostic — the twin's replay unit.
 
+    kind == "engine": trace header emitted once per run, recording the
+        engine knobs the twin needs — ``chunk`` is the configured
+        ``chunk_size`` (so ``cold_trace`` backfills cache-hit prefixes at
+        the engine's true chunk granularity even when every admission was
+        a warm hit with a small tail suffix), ``n_steps`` the configured
+        ``decode_block``; zero workload, skipped by replay.
     kind == "prefill_chunk": one prompt chunk of ``rid`` into ``slot``
         (batch 1, ``chunk`` new tokens on top of ``past_len`` cached);
         ``cached`` is the request's prefix-cache hit length (constant
@@ -156,7 +179,7 @@ class Engine:
         self.prefill_fn, self.decode_fn, self.shardings = make_engine_fns(
             cfg, mesh, policy, self.cache, chunk_size=ec.chunk_size,
             decode_block=ec.decode_block, temperature=ec.temperature,
-            eos_id=ec.eos_id)
+            eos_id=ec.eos_id, attn_impl=ec.attn_impl)
         self.state = self.cache.init_state()
         self._rng = jax.random.PRNGKey(ec.seed)
         self.queue: Deque[Request] = collections.deque()
@@ -329,6 +352,10 @@ class Engine:
     # ------------------------------------------------------------------
     def step(self) -> None:
         ec = self.ec
+        if not self.trace:
+            # header: the engine knobs the twin's replay/cold_trace need
+            self.trace.append(TraceEvent(kind="engine", chunk=ec.chunk_size,
+                                         n_steps=ec.decode_block))
         while (self.free_slots and self.queue
                and self.queue[0].arrival_step <= self.step_idx):
             alloc = self._allocate(self.queue[0])

@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the paper's perf-critical operators:
-flash_attention (fused MHA, §3.2.1) and quant_matmul (int4 dequant GEMM,
-§3.3.1). Validated in interpret mode on CPU; lower natively on TPU."""
-from . import flash_attention, quant_matmul
+flash_attention (fused MHA, §3.2.1), paged_attention (block-table flash
+decode/prefill for the serving engine) and quant_matmul (int4 dequant
+GEMM, §3.3.1). Validated in interpret mode on CPU; lower natively on TPU."""
+from . import flash_attention, paged_attention, quant_matmul
 
-__all__ = ["flash_attention", "quant_matmul"]
+__all__ = ["flash_attention", "paged_attention", "quant_matmul"]

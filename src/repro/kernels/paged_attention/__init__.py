@@ -1,0 +1,2 @@
+from . import ops, ref
+from .ops import paged_decode, paged_prefill
