@@ -36,46 +36,82 @@ artifact (measured TPS, forecast TPS, delta, both-impl deployment
 forecasts per setting) via :func:`bench_artifact`, tracking the perf
 trajectory across PRs.
 
+Tensor-parallel settings (``tp-*``) run the SAME engine sharded over KV
+heads on a ``model=tp`` host-device mesh (this module requests 8 XLA host
+devices before JAX initializes; settings whose tp exceeds the devices
+actually visible are skipped) and forecast the per-chip schedule with the
+plan's collective traffic priced in — measured-vs-forecast TPS per tp
+degree.  The tp runs use a reduced config with ``n_kv_heads=4`` so tp=4
+divides the head counts.
+
     PYTHONPATH=src python -m benchmarks.engine_throughput
 """
 import dataclasses
 
-from repro import api
+from repro.launch.mesh import ensure_host_device_count
+
+ensure_host_device_count(8)    # before any JAX device use; flags preserved
+
+from repro import api, configs
 from repro.configs.base import Variant
 
 ARCH = "qwen2-7b"
 PROMPT, NEW = 32, 16
 
-#: (label, n_requests, max_slots, decode_block, shared_prefix_len, attn_impl)
+#: (label, n_requests, max_slots, decode_block, shared_prefix_len,
+#:  attn_impl, tp)
 SETTINGS = [
-    ("serial-1slot", 4, 1, 8, None, "gather"),
-    ("batch-2slot", 4, 2, 8, None, "gather"),
-    ("batch-4slot", 8, 4, 8, None, "gather"),
-    ("overload-2slot-8req", 8, 2, 4, None, "gather"),
-    ("shared-prefix-16of32", 6, 2, 8, 16, "gather"),
-    ("paged-2slot", 4, 2, 8, None, "paged"),
+    ("serial-1slot", 4, 1, 8, None, "gather", 1),
+    ("batch-2slot", 4, 2, 8, None, "gather", 1),
+    ("batch-4slot", 8, 4, 8, None, "gather", 1),
+    ("overload-2slot-8req", 8, 2, 4, None, "gather", 1),
+    ("shared-prefix-16of32", 6, 2, 8, 16, "gather", 1),
+    ("paged-2slot", 4, 2, 8, None, "paged", 1),
+    # sharded engine: same model, same traffic at tp∈{1,4} — the tp1 row
+    # is the apples-to-apples baseline for the sharding delta, so BOTH
+    # rows use the 4-head override (the stock reduced config's
+    # n_kv_heads=2 cannot shard 4 ways)
+    ("tp1-2slot", 4, 2, 8, None, "gather", 1),
+    ("tp4-2slot", 4, 2, 8, None, "gather", 4),
 ]
+
+#: labels of the tp-comparison rows (shared 4-head reduced config)
+_TP_ROWS = ("tp1-2slot", "tp4-2slot")
+
+
+def _model_for(label: str):
+    """The measured arch: the tp rows need head counts tp=4 divides."""
+    if label not in _TP_ROWS:
+        return ARCH, True
+    cfg = configs.reduced(configs.get(ARCH), n_heads=4, n_kv_heads=4)
+    return cfg, False
 
 
 def rows():
+    import jax
     out = []
-    for label, n_req, slots, block, shared, impl in SETTINGS:
+    for label, n_req, slots, block, shared, impl, tp in SETTINGS:
+        if tp > jax.device_count():
+            print(f"# engine/{label}: SKIPPED (tp={tp} > "
+                  f"{jax.device_count()} visible devices)")
+            continue
+        model, reduced = _model_for(label)
         # mixed budgets so completions (and slot frees) happen mid-flight
         scn = api.Scenario(
-            model=ARCH, variant=Variant(name="bf16-fused", fused=True),
-            reduced=True, batch=slots, prompt_len=PROMPT, gen_len=NEW,
+            model=model, variant=Variant(name="bf16-fused", fused=True),
+            reduced=reduced, batch=slots, prompt_len=PROMPT, gen_len=NEW,
             gen_lens=tuple(NEW - 3 * (i % 3) for i in range(n_req)),
             chunk=16, decode_block=block, shared_prefix_len=shared,
-            block_size=8 if shared else None, attn_impl=impl)
+            block_size=8 if shared else None, attn_impl=impl, tp=tp)
         measured = api.measure(scn)
         cpu = api.forecast(scn, "cpu", em=0.8, trace=measured.trace)
-        full = dataclasses.replace(scn, reduced=False)
+        full = dataclasses.replace(scn, model=ARCH, reduced=False)
         v5e = {i: api.forecast(dataclasses.replace(full, attn_impl=i),
                                "tpu-v5e", em=0.8, trace=measured.trace)
                for i in ("gather", "paged")}
         delta = api.compare(cpu, measured)
         derived = {
-            "requests": n_req, "slots": slots, "attn_impl": impl,
+            "requests": n_req, "slots": slots, "attn_impl": impl, "tp": tp,
             "tokens": measured.extras["tokens"],
             "wall_s": round(measured.extras["wall_s"], 2),
             "measured_tps_host": round(measured.tps, 1),
@@ -108,6 +144,7 @@ def bench_artifact(rows_out):
     for name, d in rows_out:
         settings[name.split("/", 1)[1]] = {
             "attn_impl": d["attn_impl"],
+            "tp": d["tp"],
             "measured_tps": d["measured_tps_host"],
             "forecast_tps": d["forecast_tps_cpu"],
             "tps_delta_ratio": d["cpu_twin_tps_ratio"],
@@ -121,6 +158,7 @@ def bench_artifact(rows_out):
         "arch": ARCH,
         "prompt_len": PROMPT,
         "gen_len": NEW,
+        "tp_degrees": sorted({d["tp"] for _, d in rows_out}),
         "settings": settings,
     }
 

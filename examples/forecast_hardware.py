@@ -5,14 +5,14 @@ the Scenario→Report API:
 * per-arch decode TPS on CPU / V100 / TPU v5e at realistic efficiencies
 * compute-vs-memory boundary (t_c/t_m) per arch at 4k prefill
 * a synthetic TOPS×BW sweep (paper Fig. 5 style) for one workload
-* multi-chip scaling: LIFE-distributed forecast of a TP slice (power-user
-  path — `repro.core` stays public underneath the API)
+* multi-chip scaling: the SAME api.forecast with ``Scenario.tp`` — the
+  sharded forecast stack prices per-chip work + collective traffic
+  against ``interconnect_GBps`` (no separate distributed forecaster)
 
     PYTHONPATH=src python examples/forecast_hardware.py
 """
 from repro import api, configs
 from repro.configs.base import Variant
-from repro.core import (WorkloadModel, DistributedForecaster, ShardingPlan)
 
 INT4 = Variant(name="int4-fused", dtype_w="int4", fused=True)
 
@@ -37,12 +37,12 @@ for r in api.sweep(scn, tops=[10, 50, 200], bw=[100, 400, 1600], em=0.8):
           f"({r.ttft_bound:7s}-bound)  TPS={r.tps:7.1f}")
 
 print("\nMulti-chip (beyond-paper): llama3-405b decode on a v5e TP slice")
-cfg = configs.get("llama3-405b")
-wm = WorkloadModel(cfg, Variant(fused=True))
 for tp in (8, 16, 32, 64):
-    df = DistributedForecaster(wm, ShardingPlan(dp=1, tp=tp))
-    t = df.predict_decode(batch=8, past_len=8192)
-    tpot = t.bound_time
-    print(f"  TP={tp:3d}: tc={t.t_compute*1e3:7.2f}ms tm={t.t_memory*1e3:7.2f}ms "
-          f"tx={t.t_collective*1e3:6.2f}ms -> {t.dominant}-bound, "
-          f"TPS={8/tpot:7.1f}")
+    scn = api.Scenario(model="llama3-405b", variant=Variant(fused=True),
+                       past_lens=(8192,) * 8, gen_len=128, tp=tp)
+    r = api.forecast(scn, "v5e", decode_ec=1.0)
+    tx = r.extras["decode_collective_s"]
+    print(f"  TP={tp:3d}: TPOT={r.tpot_s*1e3:7.2f}ms "
+          f"(collective {tx*1e3:5.2f}ms, "
+          f"{r.extras['decode_collective_frac']:5.1%}) "
+          f"-> {r.tpot_bound}-bound, TPS={r.tps:7.1f}")

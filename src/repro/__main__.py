@@ -73,6 +73,10 @@ def _add_scenario_args(p: argparse.ArgumentParser, measured: bool) -> None:
                    "gather (XLA page rematerialization) or paged (Pallas "
                    "paged flash kernels); default: plain analytical "
                    "scenario / engine default")
+    p.add_argument("--tp", type=int, default=1,
+                   help="tensor-parallel degree: forecasts price per-chip "
+                   "work + collective traffic (interconnect_GBps); measure "
+                   "runs the engine sharded on a model=tp device mesh")
     p.add_argument("--reduced", action="store_true",
                    help="use the CPU-sized reduced config")
     if measured:
@@ -100,7 +104,7 @@ def _scenario(args: argparse.Namespace) -> api.Scenario:
               lora_rank=args.lora_rank,
               shared_prefix_len=args.shared_prefix_len,
               block_size=args.block_size, prefix_cache=args.prefix_cache,
-              attn_impl=args.attn_impl, reduced=args.reduced)
+              attn_impl=args.attn_impl, tp=args.tp, reduced=args.reduced)
     for name in ("n_requests", "decode_block", "temperature", "seed"):
         if hasattr(args, name):
             kw[name] = getattr(args, name)
@@ -131,6 +135,8 @@ def _print_report(r: api.Report) -> None:
                     f"×{scn.get('n_requests') or scn.get('batch')}req")
     if scn.get("attn_impl"):
         traffic += f" attn={scn['attn_impl']}"
+    if scn.get("tp", 1) > 1:
+        traffic += f" tp={scn['tp']}"
     print(f"[{r.source}] {r.model} · {r.variant} · {r.hardware}  ({traffic})")
     bound = f"  ({r.ttft_bound}-bound)" if r.ttft_bound else ""
     print(f"  TTFT  {r.ttft_s * 1e3:12.2f} ms{bound}")
@@ -190,8 +196,8 @@ def _cmd_sweep(args) -> int:
               file=sys.stderr)
         return 2
     reports = api.sweep(_scenario(args), args.hw or None, tops=args.tops,
-                        bw=args.bw, ec=args.ec, em=args.em,
-                        decode_ec=args.decode_ec)
+                        bw=args.bw, interconnect_GBps=args.interconnect,
+                        ec=args.ec, em=args.em, decode_ec=args.decode_ec)
     if args.json:
         print(json.dumps([r.to_dict() for r in reports], indent=1))
         return 0
@@ -214,9 +220,13 @@ def _cmd_compare(args) -> int:
 
 
 def _cmd_hardware(args) -> int:
+    print(f"{'name':26s}{'compute':>13s}{'mem bw':>14s}{'interconnect':>17s}")
     for name in hardware.list():
         spec = hardware.get(name)
-        print(f"{name:26s}{spec.tops:8.1f} TOPS{spec.bw_gbps:9.1f} GB/s")
+        ici = (f"{spec.interconnect_GBps:12.1f} GB/s"
+               if spec.interconnect_GBps else f"{'—':>16s}")
+        print(f"{name:26s}{spec.tops:8.1f} TOPS{spec.bw_gbps:9.1f} GB/s"
+              f"{ici}")
     return 0
 
 
@@ -249,6 +259,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                    help="grid TOPS values (with --bw)")
     p.add_argument("--bw", type=_csv_floats, default=None,
                    help="grid bandwidth GB/s values (with --tops)")
+    p.add_argument("--interconnect", type=float, default=None,
+                   help="grid interconnect GB/s (required for --tp > 1 "
+                   "grid sweeps)")
     p.add_argument("--json", action="store_true")
     p.set_defaults(fn=_cmd_sweep)
 

@@ -20,13 +20,19 @@ SCHEMA_VERSION = 1
 
 @dataclasses.dataclass(frozen=True)
 class PhaseStats:
-    """Hardware-agnostic workload totals of one phase (Fig. 2-F reduction)."""
+    """Hardware-agnostic workload totals of one phase (Fig. 2-F reduction).
+
+    Totals are PER CHIP: a sharded Scenario (``tp > 1``) divides operator
+    ops/bytes across chips and carries the collective traffic of the plan
+    in ``wire_bytes`` (0.0 for single-chip scenarios).
+    """
     ops: float = 0.0            # compute operations (MACs*2 convention)
     mem_rd: float = 0.0         # bytes read
     mem_wr: float = 0.0         # bytes written
     kv_rd: float = 0.0          # KV-cache bytes read (subset of mem_rd)
     kv_wr: float = 0.0          # KV-cache bytes written (subset of mem_wr)
     dispatches: int = 0         # kernel dispatch calls
+    wire_bytes: float = 0.0     # collective bytes over the interconnect
 
     @property
     def mem_total(self) -> float:
@@ -35,14 +41,17 @@ class PhaseStats:
     @classmethod
     def from_totals(cls, t: Totals) -> "PhaseStats":
         return cls(ops=t.ops, mem_rd=t.mem_rd, mem_wr=t.mem_wr,
-                   kv_rd=t.kv_rd, kv_wr=t.kv_wr, dispatches=t.dispatches)
+                   kv_rd=t.kv_rd, kv_wr=t.kv_wr, dispatches=t.dispatches,
+                   wire_bytes=t.wire_bytes)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "PhaseStats":
-        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+        # wire_bytes is absent from pre-sharding report JSONs (schema 1)
+        return cls(**{f.name: d.get(f.name, 0.0) if f.name == "wire_bytes"
+                      else d[f.name] for f in dataclasses.fields(cls)})
 
 
 @dataclasses.dataclass(frozen=True)

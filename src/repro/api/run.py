@@ -28,8 +28,12 @@ HardwareLike = Union[str, HardwareSpec]
 
 
 def _workload_model(scn: Scenario) -> WorkloadModel:
-    """The scenario's analytical twin (attn-impl pricing mode included)."""
-    return WorkloadModel(scn.arch, scn.variant_obj, attn_impl=scn.attn_impl)
+    """The scenario's analytical twin (attn-impl pricing + sharding plan).
+
+    With ``scn.tp > 1`` every phase the model emits is the PER-CHIP
+    workload (operator ops/bytes divided, collective wire recorded)."""
+    return WorkloadModel(scn.arch, scn.variant_obj, attn_impl=scn.attn_impl,
+                         plan=scn.plan)
 
 
 def _phase_totals(wm: WorkloadModel, scn: Scenario) -> Dict[str, Totals]:
@@ -113,8 +117,17 @@ def forecast(scenario: Scenario, hw: HardwareLike, *,
     # classify the decode step even when the compute term isn't added
     dec_tc = dec.ops / ((decode_ec or 1.0) * spec.flops)
     dec_tm = dec.mem_total / (em * spec.bw)
+    dec_tx = fc.collective_time(dec)
 
     extras: Dict[str, object] = {}
+    if scenario.tp > 1:
+        # per-chip sharded forecast: surface the collective economics
+        extras.update(
+            tp=scenario.tp,
+            interconnect_GBps=spec.interconnect_GBps,
+            prefill_collective_s=pre.t_collective,
+            decode_collective_s=dec_tx,
+            decode_collective_frac=dec_tx / max(tpot, 1e-30))
     if "lora_update" in totals:
         extras["lora_update_s"] = fc.phase(totals["lora_update"],
                                            ec=ec, em=em).latency
@@ -157,7 +170,8 @@ def forecast(scenario: Scenario, hw: HardwareLike, *,
         twin = ForecastTwin(arch, spec, variant, ec=decode_ec, em=em,
                             prefill_ec=ec, prefill_em=em,
                             block_size=twin_bs,
-                            attn_impl=scenario.attn_impl)
+                            attn_impl=scenario.attn_impl,
+                            plan=scenario.plan)
         tf = twin.replay(trace)
         ttft_s, tpot_s, tps = tf.mean_ttft, tf.mean_tpot, tf.tps
         extras["trace_total_time_s"] = tf.total_time
@@ -185,7 +199,8 @@ def forecast(scenario: Scenario, hw: HardwareLike, *,
         source="forecast", model=arch.name, variant=variant.name,
         hardware=spec.name, ttft_s=ttft_s, tpot_s=tpot_s, tps=tps,
         ttft_bound=pre.bound,
-        tpot_bound="compute" if dec_tc > dec_tm else "memory",
+        tpot_bound=("collective" if dec_tx > max(dec_tc, dec_tm)
+                    else "compute" if dec_tc > dec_tm else "memory"),
         ec=ec, em=em, phases=_phase_stats(totals),
         scenario=scenario.to_dict(), extras=extras,
         trace=tuple(trace) if trace is not None else None)
@@ -203,6 +218,11 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
 
     Measured TTFT includes queue time; forecast TTFT is admission → first
     token (see ``repro.engine.forecast_twin``).
+
+    ``scenario.tp > 1`` runs the engine tensor-parallel on a ``model=tp``
+    device mesh (weights and the block-paged KV pool sharded over heads) —
+    on a CPU host, expose devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
     """
     import time
 
@@ -220,7 +240,14 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
     # the engine stores KV in bf16 or int8; int4 variants measure as int8
     kv_dtype = "int8" if variant.kv_dtype.startswith("int") else "bf16"
 
-    mesh = make_host_mesh()
+    tp = scenario.tp
+    if tp > jax.device_count():
+        raise ValueError(
+            f"Scenario.tp={tp} needs {tp} devices but only "
+            f"{jax.device_count()} are visible — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={tp} (before JAX "
+            f"initializes) or run on a {tp}-chip host")
+    mesh = make_host_mesh(model=tp)
     params = init_params(arch, jax.random.PRNGKey(scenario.seed))
     gen_lens = scenario.request_gen_lens
     n_req = len(gen_lens)
@@ -266,6 +293,7 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
                       tokens=sum(len(r.tokens) for r in results),
                       requests=n_req,
                       attn_impl=ec.attn_impl,
+                      tp=tp,
                       block_size=ec.block_size,
                       prefix_hit_tokens=eng.prefix_hit_tokens,
                       prefix_hit_rate=eng.prefix_hit_rate,
@@ -317,6 +345,7 @@ def sweep(scenario: Scenario,
           hardware_list: Optional[Iterable[HardwareLike]] = None, *,
           tops: Optional[Sequence[float]] = None,
           bw: Optional[Sequence[float]] = None,
+          interconnect_GBps: Optional[float] = None,
           ec: float = 1.0, em: float = 1.0,
           decode_ec: Optional[float] = None) -> List[Report]:
     """Forecast ``scenario`` across hardware targets (paper Fig. 5 style).
@@ -324,16 +353,25 @@ def sweep(scenario: Scenario,
     Pass named/spec'd targets via ``hardware_list``, and/or a synthetic
     TOPS×BW grid via ``tops`` + ``bw`` (both in the paper's units: TOPS and
     GB/s); the grid cross-product is appended after the named targets.
+    A sharded scenario (``tp > 1``) needs ``interconnect_GBps`` on every
+    target — named specs carry their own, grid points take it from the
+    ``interconnect_GBps`` argument (required in that case, so collective
+    traffic is never silently priced against a zero-bandwidth wire).
     """
     specs: List[HardwareSpec] = [hardware.get(h) for h in hardware_list or ()]
     if (tops is None) != (bw is None):
         raise ValueError("tops and bw must be given together")
     if tops is not None:
+        if scenario.tp > 1 and interconnect_GBps is None:
+            raise ValueError(
+                f"a tops×bw grid sweep of a tp={scenario.tp} scenario needs "
+                f"interconnect_GBps for the synthetic targets")
         for t in tops:
             for b in bw:
                 specs.append(HardwareSpec(
                     name=f"grid-{t:g}tops-{b:g}gbps", tops=float(t),
-                    bw_gbps=float(b)))
+                    bw_gbps=float(b),
+                    interconnect_GBps=interconnect_GBps or 0.0))
     if not specs:
         raise ValueError("sweep needs hardware_list and/or a tops×bw grid")
     return [forecast(scenario, s, ec=ec, em=em, decode_ec=decode_ec)

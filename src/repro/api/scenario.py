@@ -52,6 +52,13 @@ class Scenario:
                           and forecasts the plain analytical scenario
                           (neither impl's overhead priced — pre-engine
                           numbers, bit-for-bit)
+      * ``tp``          — tensor-parallel degree.  Forecasts price the
+                          per-chip workload plus collective traffic
+                          (``HardwareSpec.interconnect_GBps``); the
+                          measured engine runs on a ``model=tp`` device
+                          mesh, sharding weights + the block-paged KV pool
+                          over KV heads.  ``tp=1`` (default) is the
+                          single-chip paper scenario, bit-for-bit.
     Measured-path knobs (``repro.api.measure`` only): ``reduced`` serves the
     CPU-sized reduced config, ``n_requests`` decouples offered traffic from
     ``batch`` slots, ``decode_block``/``temperature``/``seed`` mirror
@@ -70,6 +77,8 @@ class Scenario:
     block_size: Optional[int] = None
     prefix_cache: bool = True
     attn_impl: Optional[str] = None
+    # sharding (tensor-parallel degree; 1 = single chip)
+    tp: int = 1
     # measured-path traffic shape
     reduced: bool = False
     n_requests: Optional[int] = None
@@ -113,6 +122,8 @@ class Scenario:
         if self.attn_impl not in ENGINE_ATTN_IMPLS:
             raise ValueError(f"attn_impl must be one of "
                              f"{ENGINE_ATTN_IMPLS}, got {self.attn_impl!r}")
+        if self.tp < 1:
+            raise ValueError(f"tp must be >= 1, got {self.tp}")
 
     # ------------------------------------------------------------------
     # resolution
@@ -140,6 +151,14 @@ class Scenario:
     def variant_name(self) -> str:
         return (self.variant if isinstance(self.variant, str)
                 else self.variant.name)
+
+    @property
+    def plan(self) -> "ShardingPlan":
+        """The scenario's sharding plan (MoE expert parallelism rides the
+        same model axis as tp, like the engine's mesh)."""
+        from repro.core.workload import ShardingPlan
+        ep = self.tp if self.arch.family == "moe" else 1
+        return ShardingPlan(tp=self.tp, ep=ep)
 
     @property
     def decode_past_lens(self) -> Tuple[int, ...]:
@@ -193,6 +212,7 @@ class Scenario:
             "block_size": self.block_size,
             "prefix_cache": self.prefix_cache,
             "attn_impl": self.attn_impl,
+            "tp": self.tp,
             "reduced": self.reduced,
             "n_requests": self.n_requests,
             "gen_lens": list(self.gen_lens) if self.gen_lens else None,
@@ -207,5 +227,5 @@ class Scenario:
         return cls(**{k: d[k] for k in (
             "model", "variant", "batch", "prompt_len", "gen_len", "chunk",
             "past_lens", "lora_rank", "shared_prefix_len", "block_size",
-            "prefix_cache", "attn_impl", "reduced", "n_requests",
+            "prefix_cache", "attn_impl", "tp", "reduced", "n_requests",
             "gen_lens", "decode_block", "temperature", "seed") if k in d})

@@ -1,25 +1,26 @@
 """LIFE core: the paper's analytical framework as a first-class feature.
 
 Public API:
-    WorkloadModel   — analytical twin of an (arch × variant)
-    Forecaster      — Eqs. 1–7: TTFT / TPOT / TPS from hardware specs
+    WorkloadModel   — analytical twin of an (arch × variant × ShardingPlan)
+    ShardingPlan    — tensor/expert/data parallel degrees (tp=1: paper model)
+    Forecaster      — Eqs. 1–7 + collective term: TTFT / TPOT / TPS
     StatsDB         — the statistics database (Fig. 2-F)
     hardware        — device registry (Ryzen CPU/NPU/iGPU, V100, TPU v5e)
-    distributed     — mesh-aware roofline extension (beyond paper)
+    distributed     — roofline-report layer over the unified sharded stack
 """
 from . import dtypes, hardware, hlo
 from .stats import StatsDB, Totals, OpRecord
-from .workload import WorkloadModel, TimelinePoint
+from .workload import WorkloadModel, TimelinePoint, ShardingPlan
 from .forecast import (Forecaster, PhaseForecast, bmm_tile_efficiency,
                        bmm_sawtooth, bmm_asymptotic_efficiency,
                        extrapolate_efficiency)
-from .distributed import (ShardingPlan, RooflineTerms, roofline,
-                          model_flops, DistributedForecaster)
+from .distributed import (RooflineTerms, roofline, model_flops,
+                          predict_phase, DistributedForecaster)
 
 __all__ = [
     "dtypes", "hardware", "hlo", "StatsDB", "Totals", "OpRecord",
     "WorkloadModel", "TimelinePoint", "Forecaster", "PhaseForecast",
     "bmm_tile_efficiency", "bmm_sawtooth", "bmm_asymptotic_efficiency",
     "extrapolate_efficiency", "ShardingPlan", "RooflineTerms", "roofline",
-    "model_flops", "DistributedForecaster",
+    "model_flops", "predict_phase", "DistributedForecaster",
 ]

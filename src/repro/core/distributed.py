@@ -1,13 +1,18 @@
-"""LIFE-distributed: mesh-aware forecasting + three-term roofline.
+"""Mesh-aware roofline reporting over the UNIFIED sharded forecast stack.
 
-Beyond-paper extension (DESIGN.md §3.3): the paper's two-term t_c/t_m
-analysis is lifted to sharded execution on a TPU pod by adding a collective
-term.  Two sources feed the same report:
+The former standalone ``DistributedForecaster`` (its own collective-byte
+formulas, reachable only from ``launch/dryrun.py``) was folded into the
+main ``WorkloadModel``/``Forecaster`` path: a :class:`ShardingPlan` on
+``WorkloadModel`` now divides per-chip FLOPs/bytes per operator and
+records collective ``wire_bytes``, and ``Forecaster`` prices them against
+``HardwareSpec.interconnect_GBps``.  What remains here is the thin
+roofline-report layer the dry-run driver grades against:
 
-* **LIFE-predicted** — from the analytical workload + a ``ShardingPlan``
-  (this module predicts per-chip FLOPs/bytes and collective wire bytes).
-* **XLA-measured**  — from the compiled dry-run (``cost_analysis()`` per-chip
-  FLOPs/bytes + ``repro.core.hlo.parse_collectives`` wire bytes).
+* **LIFE-predicted** — :func:`predict_phase` / the deprecated
+  :class:`DistributedForecaster` alias (analytical workload + plan).
+* **XLA-measured**  — from the compiled dry-run (``cost_analysis()``
+  per-chip FLOPs/bytes + ``repro.core.hlo.parse_collectives`` wire bytes)
+  via :func:`roofline`.
 
 Roofline terms (grading convention):
 
@@ -18,25 +23,14 @@ Roofline terms (grading convention):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 from .hardware import HardwareSpec, TPU_V5E
 from .stats import Totals
-from .workload import WorkloadModel
+from .workload import ShardingPlan, WorkloadModel
 
-
-@dataclasses.dataclass(frozen=True)
-class ShardingPlan:
-    """Logical parallelism degrees for analytical prediction."""
-    dp: int = 1          # data parallel ways (pod × data axes)
-    tp: int = 1          # tensor parallel ways (model axis)
-    ep: int = 1          # expert parallel ways (MoE; maps onto model axis)
-    sp: int = 1          # sequence parallel ways (long-context)
-    fsdp: bool = False   # params/opt-state sharded over dp (ZeRO-3 style)
-
-    @property
-    def n_chips(self) -> int:
-        return self.dp * self.tp * self.sp
+__all__ = ["ShardingPlan", "RooflineTerms", "roofline", "model_flops",
+           "predict_phase", "DistributedForecaster"]
 
 
 @dataclasses.dataclass
@@ -86,71 +80,73 @@ def model_flops(arch, n_tokens: int, *, training: bool = False) -> float:
     return per_tok * n_tokens
 
 
+def _terms(t: Totals, plan: ShardingPlan, hw: HardwareSpec, *,
+           mult: float = 1.0, extra_wire: float = 0.0) -> RooflineTerms:
+    """Per-chip roofline of sharded-model Totals.
+
+    The Totals already carry the tp division and tp/ep collective wire
+    (``WorkloadModel`` with a plan); replica-level scale-out (dp·sp)
+    divides all three terms here — per-chip work AND per-chip collective
+    traffic scale with the per-replica token share."""
+    rep = plan.dp * plan.sp
+    return roofline(mult * t.ops / rep, mult * t.mem_total / rep,
+                    mult * t.wire_bytes / rep + extra_wire, hw)
+
+
+def predict_phase(wm: WorkloadModel, phase_totals: Totals,
+                  hw: HardwareSpec = TPU_V5E) -> RooflineTerms:
+    """Roofline terms of any phase Totals produced by a sharded ``wm``."""
+    return _terms(phase_totals, wm.plan, hw)
+
+
 class DistributedForecaster:
-    """Predict per-chip roofline terms from the analytical workload."""
+    """DEPRECATED thin alias over the unified sharded forecast stack.
+
+    Migration: build ``WorkloadModel(arch, variant, plan=plan)`` and price
+    its phase Totals with ``Forecaster`` (serving metrics, via
+    ``repro.api.forecast(Scenario(tp=...), hw)``) or :func:`predict_phase`
+    (roofline terms).  This wrapper only re-derives the train-step
+    gradient traffic the unified inference path has no business modeling.
+    """
 
     def __init__(self, wm: WorkloadModel, plan: ShardingPlan,
                  hw: HardwareSpec = TPU_V5E):
-        self.wm = wm
+        # fold the plan into the workload model: per-operator tp division
+        # + collective wire records now come from the unified path
+        self.wm = WorkloadModel(wm.arch, wm.variant, attn_impl=wm.attn_impl,
+                                plan=plan)
         self.plan = plan
         self.hw = hw
 
-    # -- helpers ------------------------------------------------------------
-    def _act_bytes(self, n_tokens: int) -> float:
-        return n_tokens * self.wm.arch.d_model * 2.0  # bf16 activations
-
-    def _collective_bytes_fwd(self, n_tokens_per_dp: int) -> float:
-        """Per-chip wire bytes of one forward pass under the plan."""
-        a, p = self.wm.arch, self.plan
-        wire = 0.0
-        tok = n_tokens_per_dp / p.sp
-        act = self._act_bytes(tok)
-        if p.tp > 1:
-            # Megatron-style: 2 all-reduces (attn out + mlp out) per layer
-            per_ar = act * 2.0 * (p.tp - 1) / p.tp
-            wire += 2 * a.n_layers * per_ar
-        if p.ep > 1 and a.family == "moe":
-            # token dispatch + combine all-to-alls, top_k-weighted
-            a2a = act * a.top_k * (p.ep - 1) / p.ep
-            wire += 2 * a.n_layers * a2a
-        if p.fsdp:
-            # all-gather every shard of the weights once per step
-            w = self.wm.weight_bytes() / p.tp
-            wire += w * (p.dp - 1) / p.dp
-        return wire
+    def _fsdp_gather_wire(self) -> float:
+        """Per-chip wire of all-gathering the dp-sharded params once."""
+        p = self.plan
+        if not p.fsdp:
+            return 0.0
+        return (self.wm.weight_bytes() / p.tp) * (p.dp - 1) / p.dp
 
     # -- public -------------------------------------------------------------
-    def predict_train_step(self, global_batch: int, seq: int) -> RooflineTerms:
-        a, p = self.wm.arch, self.plan
-        tokens = global_batch * seq
-        db = self.wm.prefill(global_batch, seq)
-        t = db.totals("prefill")
-        flops = t.ops * 3.0 / p.n_chips              # fwd+bwd ≈ 3× fwd
-        mem = t.mem_total * 3.0 / p.n_chips
-        tok_dp = tokens / p.dp
-        wire = self._collective_bytes_fwd(tok_dp) * 2.0   # fwd + bwd TP
-        grad_bytes = self.wm.weight_bytes() / p.tp
-        if p.fsdp:
-            wire += grad_bytes * (p.dp - 1) / p.dp       # reduce-scatter
-            wire += grad_bytes * (p.dp - 1) / p.dp       # bwd re-gather
-        else:
-            wire += grad_bytes * 2.0 * (p.dp - 1) / p.dp  # grad all-reduce
-        return roofline(flops, mem, wire, self.hw)
-
     def predict_prefill(self, batch: int, seq: int) -> RooflineTerms:
-        p = self.plan
-        db = self.wm.prefill(batch, seq)
-        t = db.totals("prefill")
-        wire = self._collective_bytes_fwd(batch * seq / p.dp)
-        if p.fsdp:
-            pass  # included in _collective_bytes_fwd
-        return roofline(t.ops / p.n_chips, t.mem_total / p.n_chips, wire,
-                        self.hw)
+        t = self.wm.prefill(batch, seq).totals("prefill")
+        return _terms(t, self.plan, self.hw,
+                      extra_wire=self._fsdp_gather_wire())
 
     def predict_decode(self, batch: int, past_len: int) -> RooflineTerms:
+        t = self.wm.decode_step(batch, past_len).totals("decode")
+        return _terms(t, self.plan, self.hw,
+                      extra_wire=self._fsdp_gather_wire())
+
+    def predict_train_step(self, global_batch: int, seq: int) -> RooflineTerms:
         p = self.plan
-        db = self.wm.decode_step(batch, past_len)
-        t = db.totals("decode")
-        wire = self._collective_bytes_fwd(batch / p.dp)
-        return roofline(t.ops / p.n_chips, t.mem_total / p.n_chips, wire,
-                        self.hw)
+        t = self.wm.prefill(global_batch, seq).totals("prefill")
+        grad = self.wm.weight_bytes() / p.tp
+        if p.fsdp:
+            # fwd + bwd param all-gathers, reduce-scatter of grads
+            extra = 2.0 * self._fsdp_gather_wire()
+            extra += grad * (p.dp - 1) / p.dp
+        else:
+            extra = grad * 2.0 * (p.dp - 1) / p.dp    # grad all-reduce
+        # fwd+bwd ≈ 3× fwd compute/bytes; TP collectives run fwd and bwd
+        rep = p.dp * p.sp
+        return roofline(3.0 * t.ops / rep, 3.0 * t.mem_total / rep,
+                        2.0 * t.wire_bytes / rep + extra, self.hw)

@@ -28,10 +28,13 @@ class PhaseForecast:
     t_compute: float          # Eq. 1 (s)
     t_memory: float           # Eq. 2 (s)
     t_dispatch: float         # Σ dispatch latency (s)
-    latency: float            # max(t_c, t_m) + t_dispatch (s)
+    latency: float            # max(t_c, t_m) + t_collective + t_dispatch (s)
+    t_collective: float = 0.0  # Σ wire_bytes / interconnect bw (s)
 
     @property
     def bound(self) -> str:
+        if self.t_collective > max(self.t_compute, self.t_memory):
+            return "collective"
         return "compute" if self.t_compute > self.t_memory else "memory"
 
     @property
@@ -41,20 +44,43 @@ class PhaseForecast:
 
 
 class Forecaster:
-    """Analysis scripts (paper Fig. 2-G): workload metrics × hardware → perf."""
+    """Analysis scripts (paper Fig. 2-G): workload metrics × hardware → perf.
+
+    Sharding-aware: Totals produced by a ``WorkloadModel`` with a
+    ``ShardingPlan`` carry per-chip ops/bytes plus collective
+    ``wire_bytes``; the collective term is priced against
+    ``HardwareSpec.interconnect_GBps`` and added serially to the phase
+    latency (collectives on the layer critical path do not overlap the
+    roofline terms in this model).  Unsharded Totals (``wire_bytes == 0``)
+    reproduce the paper's two-term forecasts bit-for-bit.
+    """
 
     def __init__(self, hw: HardwareSpec):
         self.hw = hw
+
+    def collective_time(self, totals: Totals) -> float:
+        """Wire time of the Totals' collective traffic on this hardware."""
+        if not totals.wire_bytes:
+            return 0.0
+        ici = self.hw.ici_bw()
+        if ici <= 0.0:
+            raise ValueError(
+                f"{self.hw.name} has no interconnect (interconnect_GBps=0) "
+                f"but the workload carries collective traffic — forecast a "
+                f"multi-chip target or use a tp=1 plan")
+        return totals.wire_bytes / ici
 
     # -- Eq. 1–3 -----------------------------------------------------------
     def phase(self, totals: Totals, *, ec: float = 1.0, em: float = 1.0,
               include_dispatch: bool = True) -> PhaseForecast:
         t_c = totals.ops / (ec * self.hw.flops)
         t_m = totals.mem_total / (em * self.hw.bw)
+        t_x = self.collective_time(totals)
         t_d = (totals.dispatches * self.hw.dispatch_latency_s
                if include_dispatch else 0.0)
         return PhaseForecast(t_compute=t_c, t_memory=t_m, t_dispatch=t_d,
-                             latency=max(t_c, t_m) + t_d)
+                             t_collective=t_x,
+                             latency=max(t_c, t_m) + t_x + t_d)
 
     def ttft(self, prefill_db: StatsDB, *, ec: float = 1.0,
              em: float = 1.0) -> PhaseForecast:
@@ -71,13 +97,16 @@ class Forecaster:
         Shared by :meth:`tpot` and the continuous-batching twin
         (``repro.engine.forecast_twin``), which forecasts steps whose Totals
         come from ``WorkloadModel.decode_totals_mixed`` rather than a StatsDB.
+        Per-chip Totals of a sharded plan add their collective wire time
+        serially (tp=1: exact zero, bit-for-bit with the two-term form).
         """
         t_m = totals.mem_total / (em * self.hw.bw)
+        t_x = self.collective_time(totals)
         t_d = totals.dispatches * self.hw.dispatch_latency_s
         if ec is not None:
             t_c = totals.ops / (ec * self.hw.flops)
-            return max(t_c, t_m) + t_d
-        return t_m + t_d
+            return max(t_c, t_m) + t_x + t_d
+        return t_m + t_x + t_d
 
     def tpot(self, decode_db: StatsDB, *, em: float = 1.0,
              ec: Optional[float] = None) -> float:
@@ -125,8 +154,10 @@ class Forecaster:
         for pt in wm.generate_timeline(batch, prompt_len, n_new,
                                        sample_every=sample_every):
             t_m = pt.totals.mem_total / (em * self.hw.bw)
+            t_x = self.collective_time(pt.totals)
             t_d = pt.totals.dispatches * self.hw.dispatch_latency_s
-            out.append((pt.step, pt.totals.mem_total, 1.0 / (t_m + t_d)))
+            out.append((pt.step, pt.totals.mem_total,
+                        1.0 / (t_m + t_x + t_d)))
         return out
 
 

@@ -24,6 +24,7 @@ class OpRecord:
     kv_rd: float = 0.0         # bytes read from KV cache (subset of mem_rd)
     kv_wr: float = 0.0         # bytes written to KV cache (subset of mem_wr)
     dispatches: int = 0        # kernel dispatch calls
+    wire_bytes: float = 0.0    # collective bytes over the interconnect
     # optional classification for Table-4-style distribution reports
     op_class: str = ""         # "gemm" | "bmm" | "softmax" | "elemw" | ...
 
@@ -36,6 +37,7 @@ class OpRecord:
             kv_rd=self.kv_rd * factor,
             kv_wr=self.kv_wr * factor,
             dispatches=int(round(self.dispatches * factor)),
+            wire_bytes=self.wire_bytes * factor,
         )
 
 
@@ -47,6 +49,7 @@ class Totals:
     kv_rd: float = 0.0
     kv_wr: float = 0.0
     dispatches: int = 0
+    wire_bytes: float = 0.0
 
     @property
     def mem_total(self) -> float:
@@ -59,6 +62,7 @@ class Totals:
         self.kv_rd += r.kv_rd
         self.kv_wr += r.kv_wr
         self.dispatches += r.dispatches
+        self.wire_bytes += r.wire_bytes
 
     def merge(self, other: "Totals") -> None:
         self.ops += other.ops
@@ -67,6 +71,7 @@ class Totals:
         self.kv_rd += other.kv_rd
         self.kv_wr += other.kv_wr
         self.dispatches += other.dispatches
+        self.wire_bytes += other.wire_bytes
 
     def scaled(self, factor: float) -> "Totals":
         return Totals(ops=self.ops * factor,
@@ -74,7 +79,8 @@ class Totals:
                       mem_wr=self.mem_wr * factor,
                       kv_rd=self.kv_rd * factor,
                       kv_wr=self.kv_wr * factor,
-                      dispatches=int(round(self.dispatches * factor)))
+                      dispatches=int(round(self.dispatches * factor)),
+                      wire_bytes=self.wire_bytes * factor)
 
     def plus(self, other: "Totals", factor: float = 1.0) -> "Totals":
         """self + factor·other as a new Totals (dispatch count rounded)."""
@@ -84,7 +90,8 @@ class Totals:
                       kv_rd=self.kv_rd + factor * other.kv_rd,
                       kv_wr=self.kv_wr + factor * other.kv_wr,
                       dispatches=int(round(self.dispatches
-                                           + factor * other.dispatches)))
+                                           + factor * other.dispatches)),
+                      wire_bytes=self.wire_bytes + factor * other.wire_bytes)
 
     def minus(self, other: "Totals") -> "Totals":
         return self.plus(other, factor=-1.0)
@@ -98,6 +105,7 @@ class Totals:
             "kv_rd": self.kv_rd,
             "kv_wr": self.kv_wr,
             "dispatches": self.dispatches,
+            "wire_bytes": self.wire_bytes,
         }
 
 
@@ -108,6 +116,7 @@ class StatsDB:
         self.records: List[OpRecord] = []
         self._scope_stack: List[str] = []
         self._phase: str = "prefill"
+        self._shard_div: float = 1.0
 
     # -- scoping ----------------------------------------------------------
     def push_scope(self, name: str) -> None:
@@ -131,6 +140,28 @@ class StatsDB:
     def scope(self, name: str) -> "StatsDB._Scope":
         return StatsDB._Scope(self, name)
 
+    class _Sharded:
+        """Divide recorded per-operator ops/bytes by ``div`` (per-chip view).
+
+        Dispatches and wire bytes are NOT divided: every chip of an SPMD
+        program launches every kernel, and wire bytes are recorded per chip
+        already.  ``div == 1`` is an exact no-op (bit-for-bit)."""
+
+        def __init__(self, db: "StatsDB", div: float) -> None:
+            self.db, self.div = db, float(div)
+
+        def __enter__(self):
+            self.prev = self.db._shard_div
+            self.db._shard_div = self.div
+            return self.db
+
+        def __exit__(self, *exc):
+            self.db._shard_div = self.prev
+            return False
+
+    def sharded(self, div: float) -> "StatsDB._Sharded":
+        return StatsDB._Sharded(self, div)
+
     def set_phase(self, phase: str) -> None:
         self._phase = phase
 
@@ -149,8 +180,15 @@ class StatsDB:
         kv_rd: float = 0.0,
         kv_wr: float = 0.0,
         dispatches: int = 1,
+        wire_bytes: float = 0.0,
         op_class: str = "",
     ) -> OpRecord:
+        if self._shard_div != 1.0:
+            # per-chip view under an active sharding scope: each operator's
+            # FLOPs/bytes divide across chips; dispatches and wire do not
+            d = self._shard_div
+            ops, mem_rd, mem_wr = ops / d, mem_rd / d, mem_wr / d
+            kv_rd, kv_wr = kv_rd / d, kv_wr / d
         rec = OpRecord(
             op=op,
             scope="/".join(self._scope_stack),
@@ -161,6 +199,7 @@ class StatsDB:
             kv_rd=kv_rd,
             kv_wr=kv_wr,
             dispatches=dispatches,
+            wire_bytes=wire_bytes,
             op_class=op_class or op,
         )
         self.records.append(rec)

@@ -7,6 +7,13 @@ timelines, LoRA updates — accumulating the statistics database (Fig. 2-F).
 
 The same ``ArchConfig`` drives the executable JAX model in ``repro.models``,
 making this the analytical *twin* of every framework model.
+
+Sharding is a first-class input: a :class:`ShardingPlan` with ``tp > 1``
+divides every operator's FLOPs/bytes across chips (per-chip view) and
+records the collective traffic (Megatron-style all-reduces, MoE
+all-to-alls) as ``wire_bytes`` operator records, priced by the
+``Forecaster`` against ``HardwareSpec.interconnect_GBps``.  ``tp == 1``
+is bit-for-bit identical to the unsharded model.
 """
 from __future__ import annotations
 
@@ -19,6 +26,36 @@ from . import dtypes
 from .stats import StatsDB, Totals
 
 from repro.configs.base import ArchConfig, Variant
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Logical parallelism degrees for analytical prediction.
+
+    ``tp`` is the per-replica model (tensor-parallel) degree — the axis
+    the serving engine shards KV heads and weights over; it divides every
+    operator's per-chip work and adds Megatron-style collective traffic.
+    ``ep`` maps MoE expert parallelism onto the same model axis (it adds
+    all-to-all wire but no extra division).  ``dp``/``sp``/``fsdp``
+    describe replica-level scale-out for the training/dry-run path
+    (:mod:`repro.core.distributed`); they never change per-chip inference
+    workloads.
+    """
+    dp: int = 1          # data parallel ways (pod × data axes)
+    tp: int = 1          # tensor parallel ways (model axis)
+    ep: int = 1          # expert parallel ways (MoE; maps onto model axis)
+    sp: int = 1          # sequence parallel ways (long-context)
+    fsdp: bool = False   # params/opt-state sharded over dp (ZeRO-3 style)
+
+    def __post_init__(self):
+        for name in ("dp", "tp", "ep", "sp"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"ShardingPlan.{name} must be >= 1, "
+                                 f"got {getattr(self, name)}")
+
+    @property
+    def n_chips(self) -> int:
+        return self.dp * self.tp * self.sp
 
 #: default tokens per KV block of the paged cache — shared by the engine
 #: (``EngineConfig.block_size``) and the analytical side
@@ -42,7 +79,7 @@ ENGINE_ATTN_IMPLS = (None, "gather", "paged")
 
 
 class WorkloadModel:
-    """Analytical twin of one (architecture × variant).
+    """Analytical twin of one (architecture × variant × sharding plan).
 
     ``attn_impl`` selects the serving engine's attention read path to
     price (see :data:`ENGINE_ATTN_IMPLS`): ``"gather"`` adds the
@@ -54,16 +91,25 @@ class WorkloadModel:
     plain analytical model bit-for-bit.  Block-table id reads are priced
     separately (:meth:`block_table_totals`) since they need the block
     size and are shared by both impls.
+
+    ``plan`` (default: the single-chip plan) makes every scenario driver
+    emit the PER-CHIP workload: operator FLOPs/bytes divide by ``plan.tp``
+    and each layer's tensor-parallel all-reduces (plus MoE all-to-alls
+    under ``plan.ep``) are recorded as ``wire_bytes``.  ``tp == 1``
+    reproduces the unsharded model bit-for-bit (no division applied, no
+    collective records emitted).
     """
 
     def __init__(self, arch: ArchConfig, variant: Optional[Variant] = None,
-                 attn_impl: Optional[str] = None):
+                 attn_impl: Optional[str] = None,
+                 plan: Optional[ShardingPlan] = None):
         if attn_impl not in ENGINE_ATTN_IMPLS:
             raise ValueError(f"attn_impl must be one of "
                              f"{ENGINE_ATTN_IMPLS}, got {attn_impl!r}")
         self.arch = arch
         self.variant = variant or Variant()
         self.attn_impl = attn_impl
+        self.plan = plan or ShardingPlan()
         if self.variant.use_mla and arch.mla is None:
             # MHA→MLA conversion (paper §3.3.2): attach default MLA geometry
             from repro.configs.base import MLAConfig
@@ -79,7 +125,7 @@ class WorkloadModel:
         db.set_phase("prefill")
         a, v = self.arch, self.variant
         ntok = batch * seq
-        with db.scope("model"):
+        with db.scope("model"), db.sharded(self.plan.tp):
             if a.family == "encdec" and past_len == 0:
                 self._encoder(db, batch)
             if a.family == "vlm" and past_len == 0 and a.vision_prefix_len:
@@ -161,7 +207,7 @@ class WorkloadModel:
         db = db or StatsDB()
         db.set_phase("decode")
         a, v = self.arch, self.variant
-        with db.scope("model"):
+        with db.scope("model"), db.sharded(self.plan.tp):
             F.embedding(db, batch, a.vocab_size, a.d_model, dtype=v.dtype_act)
             for i, kind in enumerate(a.block_kinds()):
                 with db.scope(f"layer{i}"):
@@ -210,7 +256,8 @@ class WorkloadModel:
         if key not in self._mixed_cache:
             base_v = dataclasses.replace(self.variant, pad_to=1)
             base_wm = WorkloadModel(self.arch, base_v,
-                                    attn_impl=self.attn_impl)
+                                    attn_impl=self.attn_impl,
+                                    plan=self.plan)
             t0 = base_wm.decode_step(B, 0).totals("decode")
             t1 = base_wm.decode_step(B, 1).totals("decode")
             slope = t1.minus(t0).scaled(1.0 / B)   # per slot, per cached tok
@@ -251,9 +298,10 @@ class WorkloadModel:
         db.set_phase("lora_update")
         a, v = self.arch, self.variant
         r = rank or v.lora_rank or 16
-        for k, n, name in self._linear_shapes():
-            with db.scope(name):
-                F.lora_merge(db, k, n, r, dtype_w=v.dtype_w)
+        with db.sharded(self.plan.tp):
+            for k, n, name in self._linear_shapes():
+                with db.scope(name):
+                    F.lora_merge(db, k, n, r, dtype_w=v.dtype_w)
         return db
 
     # ------------------------------------------------------------------
@@ -349,6 +397,33 @@ class WorkloadModel:
             out += [(d, a.d_ff, f"enc{i}.up_proj"), (a.d_ff, d, f"enc{i}.down_proj")]
         return out
 
+    def _act_wire_bytes(self, ntok: int) -> float:
+        """Per-chip ring all-reduce wire bytes of one (ntok, d_model)
+        activation under the plan: 2·(tp−1)/tp of the tensor crosses each
+        chip's links (reduce-scatter + all-gather)."""
+        a, v = self.arch, self.plan
+        el = dtypes.get(self.variant.dtype_act).bytes_per_el
+        return ntok * a.d_model * el * 2.0 * (v.tp - 1) / v.tp
+
+    def _collective(self, db: StatsDB, ntok: int) -> None:
+        """One Megatron-style all-reduce after a row-sharded projection
+        (attention o_proj / MLP down_proj)."""
+        if self.plan.tp <= 1:
+            return
+        db.record("all_reduce", wire_bytes=self._act_wire_bytes(ntok),
+                  dispatches=1, op_class="collective")
+
+    def _moe_a2a(self, db: StatsDB, ntok: int) -> None:
+        """MoE token dispatch + combine all-to-alls under expert
+        parallelism, top_k-weighted."""
+        a, p = self.arch, self.plan
+        if p.ep <= 1 or a.family != "moe":
+            return
+        el = dtypes.get(self.variant.dtype_act).bytes_per_el
+        wire = ntok * a.d_model * el * a.top_k * (p.ep - 1) / p.ep
+        db.record("all_to_all", wire_bytes=2.0 * wire, dispatches=2,
+                  op_class="collective")
+
     def _encoder(self, db: StatsDB, batch: int) -> None:
         """Whisper-style encoder over precomputed (stub) frame embeddings."""
         a, v = self.arch, self.variant
@@ -364,6 +439,7 @@ class WorkloadModel:
                                 dtype_act=v.dtype_act, dtype_w=v.dtype_w,
                                 group_size=v.group_size, kv_dtype="bf16",
                                 fused=v.fused)
+                    self._collective(db, ntok)
                     D.residual_add(db, ntok, a.d_model, dtype=v.dtype_act,
                                    fused=v.fused)
                     D.norm(db, ntok, a.d_model, kind=a.norm_kind,
@@ -372,6 +448,7 @@ class WorkloadModel:
                           dtype_act=v.dtype_act, dtype_w=v.dtype_w,
                           group_size=v.group_size, fused=v.fused,
                           actfn_algo=v.actfn_algo)
+                    self._collective(db, ntok)
                     D.residual_add(db, ntok, a.d_model, dtype=v.dtype_act,
                                    fused=v.fused)
 
@@ -421,6 +498,7 @@ class WorkloadModel:
                     compute_enc_kv=not decode and kv_len == q_len,
                     dtype_act=v.dtype_act, dtype_w=v.dtype_w,
                     group_size=v.group_size, kv_dtype=v.kv_dtype, fused=v.fused)
+                self._collective(db, ntok)   # cross-attn o_proj all-reduce
         elif kind == "ssm":
             D.ssm_block(db, batch, q_len, a.d_model, d_state=a.ssm_d_state,
                         expand=a.ssm_expand, conv_kernel=a.ssm_conv_kernel,
@@ -433,12 +511,14 @@ class WorkloadModel:
                           conv_kernel=a.ssm_conv_kernel,
                           dtype_act=v.dtype_act, dtype_w=v.dtype_w,
                           group_size=v.group_size, fused=v.fused)
+        self._collective(db, ntok)   # token-mixer out_proj all-reduce
         D.residual_add(db, ntok, a.d_model, dtype=v.dtype_act, fused=v.fused)
         # channel mixer (mamba folds it into the ssm block)
         if kind != "ssm" and (a.d_ff or a.family == "moe"):
             D.norm(db, ntok, a.d_model, kind=a.norm_kind, dtype=v.dtype_act,
                    fused=v.fused)
             if a.family == "moe":
+                self._moe_a2a(db, ntok)   # expert dispatch a2a (ep axis)
                 D.moe_layer(db, ntok, a.d_model, a.d_ff_expert, a.n_experts,
                             a.top_k, n_shared=a.n_shared_experts,
                             dtype_act=v.dtype_act, dtype_w=v.dtype_w,
@@ -449,4 +529,5 @@ class WorkloadModel:
                       dtype_act=v.dtype_act, dtype_w=v.dtype_w,
                       group_size=v.group_size, bias=False,
                       actfn_algo=v.actfn_algo, fused=v.fused, lora_rank=lora)
+            self._collective(db, ntok)   # channel-mixer down_proj all-reduce
         D.residual_add(db, ntok, a.d_model, dtype=v.dtype_act, fused=v.fused)

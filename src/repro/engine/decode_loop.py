@@ -37,6 +37,17 @@ Two attention read paths (``EngineConfig.attn_impl``):
   block table with online softmax, no page buffer, blocks past the cursor
   skipped, int8 KV dequantized in-kernel.  Interpret mode on CPU keeps it
   correct (but slow) in this container; on TPU it is the hot path.
+
+Tensor parallelism: on a mesh whose ``policy.tp_axis`` has size ``tp > 1``
+the engine runs sharded over KV heads — weights and the block-paged KV
+pool partition per the named shardings (``BlockPagedKVCache.logical_axes``
+/ ``param_shardings``), the gather path's attention partitions under
+GSPMD, and the Pallas kernels are ``shard_map``-ped over the head axis
+(each chip runs the kernel on its ``n_kv_heads/tp`` heads of every
+block).  Attention is embarrassingly parallel over GQA head groups, so
+the only cross-chip traffic is the all-reduce XLA inserts after the
+row-sharded o_proj/down_proj einsums — exactly the collectives the
+analytical side prices (``WorkloadModel`` with a ``ShardingPlan``).
 """
 from __future__ import annotations
 
@@ -44,7 +55,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models import attention as A
@@ -80,7 +91,8 @@ def _channel_mix(cfg: ArchConfig, p, x):
 
 
 def _prefill_layer(cfg: ArchConfig, p, x, ck, cv, bt_slot, pos_q, valid_end,
-                   attn_impl: str = "gather"):
+                   attn_impl: str = "gather",
+                   paged_fn=paged_ops.paged_prefill):
     """One layer of a single-slot prompt chunk.
 
     x: (1, C, d); ck/cv: (N, bs, Hk, hd) full block-pool buffers of this
@@ -101,8 +113,8 @@ def _prefill_layer(cfg: ArchConfig, p, x, ck, cv, bt_slot, pos_q, valid_end,
     b, s = x.shape[0], x.shape[1]
     if attn_impl == "paged":
         # read K/V block-by-block through the table — no page buffer
-        out = paged_ops.paged_prefill(q[0], ck, cv, bt_slot, pos_q[0],
-                                      valid_end - pos_q[0])
+        out = paged_fn(q[0], ck, cv, bt_slot, pos_q[0],
+                       valid_end - pos_q[0])
         out = out.reshape(1, s, -1)
     else:
         # gather the slot's pages back into its contiguous virtual sequence
@@ -121,7 +133,8 @@ def _prefill_layer(cfg: ArchConfig, p, x, ck, cv, bt_slot, pos_q, valid_end,
 
 
 def _decode_layer(cfg: ArchConfig, p, x, ck, cv, bt, pos, active,
-                  attn_impl: str = "gather"):
+                  attn_impl: str = "gather",
+                  paged_fn=paged_ops.paged_decode):
     """One layer of a one-token step for ALL slots.
 
     x: (S, 1, d); ck/cv: (N, bs, Hk, hd); bt: (S, max_bps) block tables;
@@ -141,7 +154,7 @@ def _decode_layer(cfg: ArchConfig, p, x, ck, cv, bt, pos, active,
     if attn_impl == "paged":
         # block-by-block flash decode per slot table — no page buffer,
         # blocks past each slot's cursor are skipped inside the kernel
-        out = paged_ops.paged_decode(q[:, 0], ck, cv, bt, pos)
+        out = paged_fn(q[:, 0], ck, cv, bt, pos)
         out = out.reshape(S_, 1, -1)
     else:
         page_k = ck[bt].reshape(S_, L_virt, *ck.shape[2:])
@@ -179,9 +192,34 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
     if attn_impl not in ATTN_IMPLS:
         raise ValueError(f"attn_impl must be one of {ATTN_IMPLS}, "
                          f"got {attn_impl!r}")
+    tp = S.tp_degree(mesh, policy)
+    if tp > 1 and (cfg.n_kv_heads % tp or cfg.n_heads % tp):
+        raise ValueError(
+            f"tensor-parallel engine shards attention over KV heads: tp={tp}"
+            f" must divide n_heads={cfg.n_heads} and "
+            f"n_kv_heads={cfg.n_kv_heads} of arch {cfg.name!r}")
     act_sharding.set_mesh(mesh, policy.dp_axes, policy.tp_axis)
     state_sh = cache.shardings(mesh, policy)
     param_sh = S.param_shardings(cfg, mesh, policy)
+
+    paged_prefill_fn = paged_ops.paged_prefill
+    paged_decode_fn = paged_ops.paged_decode
+    if tp > 1 and attn_impl == "paged":
+        # Pallas calls are opaque to GSPMD: shard them explicitly over the
+        # KV-head axis — each chip runs the kernel against its own shard
+        # of every cache block (no cross-chip traffic inside attention)
+        from jax.experimental.shard_map import shard_map
+        tpa = policy.tp_axis
+        head = P(None, tpa, None, None)      # (S|C, Hk, G, d)
+        pool = P(None, None, tpa, None)      # (N, bs, Hk, d)
+        paged_decode_fn = shard_map(
+            paged_ops.paged_decode, mesh=mesh,
+            in_specs=(head, pool, pool, P(None, None), P(None)),
+            out_specs=head, check_rep=False)
+        paged_prefill_fn = shard_map(
+            paged_ops.paged_prefill, mesh=mesh,
+            in_specs=(head, pool, pool, P(None), P(), P()),
+            out_specs=head, check_rep=False)
 
     def prefill(params, state, tokens, slot, start, valid):
         x = params["embed"][tokens]                       # (1, C, d)
@@ -192,7 +230,8 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
         def scan_fn(h, inp):
             p_layer, ck, cv = inp
             h, ck, cv = _prefill_layer(cfg, p_layer, h, ck, cv, bt_slot,
-                                       pos_q, valid_end, attn_impl)
+                                       pos_q, valid_end, attn_impl,
+                                       paged_prefill_fn)
             return h, (ck, cv)
 
         x, (cks, cvs) = jax.lax.scan(
@@ -216,7 +255,8 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
             def layer_fn(h, inp):
                 p_layer, ck, cv = inp
                 h, ck, cv = _decode_layer(cfg, p_layer, h, ck, cv, bt,
-                                          pos, act, attn_impl)
+                                          pos, act, attn_impl,
+                                          paged_decode_fn)
                 return h, (ck, cv)
 
             x, (cks, cvs) = jax.lax.scan(

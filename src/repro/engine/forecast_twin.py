@@ -43,7 +43,7 @@ from typing import Dict, List, Optional, Sequence
 from repro.configs.base import ArchConfig, Variant
 from repro.core.forecast import Forecaster
 from repro.core.hardware import HardwareSpec
-from repro.core.workload import WorkloadModel
+from repro.core.workload import ShardingPlan, WorkloadModel
 
 from .scheduler import TraceEvent
 
@@ -157,6 +157,13 @@ class ForecastTwin:
     (score/prob intermediates and the page buffer elided; block-table id
     reads kept).  See ``WorkloadModel``; left ``None``, neither is priced
     (pre-PR-4 numbers, bit-for-bit).
+
+    ``plan`` (optional ``ShardingPlan``) replays the trace against the
+    PER-CHIP workload of a tensor-parallel deployment: every chunk and
+    step is priced with its ops/bytes divided over ``plan.tp`` chips plus
+    the plan's collective wire time on ``hw.interconnect_GBps`` — the
+    forecast side of the engine's own ``model=tp`` mesh.  Left ``None``
+    (single chip), replay reproduces the unsharded numbers bit-for-bit.
     """
 
     def __init__(self, arch: ArchConfig, hw: HardwareSpec,
@@ -164,11 +171,14 @@ class ForecastTwin:
                  ec: Optional[float] = None, em: float = 1.0,
                  prefill_ec: float = 1.0, prefill_em: float = 1.0,
                  block_size: Optional[int] = None,
-                 attn_impl: Optional[str] = None):
+                 attn_impl: Optional[str] = None,
+                 plan: Optional["ShardingPlan"] = None):
         if attn_impl is not None and block_size is None:
             from repro.core.workload import DEFAULT_KV_BLOCK_SIZE
             block_size = DEFAULT_KV_BLOCK_SIZE
-        self.wm = WorkloadModel(arch, variant, attn_impl=attn_impl)
+        self.wm = WorkloadModel(arch, variant, attn_impl=attn_impl,
+                                plan=plan)
+        self.plan = self.wm.plan
         self.fc = Forecaster(hw)
         self.ec, self.em = ec, em
         self.prefill_ec, self.prefill_em = prefill_ec, prefill_em

@@ -119,10 +119,14 @@ class BlockPagedKVCache:
 
     def logical_axes(self) -> Dict[str, tuple]:
         # the block axis is a global pool any slot may address, so it is
-        # replicated; TP shards the head axis as in the lockstep state
+        # replicated; TP shards the KV-head axis — each chip of a
+        # ``model=tp`` mesh owns ``n_kv_heads/tp`` heads of EVERY block
+        # (the paged Pallas path shard_maps over the same axis).  No
+        # kv_len fallback here: intra-block token sharding would split
+        # scatter targets across chips for zero capacity win.
         return {
-            "cache_k": (None, None, "kv_len", "kv_heads", None),
-            "cache_v": (None, None, "kv_len", "kv_heads", None),
+            "cache_k": (None, None, None, "kv_heads", None),
+            "cache_v": (None, None, None, "kv_heads", None),
             "block_tables": ("batch", None),
             "pos": ("batch",),
             "tok": ("batch",),

@@ -35,7 +35,7 @@ from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
 from repro.core.workload import DEFAULT_KV_BLOCK_SIZE
-from repro.runtime.sharding import ShardingPolicy
+from repro.runtime.sharding import ShardingPolicy, tp_degree
 
 from .block_pool import BlockPool, RadixIndex
 from .kv_cache import BlockPagedKVCache
@@ -132,7 +132,8 @@ class TraceEvent:
         ``chunk_size`` (so ``cold_trace`` backfills cache-hit prefixes at
         the engine's true chunk granularity even when every admission was
         a warm hit with a small tail suffix), ``n_steps`` the configured
-        ``decode_block``; zero workload, skipped by replay.
+        ``decode_block``, ``tp`` the mesh's tensor-parallel degree the
+        run executed at; zero workload, skipped by replay.
     kind == "prefill_chunk": one prompt chunk of ``rid`` into ``slot``
         (batch 1, ``chunk`` new tokens on top of ``past_len`` cached);
         ``cached`` is the request's prefix-cache hit length (constant
@@ -151,6 +152,7 @@ class TraceEvent:
     last: bool = False
     n_steps: int = 0
     slots: Tuple[Tuple[int, int, int], ...] = ()
+    tp: int = 1
 
 
 @dataclasses.dataclass
@@ -170,6 +172,7 @@ class Engine:
             raise ValueError("chunk_size exceeds max_len")
         self.cfg, self.params, self.ec = cfg, params, ec
         self.mesh = mesh
+        self.tp = tp_degree(mesh, policy)
         self.cache = BlockPagedKVCache(
             cfg, ec.max_slots, n_blocks=ec.pool_blocks,
             block_size=ec.block_size,
@@ -355,7 +358,8 @@ class Engine:
         if not self.trace:
             # header: the engine knobs the twin's replay/cold_trace need
             self.trace.append(TraceEvent(kind="engine", chunk=ec.chunk_size,
-                                         n_steps=ec.decode_block))
+                                         n_steps=ec.decode_block,
+                                         tp=self.tp))
         while (self.free_slots and self.queue
                and self.queue[0].arrival_step <= self.step_idx):
             alloc = self._allocate(self.queue[0])

@@ -1,5 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Multi-pod dry-run driver (deliverable e).
 
 Lowers + compiles every (architecture × input shape) cell on the production
@@ -19,15 +17,22 @@ Usage:
 """
 import argparse
 import json
+import os
 import time
 import traceback
+
+from repro.launch.mesh import ensure_host_device_count, make_production_mesh
+
+# the 512-placeholder-device environment, requested BEFORE jax's first
+# device use — existing XLA_FLAGS are preserved and the request is a no-op
+# if this process already initialized JAX (the count is locked by then)
+ensure_host_device_count(512)
 
 import jax
 
 from repro import configs
 from repro.core import hlo as hlo_mod
 from repro.core import hardware, distributed
-from repro.launch.mesh import make_production_mesh
 from repro.launch import specs as specs_mod
 
 

@@ -1,12 +1,44 @@
 """Production mesh construction.
 
 A FUNCTION (not a module-level constant) so importing this module never
-touches jax device state — device count is locked on first jax init, and
-only ``dryrun.py`` forces the 512-placeholder-device environment.
+touches jax device state — device count is locked on first jax init;
+callers that need placeholder host devices (dry-run, multi-device CI,
+tensor-parallel CPU smoke runs) request them via
+:func:`ensure_host_device_count` BEFORE first device use.
 """
 from __future__ import annotations
 
+import os
+import re
+
 import jax
+
+
+def ensure_host_device_count(n: int) -> bool:
+    """Request ≥ ``n`` XLA host-platform devices for this process.
+
+    Appends ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS``
+    *preserving any flags already set*; an existing device-count flag is
+    respected as-is (the caller pinned it deliberately).  A no-op once JAX
+    has initialized its backends — the count is locked at first device
+    use.  Returns True when ≥ ``n`` devices are (or will be) visible.
+    """
+    try:
+        from jax._src import xla_bridge
+        initialized = bool(xla_bridge._backends)
+    except Exception:           # private API moved: assume initialized
+        initialized = True
+    if initialized:
+        return jax.device_count() >= n
+    flags = os.environ.get("XLA_FLAGS", "")
+    pinned = re.search(r"--xla_force_host_platform_device_count=(\d+)",
+                       flags)
+    if pinned:                  # respect the explicit setting
+        return int(pinned.group(1)) >= n
+    sep = " " if flags else ""
+    os.environ["XLA_FLAGS"] = (
+        f"{flags}{sep}--xla_force_host_platform_device_count={n}")
+    return True
 
 
 def _make_mesh(shape, axes):

@@ -108,7 +108,9 @@ def build_cell(arch_name: str, shape_name: str, mesh: Mesh, *,
     seq, batch, kind = configs.SHAPES[shape_name]
     policy = policy or S.policy_for(cfg, mesh, batch=batch)
     plan = _plan_for(cfg, mesh, policy, batch)
-    wm = WorkloadModel(cfg, Variant())
+    # the cell's analytical twin is sharded like the mesh: per-chip
+    # operator workloads + collective wire records (unified LIFE stack)
+    wm = WorkloadModel(cfg, Variant(), plan=plan)
     # install activation-sharding hints for in-scan constraints
     act_sharding.set_mesh(mesh, policy.dp_axes, policy.tp_axis)
 
@@ -231,6 +233,14 @@ def _decode_cell(cfg, arch, shape, seq, batch, mesh, policy, plan, wm,
 # ---------------------------------------------------------------------------
 
 def life_prediction(cell: Cell) -> Dict:
+    """LIFE-predicted roofline terms for one cell (forecast-before-compile).
+
+    Runs through the unified sharded forecast stack: ``cell.workload``
+    already folds the plan in (per-chip ops/bytes + collective wire); the
+    deprecated-but-thin ``DistributedForecaster`` wrapper only adds the
+    replica-axis (dp/fsdp) gradient and param-gather traffic that
+    inference forecasts never see.
+    """
     seq, batch, kind = configs.SHAPES[cell.shape]
     df = DistributedForecaster(cell.workload, cell.plan)
     if kind == "train":

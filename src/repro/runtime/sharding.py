@@ -59,6 +59,13 @@ class ShardingPolicy:
         return rules
 
 
+def tp_degree(mesh: Mesh, policy: ShardingPolicy) -> int:
+    """Tensor-parallel ways of this mesh under the policy (1 if the mesh
+    has no tp axis) — the engine's measured counterpart of
+    ``repro.core.ShardingPlan.tp``."""
+    return int(mesh.shape.get(policy.tp_axis, 1))
+
+
 def _axis_size(mesh: Mesh, axis) -> int:
     if isinstance(axis, tuple):
         n = 1

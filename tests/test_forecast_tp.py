@@ -1,0 +1,202 @@
+"""Unified sharding-aware forecast stack.
+
+Gates:
+* ``tp=1`` reproduces the pre-refactor single-chip numbers BIT-FOR-BIT —
+  across the paper-table scenarios (Tables 4/6/7/10 shapes), through
+  ``api.forecast`` and through the ``ForecastTwin`` trace replay.
+* ``tp>1`` divides per-chip work per operator, records collective wire
+  bytes, and prices them against ``HardwareSpec.interconnect_GBps``.
+* collective bytes are monotonically non-decreasing in tp (hypothesis).
+"""
+import dataclasses
+
+import pytest
+
+from repro import api
+from repro.configs import get, PAPER_VARIANTS
+from repro.configs.base import Variant
+from repro.core import (DistributedForecaster, Forecaster, ShardingPlan,
+                        Totals, WorkloadModel, hardware, predict_phase)
+from repro.engine import ForecastTwin, TraceEvent
+
+FIELDS = ("ops", "mem_rd", "mem_wr", "kv_rd", "kv_wr", "dispatches",
+          "wire_bytes")
+
+#: the paper-table scenario grid (arch fixed to the paper's llama2-7b)
+PAPER_SCENARIOS = [
+    ("bf16-bf16", 256), ("bf16-bf16", 2048), ("bf16-bf16", 8192),
+    ("bf16-int4", 32), ("bf16-int4", 2048),
+    ("bf16-int4-kv4", 2048),
+]
+
+
+# ---------------------------------------------------------------------------
+# tp=1 parity (bit-for-bit)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant,prompt", PAPER_SCENARIOS)
+def test_tp1_totals_bit_identical(variant, prompt):
+    arch, v = get("llama2-7b"), PAPER_VARIANTS[variant]
+    legacy = WorkloadModel(arch, v)                       # no plan at all
+    unified = WorkloadModel(arch, v, plan=ShardingPlan(tp=1))
+    for phase, a, b in (
+            ("prefill", legacy.prefill(1, prompt), unified.prefill(1, prompt)),
+            ("decode", legacy.decode_step(1, prompt),
+             unified.decode_step(1, prompt))):
+        ta, tb = a.totals(phase), b.totals(phase)
+        for f in FIELDS:
+            assert getattr(ta, f) == getattr(tb, f), (phase, f)
+    assert unified.prefill(1, prompt).totals("prefill").wire_bytes == 0.0
+
+
+@pytest.mark.parametrize("variant,prompt", PAPER_SCENARIOS)
+def test_tp1_forecast_reports_bit_identical(variant, prompt):
+    base = api.Scenario(model="llama2-7b", variant=variant, batch=2,
+                        prompt_len=prompt, gen_len=64)
+    sharded = dataclasses.replace(base, tp=1)
+    for hw in ("cpu", "v5e"):
+        a, b = api.forecast(base, hw), api.forecast(sharded, hw)
+        assert (a.ttft_s, a.tpot_s, a.tps) == (b.ttft_s, b.tpot_s, b.tps)
+        assert a.phases == b.phases
+        assert (a.ttft_bound, a.tpot_bound) == (b.ttft_bound, b.tpot_bound)
+
+
+def test_tp1_twin_replay_bit_identical():
+    arch = get("llama2-7b")
+    trace = [
+        TraceEvent(kind="engine", chunk=64, n_steps=4),
+        TraceEvent(kind="prefill_chunk", rid=0, slot=0, chunk=64,
+                   past_len=0, last=True),
+        TraceEvent(kind="decode_block", n_steps=4, slots=((0, 64, 8),)),
+        TraceEvent(kind="decode_block", n_steps=4, slots=((0, 68, 4),)),
+    ]
+    legacy = ForecastTwin(arch, hardware.TPU_V5E, Variant(), em=0.8)
+    unified = ForecastTwin(arch, hardware.TPU_V5E, Variant(), em=0.8,
+                           plan=ShardingPlan(tp=1))
+    a, b = legacy.replay(trace), unified.replay(trace)
+    assert a.total_time == b.total_time
+    assert a.requests[0].ttft == b.requests[0].ttft
+    assert a.requests[0].tpot == b.requests[0].tpot
+
+
+# ---------------------------------------------------------------------------
+# tp>1 semantics
+# ---------------------------------------------------------------------------
+
+def test_tp_divides_per_operator():
+    arch, v = get("llama2-7b"), PAPER_VARIANTS["bf16-bf16"]
+    t1 = WorkloadModel(arch, v).prefill(1, 512).totals("prefill")
+    wm8 = WorkloadModel(arch, v, plan=ShardingPlan(tp=8))
+    db8 = wm8.prefill(1, 512)
+    t8 = db8.totals("prefill")
+    assert t8.ops == pytest.approx(t1.ops / 8)
+    assert t8.wire_bytes > 0
+    # per OPERATOR, not just in aggregate: every non-collective record's
+    # compute shrank 8x vs the class totals of the unsharded model
+    by1 = WorkloadModel(arch, v).prefill(1, 512).by_op_class("prefill")
+    by8 = db8.by_op_class("prefill")
+    for cls, tot in by1.items():
+        if tot.ops:
+            assert by8[cls].ops == pytest.approx(tot.ops / 8), cls
+    # the collectives arrived as their own operator class
+    assert by8["collective"].wire_bytes == t8.wire_bytes
+    assert "collective" not in by1
+
+
+def test_collective_pricing_and_bounds():
+    scn = api.Scenario(model="llama2-7b", batch=8, prompt_len=2048,
+                       gen_len=64, tp=8)
+    r = api.forecast(scn, "v5e")
+    assert r.extras["tp"] == 8
+    assert r.extras["decode_collective_s"] > 0
+    assert r.phases["decode"].wire_bytes > 0
+    # sharding must help TPOT on this workload (memory-bound decode)
+    r1 = api.forecast(dataclasses.replace(scn, tp=1), "v5e")
+    assert r.tpot_s < r1.tpot_s
+    # and the no-interconnect spec refuses to price collectives
+    lonely = hardware.HardwareSpec(name="lonely", tops=100.0, bw_gbps=500.0)
+    with pytest.raises(ValueError, match="interconnect"):
+        api.forecast(scn, lonely)
+
+
+def test_moe_expert_parallel_wire():
+    wm = WorkloadModel(get("qwen2-moe-a2.7b"), plan=ShardingPlan(tp=4, ep=4))
+    t = wm.prefill(1, 256).totals("prefill")
+    by = wm.prefill(1, 256).by_op_class("prefill")
+    assert by["collective"].wire_bytes > 0
+    # a2a dispatch+combine rides on top of the dense all-reduces
+    dense = WorkloadModel(get("qwen2-moe-a2.7b"),
+                          plan=ShardingPlan(tp=4)).prefill(1, 256)
+    assert t.wire_bytes > dense.totals("prefill").wire_bytes
+
+
+def test_twin_tp_adds_collective_time():
+    arch = get("llama2-7b")
+    mk = lambda tp: ForecastTwin(arch, hardware.TPU_V5E, Variant(),
+                                 plan=ShardingPlan(tp=tp))
+    t1 = mk(1).decode_step_latency([512, 512])
+    t8 = mk(8).decode_step_latency([512, 512])
+    assert t8 < t1                     # per-chip KV/weight reads dominate
+    chunk1 = mk(1).prefill_chunk_latency(256, 0)
+    chunk8 = mk(8).prefill_chunk_latency(256, 0)
+    assert chunk8 != chunk1
+
+
+def test_distributed_forecaster_thin_alias():
+    """The deprecated wrapper must agree with the unified path where they
+    overlap (pure-tp inference: no replica axes)."""
+    arch = get("llama3-405b")
+    wm = WorkloadModel(arch, Variant(fused=True))
+    plan = ShardingPlan(dp=1, tp=16)
+    df = DistributedForecaster(wm, plan)
+    terms = df.predict_decode(batch=8, past_len=8192)
+    sharded = WorkloadModel(arch, Variant(fused=True), plan=plan)
+    t = sharded.decode_step(8, 8192).totals("decode")
+    ref = predict_phase(sharded, t)
+    assert terms.t_compute == ref.t_compute
+    assert terms.t_memory == ref.t_memory
+    assert terms.t_collective == ref.t_collective
+    assert terms.dominant == "memory"
+
+
+def test_report_roundtrip_with_tp_and_old_json():
+    scn = api.Scenario(model="llama2-7b", batch=2, prompt_len=128,
+                       gen_len=16, tp=4)
+    r = api.forecast(scn, "v5e")
+    r2 = api.Report.from_json(r.to_json())
+    assert r2 == r
+    assert r2.scenario["tp"] == 4
+    # pre-sharding JSON (no wire_bytes in phases) still loads
+    d = r.to_dict()
+    for ph in d["phases"].values():
+        ph.pop("wire_bytes")
+    d["scenario"].pop("tp")
+    old = api.Report.from_dict(d)
+    assert old.phases["decode"].wire_bytes == 0.0
+
+
+# ---------------------------------------------------------------------------
+# property: collective bytes monotone in tp, per-chip work antitone
+# ---------------------------------------------------------------------------
+
+def test_collective_bytes_monotone_in_tp():
+    pytest.importorskip(
+        "hypothesis",
+        reason="optional dev dependency (pip install hypothesis)")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(tp_a=st.integers(1, 64), tp_b=st.integers(1, 64),
+           prompt=st.integers(16, 2048))
+    def prop(tp_a, tp_b, prompt):
+        lo, hi = sorted((tp_a, tp_b))
+        arch = get("llama2-7b")
+        t_lo = WorkloadModel(arch, plan=ShardingPlan(tp=lo)).prefill(
+            1, prompt).totals("prefill")
+        t_hi = WorkloadModel(arch, plan=ShardingPlan(tp=hi)).prefill(
+            1, prompt).totals("prefill")
+        assert t_hi.wire_bytes >= t_lo.wire_bytes      # 2(tp-1)/tp grows
+        assert t_hi.ops <= t_lo.ops                    # per-chip work shrinks
+        assert t_hi.mem_total <= t_lo.mem_total
+
+    prop()
