@@ -7,16 +7,20 @@ the reproduced metrics next to the paper's published values.
 
 Modules may expose ``bench_artifact(rows) -> dict``; the driver then
 writes ``BENCH_<shortname>.json`` (e.g. ``BENCH_engine.json`` from
-``engine_throughput``) so the perf trajectory is tracked across PRs.
+``engine_throughput``) so the perf trajectory is tracked across PRs, and
+appends the same payload — stamped with the git sha and date — as one
+line of ``BENCH_history.jsonl``, the append-only cross-PR trajectory.
 
     python -m benchmarks.run                       # everything
     python -m benchmarks.run --only engine_throughput
     python -m benchmarks.run table4_prefill_ops roofline
 """
 import argparse
+import datetime
 import importlib
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -39,6 +43,17 @@ MODULES = [
     "roofline",
     "engine_throughput",
 ]
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
 
 
 def main() -> None:
@@ -82,10 +97,22 @@ def main() -> None:
         if artifact_fn is not None:
             short = modname.split("_")[0]
             path = os.path.join(args.artifact_dir, f"BENCH_{short}.json")
+            payload = artifact_fn(rows)
             with open(path, "w") as f:
-                json.dump(artifact_fn(rows), f, indent=1)
+                json.dump(payload, f, indent=1)
                 f.write("\n")
             print(f"wrote {path}", file=sys.stderr)
+            hist = os.path.join(args.artifact_dir, "BENCH_history.jsonl")
+            record = {
+                "date": datetime.datetime.now(
+                    datetime.timezone.utc).isoformat(timespec="seconds"),
+                "git_sha": _git_sha(),
+                "module": modname,
+                **payload,
+            }
+            with open(hist, "a") as f:
+                f.write(json.dumps(record, separators=(",", ":")) + "\n")
+            print(f"appended {hist}", file=sys.stderr)
     if failed:
         print(f"{len(failed)} benchmark module(s) failed: "
               f"{', '.join(failed)}", file=sys.stderr)

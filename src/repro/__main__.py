@@ -77,6 +77,21 @@ def _add_scenario_args(p: argparse.ArgumentParser, measured: bool) -> None:
                    help="tensor-parallel degree: forecasts price per-chip "
                    "work + collective traffic (interconnect_GBps); measure "
                    "runs the engine sharded on a model=tp device mesh")
+    p.add_argument("--spec-k", type=int, default=0, dest="spec_k",
+                   help="speculative decoding: drafts verified per step "
+                   "(0 = off); measure runs the engine's draft→verify→"
+                   "accept loop, forecast prices the (k+1)-query verify")
+    p.add_argument("--spec-acceptance", type=float, default=0.7,
+                   dest="spec_acceptance",
+                   help="assumed per-draft acceptance rate α for the "
+                   "forecast (measured runs record the realized rate)")
+    p.add_argument("--spec-draft", default=None, dest="spec_draft_arch",
+                   help="draft architecture name (default: free "
+                   "self-speculative n-gram prompt lookup)")
+    p.add_argument("--prompt-motif", type=int, default=None,
+                   dest="prompt_motif_len",
+                   help="measured prompts repeat a motif of this many "
+                   "tokens (high-acceptance speculative workload)")
     p.add_argument("--reduced", action="store_true",
                    help="use the CPU-sized reduced config")
     if measured:
@@ -104,7 +119,10 @@ def _scenario(args: argparse.Namespace) -> api.Scenario:
               lora_rank=args.lora_rank,
               shared_prefix_len=args.shared_prefix_len,
               block_size=args.block_size, prefix_cache=args.prefix_cache,
-              attn_impl=args.attn_impl, tp=args.tp, reduced=args.reduced)
+              attn_impl=args.attn_impl, tp=args.tp, spec_k=args.spec_k,
+              spec_acceptance=args.spec_acceptance,
+              spec_draft_arch=args.spec_draft_arch,
+              prompt_motif_len=args.prompt_motif_len, reduced=args.reduced)
     for name in ("n_requests", "decode_block", "temperature", "seed"):
         if hasattr(args, name):
             kw[name] = getattr(args, name)
@@ -137,6 +155,10 @@ def _print_report(r: api.Report) -> None:
         traffic += f" attn={scn['attn_impl']}"
     if scn.get("tp", 1) > 1:
         traffic += f" tp={scn['tp']}"
+    if scn.get("spec_k"):
+        traffic += f" spec_k={scn['spec_k']}"
+        if scn.get("spec_draft_arch"):
+            traffic += f" draft={scn['spec_draft_arch']}"
     print(f"[{r.source}] {r.model} · {r.variant} · {r.hardware}  ({traffic})")
     bound = f"  ({r.ttft_bound}-bound)" if r.ttft_bound else ""
     print(f"  TTFT  {r.ttft_s * 1e3:12.2f} ms{bound}")

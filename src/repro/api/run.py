@@ -73,6 +73,20 @@ def _phase_totals(wm: WorkloadModel, scn: Scenario) -> Dict[str, Totals]:
                 wm.block_table_totals(1, p + 1, table_bs))
     if scn.lora_rank is not None:
         out["lora_update"] = wm.lora_update().totals("lora_update")
+    if scn.spec_k:
+        # one (k+1)-query speculative verify pass over the decode batch
+        # (weight reads amortize across the queries), plus — with a draft
+        # arch — ONE draft decode step (the spec step runs k of them)
+        vt = wm.verify_totals_mixed(pls, scn.spec_k)
+        if table_bs:
+            for p in pls:
+                vt = vt.plus(wm.block_table_totals(
+                    1, p + scn.spec_k + 1, table_bs))
+        out["spec_verify"] = vt
+        if scn.spec_draft_arch:
+            from repro import configs
+            draft_wm = WorkloadModel(configs.get(scn.spec_draft_arch))
+            out["spec_draft"] = draft_wm.decode_totals_mixed(pls)
     return out
 
 
@@ -128,6 +142,29 @@ def forecast(scenario: Scenario, hw: HardwareLike, *,
             prefill_collective_s=pre.t_collective,
             decode_collective_s=dec_tx,
             decode_collective_frac=dec_tx / max(tpot, 1e-30))
+    if scenario.spec_k:
+        # speculative decoding forecast: the headline TPOT/TPS become the
+        # expected per-token cost at the assumed acceptance α; the plain
+        # step stays available as the speedup baseline, and break-even α
+        # is a per-hardware quantity (both step latencies move with hw)
+        k, alpha = scenario.spec_k, scenario.spec_acceptance
+        vt = totals["spec_verify"]
+        dt = totals.get("spec_draft")
+        spec_tpot = fc.spec_tpot(vt, k, alpha, draft_totals=dt,
+                                 em=em, ec=decode_ec)
+        extras.update(
+            spec_k=k, spec_acceptance=alpha,
+            spec_expected_tokens_per_step=fc.spec_expected_tokens(k, alpha),
+            spec_step_s=fc.spec_step_latency(vt, k, draft_totals=dt,
+                                             em=em, ec=decode_ec),
+            spec_tpot_s=spec_tpot,
+            spec_speedup=tpot / spec_tpot,
+            spec_breakeven_acceptance=fc.spec_breakeven_acceptance(
+                dec, vt, k, draft_totals=dt, em=em, ec=decode_ec),
+            spec_speedup_curve=fc.spec_speedup_curve(
+                dec, vt, k, [i / 10.0 for i in range(11)],
+                draft_totals=dt, em=em, ec=decode_ec))
+        tpot = spec_tpot
     if "lora_update" in totals:
         extras["lora_update_s"] = fc.phase(totals["lora_update"],
                                            ec=ec, em=em).latency
@@ -159,10 +196,12 @@ def forecast(scenario: Scenario, hw: HardwareLike, *,
     if trace is not None:
         # lazy import: the twin pulls the engine (and with it JAX), which the
         # pure analytical path must not require
-        from repro.engine.forecast_twin import ForecastTwin
+        from repro.engine.forecast_twin import AUTO, ForecastTwin
         # block-paged scenarios price table reads in the replay too, so the
         # trace and declarative paths apply one physics; plain scenarios
-        # keep the None default (PR-2 bit-for-bit no-drift, tested)
+        # leave both knobs AUTO, so the trace's "engine" header decides
+        # what to price (a headerless hand-built trace prices neither,
+        # PR-2 bit-for-bit no-drift, tested)
         twin_bs = (scenario.engine_block_size
                    if (scenario.block_size is not None
                        or scenario.shared_prefix_len is not None
@@ -170,12 +209,32 @@ def forecast(scenario: Scenario, hw: HardwareLike, *,
         twin = ForecastTwin(arch, spec, variant, ec=decode_ec, em=em,
                             prefill_ec=ec, prefill_em=em,
                             block_size=twin_bs,
-                            attn_impl=scenario.attn_impl,
-                            plan=scenario.plan)
+                            attn_impl=(scenario.attn_impl
+                                       if scenario.attn_impl is not None
+                                       else AUTO),
+                            plan=scenario.plan,
+                            draft_arch=scenario.spec_draft_arch)
         tf = twin.replay(trace)
         ttft_s, tpot_s, tps = tf.mean_ttft, tf.mean_tpot, tf.tps
         extras["trace_total_time_s"] = tf.total_time
         extras["trace_total_tokens"] = tf.total_tokens
+        spec_events = [ev for ev in trace if ev.kind == "spec_step"]
+        if spec_events:
+            # measured-acceptance replay: the per-step accepted counts in
+            # the trace drive the forecast, vs. the declared scenario's
+            # assumed α above; the despeculated twin prices the same
+            # token schedule without speculation (speedup grounding)
+            from repro.engine.forecast_twin import despeculate_trace
+            n_prop = sum(sum(ev.proposed) for ev in spec_events)
+            n_acc = sum(sum(ev.accepted) for ev in spec_events)
+            slot_steps = sum(len(ev.slots) for ev in spec_events)
+            plain = twin.replay(despeculate_trace(trace))
+            extras.update(
+                trace_spec_acceptance=n_acc / max(n_prop, 1),
+                trace_spec_tokens_per_step=(
+                    n_acc / max(slot_steps, 1) + 1.0),
+                trace_spec_speedup=(plain.total_time
+                                    / max(tf.total_time, 1e-30)))
         if tf.cached_tokens:
             # hit-aware replay: quantify what prefix caching bought by
             # re-pricing the same schedule cache-cold
@@ -262,6 +321,13 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
             (scenario.shared_prefix_len,), 0, arch.vocab_size, jnp.int32)
         prompts = prompts.at[:, :scenario.shared_prefix_len].set(
             shared[None, :])
+    if scenario.prompt_motif_len:
+        # repeat each request's leading motif across its whole prompt
+        # (after the shared-prefix substitution, so a shared prefix is
+        # itself motif-periodic)
+        reps = -(-scenario.prompt_len // scenario.prompt_motif_len)
+        prompts = jnp.tile(prompts[:, :scenario.prompt_motif_len],
+                           (1, reps))[:, :scenario.prompt_len]
 
     extras: Dict[str, object] = {}
     trace = None
@@ -274,11 +340,22 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
                           kv_dtype=kv_dtype,
                           attn_impl=scenario.attn_impl or "gather",
                           temperature=scenario.temperature,
+                          spec_k=scenario.spec_k,
                           seed=scenario.seed)
         reqs = [Request(rid=i, prompt=list(map(int, prompts[i])),
                         max_new=gen_lens[i]) for i in range(n_req)]
+        drafter = None
+        if scenario.spec_k and scenario.spec_draft_arch:
+            from repro.engine.drafter import make_drafter
+            # a reduced target needs a reduced (vocab-matched) draft model
+            drafter = make_drafter(scenario.spec_draft_arch,
+                                   reduce=scenario.reduced,
+                                   vocab_size=(arch.vocab_size
+                                               if scenario.reduced else None),
+                                   seed=scenario.seed)
         with mesh:
-            eng = Engine(arch, params, mesh, ShardingPolicy(), ec)
+            eng = Engine(arch, params, mesh, ShardingPolicy(), ec,
+                         drafter=drafter)
             eng.warmup()               # compile outside the measured window
             t0 = time.perf_counter()
             results = eng.run(reqs)
@@ -298,6 +375,13 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
                       prefix_hit_tokens=eng.prefix_hit_tokens,
                       prefix_hit_rate=eng.prefix_hit_rate,
                       peak_blocks_in_use=eng.peak_blocks_in_use)
+        if ec.spec_k:
+            extras.update(spec_k=ec.spec_k,
+                          spec_steps=eng.spec_steps,
+                          spec_proposed=eng.spec_proposed,
+                          spec_accepted=eng.spec_accepted,
+                          spec_acceptance=eng.spec_acceptance,
+                          spec_tokens_per_step=eng.spec_tokens_per_step)
     else:
         # legacy lockstep server: whole-batch generation, timed in two legs
         # (prefill+first token, then the remaining decode steps)

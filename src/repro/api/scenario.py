@@ -59,6 +59,14 @@ class Scenario:
                           mesh, sharding weights + the block-paged KV pool
                           over KV heads.  ``tp=1`` (default) is the
                           single-chip paper scenario, bit-for-bit.
+    Speculative decoding (``spec_k > 0``): the measured engine runs the
+    draft → batched-verify → accept loop (``spec_k`` drafts per slot per
+    step); the forecast prices k draft steps plus one (k+1)-query verify
+    at assumed acceptance ``spec_acceptance`` and reports the speedup
+    curve and per-hardware break-even α.  ``prompt_motif_len`` makes the
+    measured prompts repeat a short motif — a high-acceptance workload
+    for the self-speculative n-gram drafter.
+
     Measured-path knobs (``repro.api.measure`` only): ``reduced`` serves the
     CPU-sized reduced config, ``n_requests`` decouples offered traffic from
     ``batch`` slots, ``decode_block``/``temperature``/``seed`` mirror
@@ -79,6 +87,16 @@ class Scenario:
     attn_impl: Optional[str] = None
     # sharding (tensor-parallel degree; 1 = single chip)
     tp: int = 1
+    # speculative decoding: k drafts/step, assumed per-draft acceptance α
+    # (forecast side; the measured side records realized acceptance), and
+    # an optional small draft architecture (None = free n-gram drafter)
+    spec_k: int = 0
+    spec_acceptance: float = 0.7
+    spec_draft_arch: Optional[str] = None
+    # measured prompts repeat a motif of this many tokens instead of being
+    # i.i.d. random — a high-acceptance workload (agent loops, templated
+    # traffic) the n-gram drafter locks onto
+    prompt_motif_len: Optional[int] = None
     # measured-path traffic shape
     reduced: bool = False
     n_requests: Optional[int] = None
@@ -124,6 +142,18 @@ class Scenario:
                              f"{ENGINE_ATTN_IMPLS}, got {self.attn_impl!r}")
         if self.tp < 1:
             raise ValueError(f"tp must be >= 1, got {self.tp}")
+        if self.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {self.spec_k}")
+        if not 0.0 <= self.spec_acceptance <= 1.0:
+            raise ValueError(f"spec_acceptance must be in [0, 1], got "
+                             f"{self.spec_acceptance}")
+        if (self.spec_draft_arch is not None
+                and self.spec_draft_arch not in configs.ARCHS):
+            raise KeyError(f"unknown draft arch {self.spec_draft_arch!r}; "
+                           f"known: {sorted(configs.ARCHS)}")
+        if self.prompt_motif_len is not None and not (
+                1 <= self.prompt_motif_len <= self.prompt_len):
+            raise ValueError("prompt_motif_len must be in [1, prompt_len]")
 
     # ------------------------------------------------------------------
     # resolution
@@ -182,6 +212,17 @@ class Scenario:
         from repro.core.workload import DEFAULT_KV_BLOCK_SIZE
         return DEFAULT_KV_BLOCK_SIZE
 
+    def spec_decode(self, k: int, acceptance: float = 0.7,
+                    draft_arch: Optional[str] = None) -> "Scenario":
+        """This scenario with speculative decoding: ``k`` drafts verified
+        per step at assumed per-draft acceptance ``acceptance`` (the
+        forecast's α — the measured engine records the realized rate),
+        optionally drafted by a small ``draft_arch`` instead of the free
+        self-speculative n-gram drafter."""
+        return dataclasses.replace(self, spec_k=k,
+                                   spec_acceptance=acceptance,
+                                   spec_draft_arch=draft_arch)
+
     @property
     def cached_prefix_len(self) -> int:
         """Prompt tokens a warm admission maps from shared blocks.
@@ -213,6 +254,10 @@ class Scenario:
             "prefix_cache": self.prefix_cache,
             "attn_impl": self.attn_impl,
             "tp": self.tp,
+            "spec_k": self.spec_k,
+            "spec_acceptance": self.spec_acceptance,
+            "spec_draft_arch": self.spec_draft_arch,
+            "prompt_motif_len": self.prompt_motif_len,
             "reduced": self.reduced,
             "n_requests": self.n_requests,
             "gen_lens": list(self.gen_lens) if self.gen_lens else None,
@@ -227,5 +272,6 @@ class Scenario:
         return cls(**{k: d[k] for k in (
             "model", "variant", "batch", "prompt_len", "gen_len", "chunk",
             "past_lens", "lora_rank", "shared_prefix_len", "block_size",
-            "prefix_cache", "attn_impl", "tp", "reduced", "n_requests",
+            "prefix_cache", "attn_impl", "tp", "spec_k", "spec_acceptance",
+            "spec_draft_arch", "prompt_motif_len", "reduced", "n_requests",
             "gen_lens", "decode_block", "temperature", "seed") if k in d})

@@ -117,6 +117,96 @@ class Forecaster:
             ec: Optional[float] = None) -> float:
         return 1.0 / self.tpot(decode_db, em=em, ec=ec)
 
+    # -- speculative decoding ----------------------------------------------
+    @staticmethod
+    def spec_expected_tokens(k: int, alpha: float) -> float:
+        """Expected tokens emitted per speculative step at per-draft
+        acceptance rate ``alpha``: Σ_{i=0..k} α^i — the accepted-prefix
+        geometric series plus the always-emitted bonus/corrected token
+        (Leviathan et al.'s E[#tokens] for i.i.d. acceptance)."""
+        if not 0.0 <= alpha <= 1.0:
+            raise ValueError(f"alpha must be in [0, 1], got {alpha}")
+        if alpha == 1.0:
+            return float(k + 1)
+        return (1.0 - alpha ** (k + 1)) / (1.0 - alpha)
+
+    def spec_step_latency(self, verify_totals: Totals, k: int, *,
+                          draft_totals: Optional[Totals] = None,
+                          em: float = 1.0,
+                          ec: Optional[float] = None) -> float:
+        """Latency of one speculative step: k drafter steps (zero for the
+        self-speculative n-gram drafter — ``draft_totals=None``) plus one
+        (k+1)-query verify pass priced like a decode step."""
+        t = self.step_latency(verify_totals, em=em, ec=ec)
+        if draft_totals is not None:
+            t += k * self.step_latency(draft_totals, em=em, ec=ec)
+        return t
+
+    def spec_tpot(self, verify_totals: Totals, k: int, alpha: float, *,
+                  draft_totals: Optional[Totals] = None, em: float = 1.0,
+                  ec: Optional[float] = None) -> float:
+        """Expected seconds per output token under speculation: step
+        latency divided by expected emitted tokens (Eq. 4 analog)."""
+        step = self.spec_step_latency(verify_totals, k,
+                                      draft_totals=draft_totals,
+                                      em=em, ec=ec)
+        return step / self.spec_expected_tokens(k, alpha)
+
+    def spec_speedup(self, base_totals: Totals, verify_totals: Totals,
+                     k: int, alpha: float, *,
+                     draft_totals: Optional[Totals] = None,
+                     em: float = 1.0, ec: Optional[float] = None) -> float:
+        """TPOT(plain) / TPOT(speculative) at acceptance ``alpha``."""
+        base = self.step_latency(base_totals, em=em, ec=ec)
+        return base / self.spec_tpot(verify_totals, k, alpha,
+                                     draft_totals=draft_totals,
+                                     em=em, ec=ec)
+
+    def spec_speedup_curve(self, base_totals: Totals,
+                           verify_totals: Totals, k: int,
+                           alphas: Sequence[float], *,
+                           draft_totals: Optional[Totals] = None,
+                           em: float = 1.0,
+                           ec: Optional[float] = None) -> List[tuple]:
+        """(alpha, speedup) samples of the TPOT speedup over acceptance —
+        the curve whose crossing of 1.0 is the hardware's break-even α."""
+        return [(a, self.spec_speedup(base_totals, verify_totals, k, a,
+                                      draft_totals=draft_totals,
+                                      em=em, ec=ec))
+                for a in alphas]
+
+    def spec_breakeven_acceptance(self, base_totals: Totals,
+                                  verify_totals: Totals, k: int, *,
+                                  draft_totals: Optional[Totals] = None,
+                                  em: float = 1.0,
+                                  ec: Optional[float] = None
+                                  ) -> Optional[float]:
+        """Acceptance rate α* where speculation stops losing: the α with
+        E[tokens/step] = spec_step / plain_step.  Returns 0.0 when the
+        spec step is no slower than a plain step (speculation can never
+        lose — e.g. a free drafter in a fully weight-bound regime), and
+        ``None`` when even α=1 cannot pay for the step (cost ratio above
+        k+1: speculation never wins on this hardware).  Hardware enters
+        through both step latencies, which is what makes break-even a
+        per-target forecast quantity."""
+        base = self.step_latency(base_totals, em=em, ec=ec)
+        step = self.spec_step_latency(verify_totals, k,
+                                      draft_totals=draft_totals,
+                                      em=em, ec=ec)
+        ratio = step / base
+        if ratio <= 1.0:
+            return 0.0
+        if ratio >= self.spec_expected_tokens(k, 1.0):
+            return None
+        lo, hi = 0.0, 1.0
+        for _ in range(60):              # E is monotone in α: bisect
+            mid = 0.5 * (lo + hi)
+            if self.spec_expected_tokens(k, mid) < ratio:
+                lo = mid
+            else:
+                hi = mid
+        return 0.5 * (lo + hi)
+
     # -- Eq. 7 --------------------------------------------------------------
     def lora_update_time(self, lora_db: StatsDB, *, ec: float = 1.0,
                          em: float = 1.0) -> PhaseForecast:

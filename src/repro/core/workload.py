@@ -224,6 +224,42 @@ class WorkloadModel:
                     dispatches=0)
         return db
 
+    def verify_step(self, batch: int, past_len: int, k: int,
+                    db: Optional[StatsDB] = None) -> StatsDB:
+        """One speculative-verify pass: ``k + 1`` queries per sequence (the
+        pending token plus ``k`` draft tokens) scored in a single batched
+        dispatch with ``past_len`` cached.
+
+        This is where speculation pays analytically: the pass reads the
+        weights ONCE for all ``k + 1`` queries (amortized, like prefill)
+        while a plain decode step re-reads them per token — in the
+        memory-bound decode regime the verify step costs barely more than
+        one token's step but can emit up to ``k + 1`` tokens.
+        ``k == 0`` reproduces :meth:`decode_step` record-for-record.
+        """
+        if k < 0:
+            raise ValueError(f"k must be >= 0, got {k}")
+        db = db or StatsDB()
+        db.set_phase("decode")
+        a, v = self.arch, self.variant
+        ntok = batch * (k + 1)
+        with db.scope("model"), db.sharded(self.plan.tp):
+            F.embedding(db, ntok, a.vocab_size, a.d_model, dtype=v.dtype_act)
+            for i, kind in enumerate(a.block_kinds()):
+                with db.scope(f"layer{i}"):
+                    self._block(db, kind, batch, q_len=k + 1,
+                                kv_len=past_len + k + 1, decode=True)
+            D.norm(db, ntok, a.d_model, kind=a.norm_kind,
+                   dtype=v.dtype_act, fused=v.fused)
+            F.linear(db, ntok, a.d_model, a.vocab_size,
+                     dtype_act=v.dtype_act, dtype_w=v.dtype_w,
+                     group_size=v.group_size, name="lm_head")
+            # acceptance test / sampling reads every query's logits row
+            F.elemw(db, ntok * a.vocab_size, n_operands=1, ops_per_el=1.0,
+                    dtype=v.dtype_act, write_output=False, name="sampling",
+                    dispatches=0)
+        return db
+
     def decode_totals_mixed(self, past_lens: Sequence[int]) -> Totals:
         """Workload of ONE decode step for a continuous-batching batch.
 
@@ -265,19 +301,51 @@ class WorkloadModel:
         t0, slope = self._mixed_cache[key]
         return t0.plus(slope, factor=float(sum(eff)))
 
-    def effective_kv_lens(self, past_lens: Sequence[int]) -> List[int]:
+    def verify_totals_mixed(self, past_lens: Sequence[int],
+                            k: int) -> Totals:
+        """Workload of ONE speculative-verify step for a mixed-length
+        batch — :meth:`decode_totals_mixed` generalized to ``k + 1``
+        queries per slot.  Affinity in Σ past holds for fixed ``(B, k)``
+        exactly as for plain decode (everything attention reads beyond
+        the per-slot candidate window scales linearly with past length);
+        ``verify_totals_mixed(pls, 0) == decode_totals_mixed(pls)``
+        (tested)."""
+        if k == 0:
+            return self.decode_totals_mixed(past_lens)
+        eff = self.effective_kv_lens(past_lens, q_len=k + 1)
+        B = len(eff)
+        key = (B, k)
+        if not hasattr(self, "_verify_cache"):
+            self._verify_cache = {}
+        if key not in self._verify_cache:
+            base_v = dataclasses.replace(self.variant, pad_to=1)
+            base_wm = WorkloadModel(self.arch, base_v,
+                                    attn_impl=self.attn_impl,
+                                    plan=self.plan)
+            t0 = base_wm.verify_step(B, 0, k).totals("decode")
+            t1 = base_wm.verify_step(B, 1, k).totals("decode")
+            slope = t1.minus(t0).scaled(1.0 / B)
+            self._verify_cache[key] = (t0, slope)
+        t0, slope = self._verify_cache[key]
+        return t0.plus(slope, factor=float(sum(eff)))
+
+    def effective_kv_lens(self, past_lens: Sequence[int],
+                          q_len: int = 1) -> List[int]:
         """Per-slot effective past lengths after ``pad_to`` / local-window
-        adjustment — the quantities :meth:`decode_totals_mixed` is affine
-        in (exposed so callers can memoize on ``(B, Σ eff)``)."""
+        adjustment — the quantities :meth:`decode_totals_mixed` /
+        :meth:`verify_totals_mixed` are affine in (exposed so callers can
+        memoize on ``(B, Σ eff)``).  ``q_len`` is the new tokens the step
+        scores on top of the past (1 for plain decode, ``k + 1`` for a
+        speculative verify)."""
         a, v = self.arch, self.variant
         eff = []
         for p in past_lens:
-            kv = p + 1
+            kv = p + q_len
             if v.pad_to > 1:
                 kv = -(-kv // v.pad_to) * v.pad_to
             if a.local_window:
                 kv = min(kv, a.local_window)
-            eff.append(kv - 1)
+            eff.append(kv - q_len)
         return eff
 
     def generate_timeline(self, batch: int, prompt_len: int, n_new: int,

@@ -6,31 +6,41 @@ Subsystem layout:
     kv_cache      — block-paged KV cache descriptor (block tables, int8
                     storage, COW block copy, slot reset)
     decode_loop   — jitted chunked-prefill admission + fused multi-token
-                    decode scan; attention reads the block tables either
-                    by XLA gather ("gather") or through the Pallas paged
-                    flash kernels ("paged", repro.kernels.paged_attention)
+                    decode scan + batched multi-query speculative verify;
+                    attention reads the block tables either by XLA gather
+                    ("gather") or through the Pallas paged flash kernels
+                    ("paged", repro.kernels.paged_attention)
+    drafter       — speculative draft proposers: self-speculative n-gram
+                    prompt lookup (free) or a small draft architecture
     scheduler     — request queue, admission with prefix-cache hits and
                     block-pool backpressure, mid-flight completion,
+                    speculative decode steps (draft → verify → accept),
                     per-request metrics, trace emission
     forecast_twin — replays the scheduler trace through WorkloadModel /
                     Forecaster: per-request TTFT/TPOT + aggregate TPS
                     forecasts for mixed continuous-batching traffic,
-                    prefix-hit aware (cold_trace for savings forecasts)
+                    prefix-hit aware (cold_trace for savings forecasts),
+                    speculation aware (measured-acceptance spec replay,
+                    despeculate_trace for speedup grounding)
 """
 from .sampling import sample, kv_jnp_dtype, KV_DTYPES
 from .block_pool import BlockPool, PoolExhausted, RadixIndex
 from .kv_cache import BlockPagedKVCache, PagedKVCache, engine_supported
-from .decode_loop import ATTN_IMPLS, make_engine_fns
+from .decode_loop import ATTN_IMPLS, make_engine_fns, make_verify_fn
+from .drafter import (Drafter, NgramDrafter, DraftModelDrafter,
+                      make_drafter)
 from .scheduler import (Engine, EngineConfig, Request, RequestResult,
                         TraceEvent)
-from .forecast_twin import (ForecastTwin, TraceForecast, RequestForecast,
-                            cold_trace, replay_trace)
+from .forecast_twin import (AUTO, ForecastTwin, TraceForecast,
+                            RequestForecast, cold_trace,
+                            despeculate_trace, replay_trace)
 
 __all__ = [
     "sample", "kv_jnp_dtype", "KV_DTYPES", "BlockPool", "PoolExhausted",
     "RadixIndex", "BlockPagedKVCache", "PagedKVCache", "engine_supported",
-    "ATTN_IMPLS", "make_engine_fns", "Engine", "EngineConfig", "Request",
-    "RequestResult",
-    "TraceEvent", "ForecastTwin", "TraceForecast", "RequestForecast",
-    "cold_trace", "replay_trace",
+    "ATTN_IMPLS", "make_engine_fns", "make_verify_fn",
+    "Drafter", "NgramDrafter", "DraftModelDrafter", "make_drafter",
+    "Engine", "EngineConfig", "Request", "RequestResult",
+    "TraceEvent", "AUTO", "ForecastTwin", "TraceForecast",
+    "RequestForecast", "cold_trace", "despeculate_trace", "replay_trace",
 ]

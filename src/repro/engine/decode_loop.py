@@ -172,6 +172,56 @@ def _decode_layer(cfg: ArchConfig, p, x, ck, cv, bt, pos, active,
     return _channel_mix(cfg, p, x + y), ck, cv
 
 
+def _verify_layer(cfg: ArchConfig, p, x, ck, cv, bt, pos, active, valid_q,
+                  attn_impl: str = "gather",
+                  paged_fn=paged_ops.paged_verify):
+    """One layer of a speculative-verify step: Q = k+1 queries per slot.
+
+    x: (S, Q, d) — slot ``s``'s queries are its pending token plus its k
+    draft proposals, at absolute positions ``pos[s] .. pos[s]+Q-1``;
+    ck/cv: (N, bs, Hk, hd); bt: (S, max_bps); pos: (S,) cursors;
+    valid_q: (S,) live queries per slot (budget-capped — padding queries
+    neither write KV nor matter downstream; their scatter block id is
+    forced out of bounds and dropped, mirroring prefill chunk padding).
+
+    Candidate K/V are scattered into the slot's exclusively-owned
+    writable blocks before attention, so query ``i`` causally attends the
+    candidates ``<= i`` like a prefill chunk attends its own tokens.
+    Rejected candidates stay in place past the rolled-back cursor:
+    unreachable under the causal mask, overwritten by the next step.
+    """
+    N, bs = ck.shape[0], ck.shape[1]
+    S_, max_bps = bt.shape
+    Q = x.shape[1]
+    L_virt = max_bps * bs
+    h = apply_norm(cfg.norm_kind, x, p["ln1"])
+    pos_q = pos[:, None] + jnp.arange(Q, dtype=jnp.int32)[None, :]  # (S, Q)
+    q, k_new, v_new = A._project_qkv(cfg, p["attn"], h, pos_q)
+    qi = jnp.arange(Q, dtype=jnp.int32)[None, :]
+    live = active[:, None] & (qi < valid_q[:, None])
+    rows = jnp.arange(S_, dtype=jnp.int32)[:, None]
+    blk = jnp.where(live, bt[rows, pos_q // bs], N)
+    ck = ck.at[blk, pos_q % bs].set(k_new.astype(ck.dtype))
+    cv = cv.at[blk, pos_q % bs].set(v_new.astype(cv.dtype))
+    if attn_impl == "paged":
+        # one batched multi-query flash pass through every slot's table
+        out = paged_fn(q, ck, cv, bt, pos)
+        out = out.reshape(S_, Q, -1)
+    else:
+        page_k = ck[bt].reshape(S_, L_virt, *ck.shape[2:])
+        page_v = cv[bt].reshape(S_, L_virt, *cv.shape[2:])
+        k_pos = jnp.arange(L_virt, dtype=jnp.int32)
+        # per-slot, per-query causal mask over the virtual sequence
+        mask = (k_pos[None, None, :] <= pos_q[:, :, None])[:, None, None]
+        out = A._gqa_scores_softmax_out(q, page_k.astype(x.dtype),
+                                        page_v.astype(x.dtype), mask,
+                                        cfg.head_dim ** -0.5)
+    y = jnp.einsum("bshd,hde->bse",
+                   out.reshape(S_, Q, cfg.n_heads, cfg.head_dim),
+                   p["attn"]["wo"])
+    return _channel_mix(cfg, p, x + y), ck, cv
+
+
 # ---------------------------------------------------------------------------
 # jitted engine entry points
 # ---------------------------------------------------------------------------
@@ -296,3 +346,68 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
         out_shardings=(None, None, None, state_sh),
         donate_argnums=(1,))
     return prefill_fn, decode_fn, {"params": param_sh, "state": state_sh}
+
+
+def make_verify_fn(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
+                   cache: BlockPagedKVCache, *,
+                   attn_impl: str = "gather"):
+    """Jit'd speculative-verify entry point (retraced per qtoks width).
+
+    verify_fn(params, state, qtoks (S, k+1), active (S,), valid_q (S,))
+        -> (logits (S, k+1, V), state)
+
+    ``qtoks[s]`` is slot ``s``'s pending token followed by its k draft
+    proposals; their K/V land at absolute positions ``pos[s]..pos[s]+k``
+    and every query's next-token logits come back so the scheduler can
+    accept a prefix via rejection sampling.  The KV cursor is NOT
+    advanced here — acceptance decides the advance, and the rejected
+    tail needs no cleanup (causally unreachable, overwritten later).
+    Padding queries (``qi >= valid_q[s]``, budget-capped) drop their KV
+    writes like prefill chunk padding.
+    """
+    from repro.models import act_sharding
+    if attn_impl not in ATTN_IMPLS:
+        raise ValueError(f"attn_impl must be one of {ATTN_IMPLS}, "
+                         f"got {attn_impl!r}")
+    tp = S.tp_degree(mesh, policy)
+    act_sharding.set_mesh(mesh, policy.dp_axes, policy.tp_axis)
+    state_sh = cache.shardings(mesh, policy)
+    param_sh = S.param_shardings(cfg, mesh, policy)
+
+    paged_verify_fn = paged_ops.paged_verify
+    if tp > 1 and attn_impl == "paged":
+        from jax.experimental.shard_map import shard_map
+        tpa = policy.tp_axis
+        head = P(None, None, tpa, None, None)   # (S, Q, Hk, G, d)
+        pool = P(None, None, tpa, None)         # (N, bs, Hk, d)
+        paged_verify_fn = shard_map(
+            paged_ops.paged_verify, mesh=mesh,
+            in_specs=(head, pool, pool, P(None, None), P(None)),
+            out_specs=head, check_rep=False)
+
+    def verify(params, state, qtoks, active, valid_q):
+        x = params["embed"][qtoks]                        # (S, Q, d)
+        bt = state["block_tables"]
+        pos = state["pos"]
+
+        def layer_fn(h, inp):
+            p_layer, ck, cv = inp
+            h, ck, cv = _verify_layer(cfg, p_layer, h, ck, cv, bt, pos,
+                                      active, valid_q, attn_impl,
+                                      paged_verify_fn)
+            return h, (ck, cv)
+
+        x, (cks, cvs) = jax.lax.scan(
+            layer_fn, x, (params["layers"], state["cache_k"],
+                          state["cache_v"]))
+        x = apply_norm(cfg.norm_kind, x, params["ln_f"])
+        logits = _lm_head(cfg, params, x)                 # (S, Q, V)
+        new_state = dict(state)
+        new_state["cache_k"], new_state["cache_v"] = cks, cvs
+        return logits, new_state
+
+    return jax.jit(
+        verify,
+        in_shardings=(param_sh, state_sh, None, None, None),
+        out_shardings=(None, state_sh),
+        donate_argnums=(1,))

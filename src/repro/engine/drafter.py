@@ -1,0 +1,132 @@
+"""Draft-token proposers for speculative decoding.
+
+A drafter guesses the next ``k`` tokens of a request cheaply; the engine
+verifies all k guesses (plus the pending token) in one batched multi-query
+pass and accepts the longest matching prefix, so a good drafter converts
+spare verify compute into extra tokens per dispatch at zero quality cost.
+
+Two built-ins:
+
+* ``NgramDrafter`` — self-speculative prompt lookup (no second model):
+  find the most recent previous occurrence of the request's trailing
+  n-gram in its own token history and propose the tokens that followed
+  it.  Free to run (pure host-side list matching) and very effective on
+  repetitive continuations — retrieval answers, code, and the cyclic
+  outputs random-weight models greedily settle into.
+* ``DraftModelDrafter`` — a small separate architecture run greedily for
+  k autoregressive steps (the classic two-model scheme).  Costs k tiny
+  forwards per step; the analytical side prices them via the draft
+  arch's own ``WorkloadModel``.
+
+Both return *exactly* ``k`` proposals (padded if the heuristic runs dry)
+so the verify pass has a static shape.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+class Drafter:
+    """Interface: propose ``k`` draft tokens given a request's history."""
+
+    #: analytical label: arch name for model drafters, None for free ones
+    draft_arch = None
+
+    def propose(self, tokens: Sequence[int], k: int) -> List[int]:
+        raise NotImplementedError
+
+    def reset(self) -> None:
+        """Called when the engine resets (new run); stateless by default."""
+
+
+class NgramDrafter(Drafter):
+    """Prompt-lookup decoding: match the trailing n-gram against the
+    request's own history and propose the continuation that followed the
+    most recent previous match.  Falls back to shorter n-grams, then to
+    repeating the last token (still exactly k proposals)."""
+
+    def __init__(self, n: int = 3):
+        if n < 1:
+            raise ValueError(f"n-gram order must be >= 1, got {n}")
+        self.n = n
+
+    def propose(self, tokens: Sequence[int], k: int) -> List[int]:
+        toks = list(tokens)
+        t = len(toks)
+        for n in range(min(self.n, t - 1), 0, -1):
+            tail = toks[t - n:]
+            # rightmost previous occurrence (most recent context wins)
+            for i in range(t - n - 1, -1, -1):
+                if toks[i:i + n] == tail:
+                    cont = toks[i + n:i + n + k]
+                    if cont:
+                        return (cont + [cont[-1]] * (k - len(cont)))[:k]
+                    break
+        pad = toks[-1] if toks else 0
+        return [pad] * k
+
+
+class DraftModelDrafter(Drafter):
+    """Greedy k-step autoregressive draft with a small separate arch.
+
+    Runs the full (non-paged) model forward over the request's history
+    per proposed token — deliberately simple: the draft model is meant to
+    be orders of magnitude smaller than the target, and the analytical
+    side prices it as k draft decode steps regardless of how the
+    measured drafter is implemented.  Forward lengths are bucketed to
+    powers of two so jit retraces O(log T) times, not O(T).
+    """
+
+    def __init__(self, cfg, params):
+        import jax
+        import jax.numpy as jnp
+        from repro.models.model import forward
+
+        self.cfg = cfg
+        self.params = params
+        self.draft_arch = cfg.name
+
+        def greedy_next(token_ids, length):
+            logits, _ = forward(cfg, params, token_ids)
+            return jnp.argmax(logits[0, length - 1], axis=-1)
+
+        self._greedy_next = jax.jit(greedy_next, static_argnums=(1,))
+        self._jnp = jnp
+
+    def propose(self, tokens: Sequence[int], k: int) -> List[int]:
+        toks = list(tokens)
+        out: List[int] = []
+        for _ in range(k):
+            t = len(toks)
+            pad_t = 1 << (t - 1).bit_length() if t > 1 else 1
+            ids = np.zeros((1, pad_t), dtype=np.int32)
+            ids[0, :t] = toks
+            nxt = int(self._greedy_next(self._jnp.asarray(ids), t))
+            out.append(nxt)
+            toks.append(nxt)
+        return out
+
+
+def make_drafter(spec_draft_arch=None, *, ngram_n: int = 3, seed: int = 0,
+                 reduce: bool = False, vocab_size=None) -> Drafter:
+    """Build the drafter for an engine run: prompt-lookup by default, a
+    small draft model when an arch name is given.  ``reduce`` shrinks the
+    draft arch the same way the measured target is shrunk on CPU (the
+    vocabularies must agree for drafts to be target tokens at all)."""
+    if spec_draft_arch is None:
+        return NgramDrafter(n=ngram_n)
+    import jax
+    from repro import configs
+    from repro.models import init_params
+
+    cfg = configs.get(spec_draft_arch)
+    if reduce:
+        over = {"vocab_size": vocab_size} if vocab_size else {}
+        cfg = configs.reduced(cfg, **over)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    return DraftModelDrafter(cfg, params)
+
+
+__all__ = ["Drafter", "NgramDrafter", "DraftModelDrafter", "make_drafter"]

@@ -47,6 +47,12 @@ from repro.core.workload import ShardingPlan, WorkloadModel
 
 from .scheduler import TraceEvent
 
+#: constructor sentinel: resolve ``attn_impl`` (and the paging block size)
+#: from the trace's ``"engine"`` header at replay time — the header records
+#: what the engine actually ran, so out-of-band plumbing is only needed to
+#: OVERRIDE it (pass an explicit impl) or to suppress pricing (pass None)
+AUTO = "auto"
+
 
 @dataclasses.dataclass
 class RequestForecast:
@@ -164,6 +170,19 @@ class ForecastTwin:
     the plan's collective wire time on ``hw.interconnect_GBps`` — the
     forecast side of the engine's own ``model=tp`` mesh.  Left ``None``
     (single chip), replay reproduces the unsharded numbers bit-for-bit.
+
+    ``attn_impl`` defaults to :data:`AUTO`: :meth:`replay` reads the
+    impl (and, if ``block_size`` wasn't given, the paging block size)
+    from the trace's ``"engine"`` header and prices accordingly — the
+    explicit constructor arg stays as an override, and explicit ``None``
+    keeps the pre-engine "price neither" behavior.  Direct method calls
+    (``decode_step_latency`` etc.) on an AUTO twin price like ``None``
+    since there is no trace to resolve from.
+
+    ``draft_arch`` (optional, name or ``ArchConfig``) prices speculative
+    ``spec_step`` events as k draft-model decode steps plus the verify
+    pass; left ``None``, drafting is free (the self-speculative n-gram
+    drafter runs on the host off the critical accelerator path).
     """
 
     def __init__(self, arch: ArchConfig, hw: HardwareSpec,
@@ -171,9 +190,13 @@ class ForecastTwin:
                  ec: Optional[float] = None, em: float = 1.0,
                  prefill_ec: float = 1.0, prefill_em: float = 1.0,
                  block_size: Optional[int] = None,
-                 attn_impl: Optional[str] = None,
-                 plan: Optional["ShardingPlan"] = None):
-        if attn_impl is not None and block_size is None:
+                 attn_impl: Optional[str] = AUTO,
+                 plan: Optional["ShardingPlan"] = None,
+                 draft_arch=None):
+        self._attn_auto = attn_impl == AUTO
+        if self._attn_auto:
+            attn_impl = None
+        elif attn_impl is not None and block_size is None:
             from repro.core.workload import DEFAULT_KV_BLOCK_SIZE
             block_size = DEFAULT_KV_BLOCK_SIZE
         self.wm = WorkloadModel(arch, variant, attn_impl=attn_impl,
@@ -184,8 +207,18 @@ class ForecastTwin:
         self.prefill_ec, self.prefill_em = prefill_ec, prefill_em
         self.block_size = block_size
         self.attn_impl = attn_impl
+        self.draft_arch = draft_arch
+        self._draft_wm = None
+        if draft_arch is not None:
+            from repro import configs
+            dcfg = (configs.get(draft_arch) if isinstance(draft_arch, str)
+                    else draft_arch)
+            self._draft_wm = WorkloadModel(dcfg)
         self._prefill_memo: Dict[tuple, float] = {}
         self._decode_memo: Dict[tuple, float] = {}
+        self._verify_memo: Dict[tuple, float] = {}
+        self._draft_memo: Dict[tuple, float] = {}
+        self._auto_twins: Dict[tuple, "ForecastTwin"] = {}
 
     # ------------------------------------------------------------------
     def prefill_chunk_latency(self, chunk: int, past_len: int) -> float:
@@ -228,8 +261,59 @@ class ForecastTwin:
                 totals, em=self.em, ec=self.ec)
         return self._decode_memo[key]
 
+    def verify_step_latency(self, past_lens: Sequence[int],
+                            k: int) -> float:
+        """One speculative step: k draft steps (zero-cost without a
+        ``draft_arch``) + one (k+1)-query verify pass over the mixed
+        batch, weight reads amortized across queries by construction of
+        ``WorkloadModel.verify_totals_mixed``."""
+        if k == 0:
+            return self.decode_step_latency(past_lens)
+        eff = self.wm.effective_kv_lens(past_lens, q_len=k + 1)
+        key = (len(eff), sum(eff), k)
+        if self.block_size:
+            key += (sum(-(-(p + k + 1) // self.block_size)
+                        for p in past_lens),)
+        if key not in self._verify_memo:
+            totals = self.wm.verify_totals_mixed(past_lens, k)
+            if self.block_size:
+                for p in past_lens:
+                    totals = totals.plus(self.wm.block_table_totals(
+                        1, p + k + 1, self.block_size))
+            t = self.fc.step_latency(totals, em=self.em, ec=self.ec)
+            if self._draft_wm is not None:
+                t += k * self._draft_step_latency(past_lens)
+            self._verify_memo[key] = t
+        return self._verify_memo[key]
+
+    def _draft_step_latency(self, past_lens: Sequence[int]) -> float:
+        eff = self._draft_wm.effective_kv_lens(past_lens)
+        key = (len(eff), sum(eff))
+        if key not in self._draft_memo:
+            self._draft_memo[key] = self.fc.step_latency(
+                self._draft_wm.decode_totals_mixed(past_lens),
+                em=self.em, ec=self.ec)
+        return self._draft_memo[key]
+
     # ------------------------------------------------------------------
+    def _resolved_twin(self, header: TraceEvent) -> "ForecastTwin":
+        """AUTO mode: the twin re-parameterized from the trace header."""
+        key = (header.attn_impl,
+               self.block_size or header.block_size or None)
+        if key not in self._auto_twins:
+            self._auto_twins[key] = ForecastTwin(
+                self.wm.arch, self.fc.hw, self.wm.variant,
+                ec=self.ec, em=self.em, prefill_ec=self.prefill_ec,
+                prefill_em=self.prefill_em, block_size=key[1],
+                attn_impl=key[0], plan=self.plan,
+                draft_arch=self.draft_arch)
+        return self._auto_twins[key]
+
     def replay(self, trace: Sequence[TraceEvent]) -> TraceForecast:
+        header = next((ev for ev in trace if ev.kind == "engine"), None)
+        if self._attn_auto and header is not None and header.attn_impl:
+            # the header knows what the engine ran: price that
+            return self._resolved_twin(header).replay(trace)
         clock = 0.0
         requests: Dict[int, RequestForecast] = {}
         total_tokens = 0
@@ -278,12 +362,51 @@ class ForecastTwin:
                         s[1] += 1       # KV grew by the token just written
                         s[2] -= 1       # budget drained by the token sampled
                         total_tokens += 1
+            elif ev.kind == "spec_step":
+                # one batched verify over the active slots; per-slot
+                # emitted tokens come from the MEASURED accepted counts
+                # the trace recorded, so replay reproduces the engine's
+                # realized acceptance rather than an assumed α
+                clock += self.verify_step_latency(
+                    [s[1] for s in ev.slots], ev.spec_k)
+                for s, a in zip(ev.slots, ev.accepted):
+                    emit = min(a + 1, s[2])
+                    rf = requests.setdefault(s[0],
+                                             RequestForecast(rid=s[0]))
+                    rf.n_tokens += emit
+                    rf.finished = clock
+                    total_tokens += emit
             else:
                 raise ValueError(f"unknown trace event kind {ev.kind!r}")
         return TraceForecast(total_time=clock, total_tokens=total_tokens,
                              requests=requests, prefill_time=prefill_time,
                              cached_tokens=cached_tokens,
                              prompt_tokens=prompt_tokens)
+
+
+def despeculate_trace(trace: Sequence[TraceEvent]) -> List[TraceEvent]:
+    """Rewrite ``spec_step`` events into the plain decode blocks that
+    would have emitted the same tokens: a step whose slots accepted
+    ``a_i`` drafts each becomes a ``decode_block`` of ``max(a_i + 1)``
+    steps with per-slot budgets ``a_i + 1`` (budget attrition retires
+    the luckier slots' peers at the right step).  Replaying the result
+    against the original prices the measured schedule with and without
+    speculation on the same hardware — the trace-grounded speedup that
+    validates the assumed-α forecast.
+    """
+    out: List[TraceEvent] = []
+    for ev in trace:
+        if ev.kind == "engine":
+            out.append(dataclasses.replace(ev, spec_k=0))
+            continue
+        if ev.kind != "spec_step":
+            out.append(ev)
+            continue
+        emits = [min(a + 1, s[2]) for a, s in zip(ev.accepted, ev.slots)]
+        slots = tuple((s[0], s[1], e) for s, e in zip(ev.slots, emits))
+        out.append(TraceEvent(kind="decode_block",
+                              n_steps=max(emits, default=0), slots=slots))
+    return out
 
 
 def replay_trace(arch: ArchConfig, hw: HardwareSpec,

@@ -39,7 +39,8 @@ from repro.runtime.sharding import ShardingPolicy, tp_degree
 
 from .block_pool import BlockPool, RadixIndex
 from .kv_cache import BlockPagedKVCache
-from .decode_loop import ATTN_IMPLS, make_engine_fns, sample
+from .decode_loop import (ATTN_IMPLS, make_engine_fns, make_verify_fn,
+                          sample)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +56,7 @@ class EngineConfig:
     attn_impl: str = "gather"           # gather (XLA ref) | paged (Pallas)
     temperature: float = 0.0            # 0 = greedy
     eos_id: Optional[int] = None        # stop token (None: budget only)
+    spec_k: int = 0                     # draft tokens/step (0 = no speculation)
     seed: int = 0
 
     def __post_init__(self):
@@ -63,6 +65,8 @@ class EngineConfig:
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1, "
                                  f"got {getattr(self, name)}")
+        if self.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {self.spec_k}")
         # explicit 0 must not silently fall back to the default pool
         if self.n_blocks is not None and self.n_blocks < 1:
             raise ValueError(f"n_blocks must be >= 1 when given, "
@@ -133,7 +137,10 @@ class TraceEvent:
         the engine's true chunk granularity even when every admission was
         a warm hit with a small tail suffix), ``n_steps`` the configured
         ``decode_block``, ``tp`` the mesh's tensor-parallel degree the
-        run executed at; zero workload, skipped by replay.
+        run executed at, ``attn_impl``/``block_size``/``spec_k`` the
+        attention path, KV paging granularity and speculation depth (so
+        the twin defaults its pricing from the trace itself instead of
+        out-of-band constructor args); zero workload, skipped by replay.
     kind == "prefill_chunk": one prompt chunk of ``rid`` into ``slot``
         (batch 1, ``chunk`` new tokens on top of ``past_len`` cached);
         ``cached`` is the request's prefix-cache hit length (constant
@@ -142,6 +149,12 @@ class TraceEvent:
     kind == "decode_block": ``n_steps`` fused steps over the active slots;
         ``slots`` holds (rid, past_len, remaining_budget) per active slot
         at block start, enough for the twin to replay per-step attrition.
+    kind == "spec_step": one speculative verify dispatch over the active
+        slots — each slot's pending token plus ``spec_k`` drafts verified
+        in a single (k+1)-query pass; ``proposed``/``accepted`` record the
+        drafts offered / accepted per slot (aligned with ``slots``), so
+        acceptance is a *measured* per-step quantity the twin replays
+        against the assumed-α forecast.
     """
     kind: str
     rid: int = -1
@@ -153,6 +166,11 @@ class TraceEvent:
     n_steps: int = 0
     slots: Tuple[Tuple[int, int, int], ...] = ()
     tp: int = 1
+    attn_impl: str = ""                 # header only (twin replay default)
+    block_size: int = 0                 # header only
+    spec_k: int = 0                     # header + spec_step
+    proposed: Tuple[int, ...] = ()      # spec_step: drafts verified per slot
+    accepted: Tuple[int, ...] = ()      # spec_step: drafts accepted per slot
 
 
 @dataclasses.dataclass
@@ -167,7 +185,8 @@ class Engine:
     """Continuous-batching serving engine over a block-paged KV cache."""
 
     def __init__(self, cfg: ArchConfig, params, mesh: Mesh,
-                 policy: ShardingPolicy, ec: EngineConfig):
+                 policy: ShardingPolicy, ec: EngineConfig,
+                 drafter=None):
         if ec.chunk_size > ec.max_len:
             raise ValueError("chunk_size exceeds max_len")
         self.cfg, self.params, self.ec = cfg, params, ec
@@ -183,6 +202,17 @@ class Engine:
             cfg, mesh, policy, self.cache, chunk_size=ec.chunk_size,
             decode_block=ec.decode_block, temperature=ec.temperature,
             eos_id=ec.eos_id, attn_impl=ec.attn_impl)
+        self.verify_fn = self.drafter = None
+        if ec.spec_k > 0:
+            from .drafter import make_drafter
+            self.verify_fn = make_verify_fn(cfg, mesh, policy, self.cache,
+                                            attn_impl=ec.attn_impl)
+            self.drafter = drafter if drafter is not None else make_drafter()
+        self._np_rng = np.random.default_rng(ec.seed + 1)
+        # speculative-decoding counters over the run
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_steps = 0
         self.state = self.cache.init_state()
         self._rng = jax.random.PRNGKey(ec.seed)
         self.queue: Deque[Request] = collections.deque()
@@ -359,14 +389,19 @@ class Engine:
             # header: the engine knobs the twin's replay/cold_trace need
             self.trace.append(TraceEvent(kind="engine", chunk=ec.chunk_size,
                                          n_steps=ec.decode_block,
-                                         tp=self.tp))
+                                         tp=self.tp,
+                                         attn_impl=ec.attn_impl,
+                                         block_size=ec.block_size,
+                                         spec_k=ec.spec_k))
         while (self.free_slots and self.queue
                and self.queue[0].arrival_step <= self.step_idx):
             alloc = self._allocate(self.queue[0])
             if alloc is None:
                 break                  # pool exhausted: admission backpressure
             self._admit(self.queue.popleft(), self.free_slots.pop(0), alloc)
-        if self.running:
+        if self.running and ec.spec_k > 0:
+            self._spec_step()
+        elif self.running:
             slots_meta = []
             active = np.zeros((ec.max_slots,), bool)
             remaining = np.zeros((ec.max_slots,), np.int32)
@@ -404,6 +439,131 @@ class Engine:
                 self._free(slot)
 
     # ------------------------------------------------------------------
+    # speculative decoding: draft k, verify k+1 queries, accept a prefix
+    # ------------------------------------------------------------------
+    def _spec_step(self) -> None:
+        """One speculative step: per active slot, propose ``spec_k`` draft
+        tokens from the request's own history, verify the pending token
+        plus the drafts in ONE batched (k+1)-query pass through the
+        block-paged cache, then accept a prefix by rejection sampling.
+
+        The KV cursor only rolls *forward* by the accepted count: the
+        rejected tail's K/V stays in the slot's preallocated blocks,
+        causally unreachable (keys past the cursor are masked) and
+        overwritten by the next step — no block-table surgery needed
+        because admission already owns blocks for the full budget.
+        Per-slot ``valid_q = 1 + min(k, budget-1)`` caps speculation at
+        the generation budget, so the highest written position never
+        exceeds the allocated ``prompt + max_new - 1`` region.
+        """
+        ec = self.ec
+        k = ec.spec_k
+        qtoks = np.zeros((ec.max_slots, k + 1), np.int32)
+        active = np.zeros((ec.max_slots,), bool)
+        valid_q = np.ones((ec.max_slots,), np.int32)
+        drafts: Dict[int, List[int]] = {}
+        slots_meta, proposed = [], []
+        order = sorted(self.running.items())
+        for slot, req in order:
+            res = self.results[req.rid]
+            budget = req.max_new - len(res.tokens)
+            # history = prompt + everything emitted; the last emitted token
+            # is exactly the pending token (in ``tok``, not yet in KV)
+            d = self.drafter.propose(
+                [int(t) for t in req.prompt] + res.tokens, k)
+            drafts[slot] = d
+            slots_meta.append((req.rid, int(self.state["pos"][slot]),
+                               budget))
+            active[slot] = True
+            valid_q[slot] = 1 + min(k, budget - 1)
+            proposed.append(int(valid_q[slot]) - 1)
+            qtoks[slot, 0] = res.tokens[-1]
+            qtoks[slot, 1:] = d
+        logits, self.state = self.verify_fn(
+            self.params, self.state, jnp.asarray(qtoks),
+            jnp.asarray(active), jnp.asarray(valid_q))
+        logits = np.asarray(jax.device_get(logits))       # (S, k+1, V)
+        now = self._now()
+        accepted = []
+        for slot, req in order:
+            res = self.results[req.rid]
+            vq = int(valid_q[slot])
+            emitted = self._accept(logits[slot, :vq], drafts[slot][:vq - 1])
+            accepted.append(len(emitted) - 1)
+            if ec.eos_id is not None and ec.eos_id in emitted:
+                emitted = emitted[:emitted.index(ec.eos_id) + 1]
+            res.tokens.extend(emitted)
+            self.state["pos"] = self.state["pos"].at[slot].add(len(emitted))
+            self.state["tok"] = (
+                self.state["tok"].at[slot].set(emitted[-1]))
+            hit_eos = ec.eos_id is not None and res.tokens[-1] == ec.eos_id
+            if len(res.tokens) >= req.max_new or hit_eos:
+                res.finished = now
+                self._free(slot)
+        self.trace.append(TraceEvent(
+            kind="spec_step", n_steps=1, slots=tuple(slots_meta),
+            spec_k=k, proposed=tuple(proposed), accepted=tuple(accepted)))
+        self.spec_proposed += sum(proposed)
+        self.spec_accepted += sum(accepted)
+        self.spec_steps += 1
+
+    def _accept(self, logits: np.ndarray, drafts: List[int]) -> List[int]:
+        """Standard speculative rejection sampling against the verify
+        logits (``(vq, V)`` — row i scores the token *after* query i).
+
+        Returns the emitted tokens: the accepted draft prefix plus one —
+        the bonus token on full acceptance, or the corrected sample at
+        the first rejection.  Exact w.r.t. the target distribution; at
+        temperature 0 it degenerates to the longest greedy-matching
+        prefix plus the greedy next token, which makes spec decode
+        bit-identical to plain greedy decode (tested).
+        """
+        temp = self.ec.temperature
+        if temp <= 0.0:
+            targets = np.argmax(logits, axis=-1)
+            a = 0
+            while a < len(drafts) and drafts[a] == int(targets[a]):
+                a += 1
+            return [int(t) for t in targets[:a + 1]]
+        # the n-gram/greedy drafter is a point mass at d: accept with
+        # probability p(d); on rejection sample the residual p \ {d}
+        x = logits.astype(np.float64) / temp
+        x -= x.max(axis=-1, keepdims=True)
+        p = np.exp(x)
+        p /= p.sum(axis=-1, keepdims=True)
+        out: List[int] = []
+        for i, d in enumerate(drafts):
+            if self._np_rng.random() < p[i, d]:
+                out.append(int(d))
+                continue
+            q = p[i].copy()
+            q[d] = 0.0
+            s = q.sum()
+            if s <= 0.0:               # target IS the point mass: accept
+                out.append(int(d))
+                continue
+            out.append(int(self._np_rng.choice(q.shape[0], p=q / s)))
+            return out
+        out.append(int(self._np_rng.choice(p.shape[-1], p=p[len(drafts)])))
+        return out
+
+    @property
+    def spec_acceptance(self) -> float:
+        """Measured mean draft-acceptance rate over the run."""
+        return self.spec_accepted / max(self.spec_proposed, 1)
+
+    @property
+    def spec_tokens_per_step(self) -> float:
+        """Measured mean tokens a slot emits per speculative step
+        (accepted drafts + the bonus/corrected token) — the measured
+        counterpart of the forecast's expected tokens/step Σ α^i."""
+        slot_steps = sum(len(ev.slots) for ev in self.trace
+                         if ev.kind == "spec_step")
+        if not slot_steps:
+            return 0.0
+        return self.spec_accepted / slot_steps + 1.0
+
+    # ------------------------------------------------------------------
     def run(self, requests: Optional[Sequence[Request]] = None,
             max_steps: int = 100_000) -> List[RequestResult]:
         """Drain the queue (plus ``requests``) to completion."""
@@ -431,6 +591,9 @@ class Engine:
         self.prefix_hit_tokens = 0
         self.prompt_tokens = 0
         self.peak_blocks_in_use = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_steps = 0
         self._t0 = time.perf_counter()
 
     def warmup(self) -> None:

@@ -1,2 +1,2 @@
 from . import ops, ref
-from .ops import paged_decode, paged_prefill
+from .ops import paged_decode, paged_prefill, paged_verify

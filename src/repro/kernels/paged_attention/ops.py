@@ -12,8 +12,9 @@ from typing import Optional
 
 import jax
 
-from .paged_attention import paged_decode_fwd, paged_prefill_fwd
-from .ref import paged_decode_ref, paged_prefill_ref
+from .paged_attention import (paged_decode_fwd, paged_prefill_fwd,
+                              paged_verify_fwd)
+from .ref import paged_decode_ref, paged_prefill_ref, paged_verify_ref
 
 
 def _on_cpu() -> bool:
@@ -51,5 +52,22 @@ def paged_prefill(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
                              interpret=interpret)
 
 
-__all__ = ["paged_decode", "paged_prefill",
-           "paged_decode_ref", "paged_prefill_ref"]
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_verify(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+                 block_tables: jax.Array, pos: jax.Array, *,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Paged flash speculative verify: Q candidate tokens per slot.
+
+    q: (S, Q, Hk, G, d) — slot ``s``'s queries sit at absolute positions
+    ``pos[s] .. pos[s]+Q-1`` (the pending token plus k=Q-1 drafts, whose
+    K/V were scattered before this call); caches: (N, bs, Hk, d);
+    tables: (S, max_bps) int32; pos: (S,) cursors.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    return paged_verify_fwd(q, cache_k, cache_v, block_tables, pos,
+                            interpret=interpret)
+
+
+__all__ = ["paged_decode", "paged_prefill", "paged_verify",
+           "paged_decode_ref", "paged_prefill_ref", "paged_verify_ref"]

@@ -177,6 +177,7 @@ def paged_prefill_fwd(
     *,
     interpret: bool = False,
 ) -> jax.Array:
+    """See :func:`paged_verify_fwd` for the multi-slot q_len>1 variant."""
     C, Hk, G, d = q.shape
     bs = cache_k.shape[1]
     nb = block_table.shape[0]
@@ -207,3 +208,105 @@ def paged_prefill_fwd(
         out_shape=jax.ShapeDtypeStruct((C, Hk, G, d), q.dtype),
         interpret=interpret,
     )(block_table, span, q, cache_k, cache_v)
+
+
+# ---------------------------------------------------------------------------
+# speculative verify: Q = k+1 query tokens for EVERY slot, each slot's
+# queries at absolute positions pos[s] .. pos[s]+Q-1 against its own table
+# ---------------------------------------------------------------------------
+
+def _verify_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, bs: int, n_blocks: int,
+                   group: int, scale: float):
+    s = pl.program_id(0)
+    ki = pl.program_id(2)
+    pos = pos_ref[s]                     # slot cursor: query i sits at pos+i
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(ki * bs <= pos + q_ref.shape[1] - 1)
+    def _compute():
+        Q = q_ref.shape[1]
+        q = q_ref[0].astype(jnp.float32).reshape(Q * group, -1)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)   # (bs, d) — int8 KV
+        v = v_ref[0, :, 0, :].astype(jnp.float32)   # dequantizes right here
+        sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * scale
+        # row r holds query position pos + r // group (grouped heads
+        # interleaved row-major, as in the prefill kernel); keys past each
+        # query's own position — including this step's not-yet-verified
+        # draft keys — are masked causally
+        rows = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 0)
+        q_pos = pos + rows // group
+        k_pos = ki * bs + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        mask = k_pos <= q_pos
+        sc = jnp.where(mask, sc, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(sc - m_new), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_blocks - 1)
+    def _finalize():
+        Q = o_ref.shape[1]
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0] = (acc_ref[...] / l).reshape(Q, group, -1).astype(
+            o_ref.dtype)
+
+
+def paged_verify_fwd(
+    q: jax.Array,            # (S, Q, Hk, G, d) Q=k+1 query tokens per slot
+    cache_k: jax.Array,      # (N, bs, Hk, d) global block pool
+    cache_v: jax.Array,      # (N, bs, Hk, d)
+    block_tables: jax.Array,  # (S, max_bps) int32 physical block ids
+    pos: jax.Array,          # (S,) int32 cursors (query i is at pos+i)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched multi-query pass for speculative verify.
+
+    Merges the decode kernel's per-slot block-table addressing with the
+    chunked-prefill kernel's multi-query causal masking: every slot
+    attends its Q = k+1 candidate tokens (the pending token plus k draft
+    proposals, already scattered into the slot's writable blocks at
+    ``pos .. pos+Q-1``) over its own virtual sequence in one dispatch.
+    KV blocks entirely past a slot's candidate span are skipped.
+    """
+    S, Q, Hk, G, d = q.shape
+    bs = cache_k.shape[1]
+    nb = block_tables.shape[1]
+    kernel = functools.partial(_verify_kernel, bs=bs, n_blocks=nb,
+                               group=G, scale=d ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S, Hk, nb),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, G, d),
+                         lambda s, h, ki, bt, ps: (s, 0, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda s, h, ki, bt, ps: (bt[s, ki], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda s, h, ki, bt, ps: (bt[s, ki], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, 1, G, d),
+                               lambda s, h, ki, bt, ps: (s, 0, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Q * G, d), jnp.float32),
+            pltpu.VMEM((Q * G, 1), jnp.float32),
+            pltpu.VMEM((Q * G, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, Q, Hk, G, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, pos, q, cache_k, cache_v)

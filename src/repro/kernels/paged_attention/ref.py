@@ -40,6 +40,36 @@ def paged_decode_ref(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
     return out.astype(q.dtype)
 
 
+def paged_verify_ref(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+                     block_tables: jax.Array, pos: jax.Array) -> jax.Array:
+    """q: (S, Q, Hk, G, d); caches: (N, bs, Hk, d); tables: (S, nb);
+    pos: (S,).
+
+    Speculative verify semantics: slot ``s``'s query ``i`` sits at
+    absolute position ``pos[s] + i`` and attends keys ``[0, pos[s] + i]``
+    of its gathered virtual sequence (the candidate keys themselves
+    included — they were scattered before attention, like a prefill
+    chunk's own tokens).
+    """
+    S, Q, Hk, G, d = q.shape
+    L = block_tables.shape[1] * cache_k.shape[1]
+    k_pos = jnp.arange(L, dtype=jnp.int32)
+
+    def one_slot(qs, table, p):
+        pk = _gather_pages(cache_k, table).astype(jnp.float32)
+        pv = _gather_pages(cache_v, table).astype(jnp.float32)
+        sc = jnp.einsum("qkgd,lkd->qkgl", qs.astype(jnp.float32),
+                        pk) * d ** -0.5
+        q_pos = p + jnp.arange(Q, dtype=jnp.int32)
+        mask = k_pos[None, :] <= q_pos[:, None]
+        sc = jnp.where(mask[:, None, None], sc, -1e30)
+        pr = jax.nn.softmax(sc, axis=-1)
+        return jnp.einsum("qkgl,lkd->qkgd", pr, pv)
+
+    out = jax.vmap(one_slot)(q, block_tables, pos)
+    return out.astype(q.dtype)
+
+
 def paged_prefill_ref(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
                       block_table: jax.Array, start, valid) -> jax.Array:
     """q: (C, Hk, G, d) chunk at absolute positions ``start + [0, C)``;

@@ -277,7 +277,10 @@ def test_twin_forecast_matches_single_request_tpot(mesh, cfg, params):
                      EngineConfig(max_slots=1, max_len=64,
                                   chunk_size=prompt_len, decode_block=2))
         eng.run([Request(rid=0, prompt=list(prompts[0]), max_new=n_new)])
-    twin = ForecastTwin(cfg, hardware.TPU_V5E, Variant(), em=0.8)
+    # attn_impl=None: price the plain analytical scenario, not the trace
+    # header's engine impl (the AUTO default would resolve to "gather")
+    twin = ForecastTwin(cfg, hardware.TPU_V5E, Variant(), em=0.8,
+                        attn_impl=None)
     fcst = twin.replay(eng.trace)
     rf = fcst.requests[0]
     assert rf.n_tokens == n_new
@@ -312,7 +315,8 @@ def test_twin_replays_prefix_hit_schedule(mesh, cfg, params):
                      EngineConfig(max_slots=1, max_len=96, chunk_size=16,
                                   decode_block=2, block_size=16))
         eng.run(reqs)
-    twin = ForecastTwin(cfg, hardware.TPU_V5E, Variant(), em=0.8)
+    twin = ForecastTwin(cfg, hardware.TPU_V5E, Variant(), em=0.8,
+                        attn_impl=None)
     fcst = twin.replay(eng.trace)
     assert fcst.cached_tokens == 32
     assert fcst.prefix_hit_rate == pytest.approx(32 / 96)
