@@ -133,6 +133,52 @@ def _spec_row():
     return f"engine/spec-k{SPEC_K}-motif8", derived
 
 
+#: Poisson traffic row: offered rate + the SLO pair goodput is judged on.
+#: The measured side serves the open-loop stream on the host (wall-clock
+#: SLO, loose enough for a CPU container); the forecast side simulates
+#: the SAME seeded trace analytically on the paper's Ryzen spec, and the
+#: full model's v5e capacity (max QPS within SLO) rides along.
+TRAFFIC_QPS = 20.0
+TRAFFIC_SLO = (0.5, 0.05)          # (ttft_slo, tpot_slo) seconds
+
+
+def _traffic_scenario() -> api.Scenario:
+    return api.Scenario(
+        model=ARCH, variant=Variant(name="bf16-fused", fused=True),
+        reduced=True, batch=2, prompt_len=24, gen_len=8, n_requests=8,
+        chunk=8, decode_block=4, prefill_batch=2, seed=3,
+    ).traffic("poisson", qps=TRAFFIC_QPS,
+              ttft_slo=TRAFFIC_SLO[0], tpot_slo=TRAFFIC_SLO[1])
+
+
+def _traffic_row():
+    """Measured vs forecast SLO goodput of one Poisson stream."""
+    scn = _traffic_scenario()
+    measured = api.measure(scn)
+    mt = measured.extras["traffic"]
+    cpu = api.forecast(scn, "cpu", em=0.8)
+    ft = cpu.extras["traffic"]
+    full = dataclasses.replace(scn, model=ARCH, reduced=False)
+    max_qps_v5e = api.max_qps(full, "tpu-v5e", em=0.8,
+                              goodput_target=0.9, qps_hi=256.0)
+    derived = {
+        "requests": scn.n_requests, "slots": scn.batch, "tp": 1,
+        "arrival": "poisson", "qps": TRAFFIC_QPS,
+        "prefill_batch": scn.prefill_batch,
+        "ttft_slo_s": TRAFFIC_SLO[0], "tpot_slo_s": TRAFFIC_SLO[1],
+        "measured_goodput": round(mt["goodput"], 3),
+        "measured_good_qps": round(mt["good_qps"], 2),
+        "measured_p99_ttft_queued_ms": round(
+            mt["ttft_queued"]["p99"] * 1e3, 2),
+        "measured_queue_depth_max": mt["queue_depth_max"],
+        "forecast_goodput_cpu": round(ft["goodput"], 3),
+        "forecast_p99_ttft_queued_ms_cpu": round(
+            ft["ttft_queued"]["p99"] * 1e3, 3),
+        "forecast_max_qps_v5e": round(max_qps_v5e, 2),
+    }
+    return f"engine/traffic-poisson-q{TRAFFIC_QPS:g}", derived
+
+
 def _model_for(label: str):
     """The measured arch: the tp rows need head counts tp=4 divides."""
     if label not in _TP_ROWS:
@@ -190,6 +236,7 @@ def rows():
                     v5e[impl].extras["trace_ttft_savings_s"] * 1e3, 3))
         out.append((f"engine/{label}", derived))
     out.append(_spec_row())
+    out.append(_traffic_row())
     return out
 
 
@@ -197,7 +244,22 @@ def bench_artifact(rows_out):
     """BENCH_engine.json payload: the cross-PR perf trajectory."""
     settings = {}
     spec = {}
+    traffic = {}
     for name, d in rows_out:
+        if "measured_goodput" in d:
+            traffic = {
+                "arrival": d["arrival"],
+                "qps": d["qps"],
+                "ttft_slo_s": d["ttft_slo_s"],
+                "tpot_slo_s": d["tpot_slo_s"],
+                "measured_goodput": d["measured_goodput"],
+                "measured_good_qps": d["measured_good_qps"],
+                "measured_p99_ttft_queued_ms":
+                    d["measured_p99_ttft_queued_ms"],
+                "forecast_goodput_cpu": d["forecast_goodput_cpu"],
+                "forecast_max_qps_v5e": d["forecast_max_qps_v5e"],
+            }
+            continue
         if "measured_spec_speedup" in d:
             spec = {
                 "spec_k": d["spec_k"],
@@ -230,6 +292,7 @@ def bench_artifact(rows_out):
         "tp_degrees": sorted({d["tp"] for _, d in rows_out}),
         "settings": settings,
         "spec": spec,
+        "traffic": traffic,
     }
 
 

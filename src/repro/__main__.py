@@ -6,6 +6,10 @@
     python -m repro sweep    --model llama2-7b --hw cpu,v100,v5e --prompt 512
     python -m repro sweep    --model llama2-7b --tops 10,50,100 --bw 100,800
     python -m repro compare  forecast.json measured.json
+    python -m repro measure  --model qwen2-7b --reduced --arrival poisson \\
+        --qps 4 --ttft-slo 0.5 --tpot-slo 0.05      # SLO goodput, measured
+    python -m repro capacity --model llama2-7b --hw tpu-v5e --batch 8 \\
+        --arrival poisson --qps 1 --ttft-slo 0.5    # max QPS within SLO
 
 Every subcommand prints a human table by default or the Report's stable
 JSON with ``--json`` (pipe into a file to feed ``compare`` later).
@@ -94,13 +98,38 @@ def _add_scenario_args(p: argparse.ArgumentParser, measured: bool) -> None:
                    "tokens (high-acceptance speculative workload)")
     p.add_argument("--reduced", action="store_true",
                    help="use the CPU-sized reduced config")
+    # stochastic traffic (repro.traffic): same flags on both runners so one
+    # command line measures AND forecasts the same seeded arrival stream
+    p.add_argument("--arrival", default=None,
+                   choices=("deterministic", "poisson", "bursty", "replay"),
+                   help="serve an open-loop arrival stream of this process "
+                   "(replay loads --trace-file) and report SLO goodput")
+    p.add_argument("--qps", type=float, default=0.0,
+                   help="offered request rate for --arrival (requests/s)")
+    p.add_argument("--ttft-slo", type=float, default=None, dest="ttft_slo",
+                   help="TTFT SLO seconds (judged queue-inclusive)")
+    p.add_argument("--tpot-slo", type=float, default=None, dest="tpot_slo",
+                   help="per-request mean TPOT SLO seconds")
+    p.add_argument("--trace-file", default=None, dest="trace_file",
+                   help="TrafficTrace JSONL to replay instead of generating")
+    p.add_argument("--prompt-len-dist", default=None, dest="prompt_len_dist",
+                   metavar="SPEC", help="per-request prompt length dist "
+                   "(constant:N | uniform:LO:HI | lognormal:MED:SIGMA; "
+                   "default: --prompt)")
+    p.add_argument("--gen-len-dist", default=None, dest="gen_len_dist",
+                   metavar="SPEC", help="per-request generation length dist "
+                   "(default: --gen)")
+    p.add_argument("--prefill-batch", type=int, default=1,
+                   dest="prefill_batch",
+                   help="bucketed batched admission width (same-bucket "
+                   "requests prefill in one dispatch; 1 = sequential)")
+    p.add_argument("--requests", type=int, default=None,
+                   dest="n_requests", help="offered requests (default: "
+                   "--batch; traffic scenarios default to 16)")
+    p.add_argument("--seed", type=int, default=0)
     if measured:
-        p.add_argument("--requests", type=int, default=None,
-                       dest="n_requests", help="offered requests (default: "
-                       "--batch)")
         p.add_argument("--decode-block", type=int, default=8)
         p.add_argument("--temperature", type=float, default=0.0)
-        p.add_argument("--seed", type=int, default=0)
 
 
 def _add_knob_args(p: argparse.ArgumentParser) -> None:
@@ -123,7 +152,9 @@ def _scenario(args: argparse.Namespace) -> api.Scenario:
               spec_acceptance=args.spec_acceptance,
               spec_draft_arch=args.spec_draft_arch,
               prompt_motif_len=args.prompt_motif_len, reduced=args.reduced)
-    for name in ("n_requests", "decode_block", "temperature", "seed"):
+    for name in ("n_requests", "decode_block", "temperature", "seed",
+                 "arrival", "qps", "ttft_slo", "tpot_slo", "trace_file",
+                 "prompt_len_dist", "gen_len_dist", "prefill_batch"):
         if hasattr(args, name):
             kw[name] = getattr(args, name)
     return api.Scenario(**kw)
@@ -159,6 +190,10 @@ def _print_report(r: api.Report) -> None:
         traffic += f" spec_k={scn['spec_k']}"
         if scn.get("spec_draft_arch"):
             traffic += f" draft={scn['spec_draft_arch']}"
+    if scn.get("arrival"):
+        traffic += f" arrival={scn['arrival']}"
+        if scn.get("qps"):
+            traffic += f"@{scn['qps']:g}qps"
     print(f"[{r.source}] {r.model} · {r.variant} · {r.hardware}  ({traffic})")
     bound = f"  ({r.ttft_bound}-bound)" if r.ttft_bound else ""
     print(f"  TTFT  {r.ttft_s * 1e3:12.2f} ms{bound}")
@@ -168,11 +203,32 @@ def _print_report(r: api.Report) -> None:
     for name, ph in r.phases.items():
         print(f"  {name:12s}{_fmt_si(ph.ops, 'OPs')}  "
               f"{_fmt_si(ph.mem_total, 'B')}  {ph.dispatches:7d} dispatches")
+    extras = dict(r.extras or {})
+    tr = extras.pop("traffic", None)
+    if tr:
+        def pct(d):
+            return (f"p50 {d['p50'] * 1e3:8.2f}  p90 {d['p90'] * 1e3:8.2f}"
+                    f"  p99 {d['p99'] * 1e3:8.2f} ms")
+        print(f"  traffic: {tr.get('arrival')} @ {tr.get('qps', 0):g} qps "
+              f"(offered {tr.get('offered_qps', 0):.3g}), "
+              f"{tr.get('n_requests')} requests over "
+              f"{tr.get('duration_s', 0):.3g} s")
+        print(f"    ttft        {pct(tr['ttft'])}")
+        print(f"    ttft_queued {pct(tr['ttft_queued'])}")
+        print(f"    tpot        {pct(tr['tpot'])}")
+        print(f"    queue depth mean {tr.get('queue_depth_mean', 0):.2f} "
+              f"max {tr.get('queue_depth_max', 0)}")
+        if tr.get("goodput") is not None:
+            slo = ", ".join(
+                f"{k}={tr[k]:g}s" for k in ("ttft_slo", "tpot_slo")
+                if tr.get(k) is not None)
+            print(f"    goodput {tr['goodput']:.3f} "
+                  f"({tr.get('good_qps', 0):.3g} good qps) under {slo}")
     knobs = f"  knobs: ec={r.ec:g} em={r.em:g}"
-    if r.extras:
+    if extras:
         knobs += "   " + " ".join(
             f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
-            for k, v in r.extras.items())
+            for k, v in extras.items())
     print(knobs)
 
 
@@ -231,6 +287,28 @@ def _cmd_sweep(args) -> int:
     return 0
 
 
+def _cmd_capacity(args) -> int:
+    scn = _scenario(args)
+    if not scn.has_traffic:
+        # default the process so `capacity --ttft-slo ...` just works
+        scn = scn.traffic("poisson", qps=max(args.qps, 1.0),
+                          ttft_slo=args.ttft_slo, tpot_slo=args.tpot_slo,
+                          prompt_len_dist=args.prompt_len_dist,
+                          gen_len_dist=args.gen_len_dist,
+                          prefill_batch=args.prefill_batch)
+    mq = api.max_qps(scn, args.hw, goodput_target=args.goodput_target,
+                     qps_hi=args.qps_hi, ec=args.ec, em=args.em,
+                     decode_ec=args.decode_ec)
+    if args.json:
+        print(json.dumps({"hardware": args.hw, "max_qps": mq,
+                          "goodput_target": args.goodput_target,
+                          "scenario": scn.to_dict()}, indent=1))
+    else:
+        print(f"max_qps[{args.hw}] = {mq:.4g} requests/s "
+              f"(goodput >= {args.goodput_target:g})")
+    return 0
+
+
 def _cmd_compare(args) -> int:
     def load(path: str) -> api.Report:
         with open(path) as f:
@@ -286,6 +364,21 @@ def main(argv: Optional[List[str]] = None) -> int:
                    "grid sweeps)")
     p.add_argument("--json", action="store_true")
     p.set_defaults(fn=_cmd_sweep)
+
+    p = sub.add_parser("capacity",
+                       help="largest QPS whose forecast goodput meets a "
+                       "target (traffic bisection)")
+    _add_scenario_args(p, measured=False)
+    _add_knob_args(p)
+    p.add_argument("--hw", required=True,
+                   help="hardware name or alias (see `hardware` subcommand)")
+    p.add_argument("--goodput-target", type=float, default=0.99,
+                   dest="goodput_target",
+                   help="required fraction of requests meeting the SLO pair")
+    p.add_argument("--qps-hi", type=float, default=None, dest="qps_hi",
+                   help="cap the bisection bracket at this rate")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_capacity)
 
     p = sub.add_parser("compare",
                        help="diff two report JSON files (forecast, measured)")

@@ -24,9 +24,9 @@ for power users, but new callers should start here.
 from .scenario import Scenario
 from .report import (Report, PhaseStats, MetricDelta, ReportDelta, compare,
                      SCHEMA_VERSION)
-from .run import forecast, measure, sweep
+from .run import forecast, max_qps, measure, sweep
 
 __all__ = [
     "Scenario", "Report", "PhaseStats", "MetricDelta", "ReportDelta",
-    "compare", "forecast", "measure", "sweep", "SCHEMA_VERSION",
+    "compare", "forecast", "max_qps", "measure", "sweep", "SCHEMA_VERSION",
 ]

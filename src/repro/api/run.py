@@ -13,6 +13,7 @@ directly :func:`repro.api.compare`-able.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Iterable, List, Optional, Sequence, Union
 
 from repro.core import hardware
@@ -92,6 +93,71 @@ def _phase_totals(wm: WorkloadModel, scn: Scenario) -> Dict[str, Totals]:
 
 def _phase_stats(totals: Dict[str, Totals]) -> Dict[str, PhaseStats]:
     return {k: PhaseStats.from_totals(t) for k, t in totals.items()}
+
+
+# ----------------------------------------------------------------------
+# stochastic traffic (repro.traffic): both runners consume ONE trace
+# ----------------------------------------------------------------------
+def _traffic_trace(scn: Scenario):
+    """The scenario's seeded :class:`~repro.traffic.TrafficTrace`.
+
+    ``arrival="replay"`` loads ``scn.trace_file``; generated processes
+    draw lengths from the scenario's dist specs (falling back to its
+    constant ``prompt_len``/``gen_len``).  Deterministic in the scenario.
+    """
+    from repro.traffic import TrafficTrace, make_trace
+    if scn.arrival == "replay":
+        return TrafficTrace.load(scn.trace_file)
+    return make_trace(
+        scn.arrival, scn.qps, scn.n_requests or 16,
+        prompt_lens=scn.prompt_len_dist or scn.prompt_len,
+        gen_lens=scn.gen_len_dist or scn.gen_len,
+        seed=scn.seed)
+
+
+def _traffic_chunk(scn: Scenario, trace) -> int:
+    """Chunked-prefill size both runners use for this trace."""
+    return scn.chunk or max(r.prompt_len for r in trace.requests)
+
+
+def _traffic_twin(scn: Scenario, spec: HardwareSpec, *, ec: float,
+                  em: float, decode_ec: Optional[float]):
+    """The ForecastTwin the traffic simulator prices steps with (same
+    construction as the trace-replay path, minus AUTO: there is no
+    engine header to resolve from)."""
+    from repro.engine.forecast_twin import ForecastTwin
+    twin_bs = (scn.engine_block_size
+               if (scn.block_size is not None
+                   or scn.shared_prefix_len is not None
+                   or scn.attn_impl is not None) else None)
+    return ForecastTwin(scn.arch, spec, scn.variant_obj, ec=decode_ec,
+                        em=em, prefill_ec=ec, prefill_em=em,
+                        block_size=twin_bs, attn_impl=scn.attn_impl,
+                        plan=scn.plan)
+
+
+def _traffic_forecast(scn: Scenario, spec: HardwareSpec,
+                      extras: Dict[str, object], *, ec: float, em: float,
+                      decode_ec: Optional[float], twin=None):
+    """Simulate serving ``scn``'s traffic analytically; fill
+    ``extras["traffic"]`` and return the headline (ttft, tpot, tps)."""
+    from repro.traffic import TrafficStats, simulate_traffic
+    trace = _traffic_trace(scn)
+    if twin is None:
+        twin = _traffic_twin(scn, spec, ec=ec, em=em, decode_ec=decode_ec)
+    sim = simulate_traffic(
+        twin, trace, max_slots=scn.batch,
+        chunk_size=_traffic_chunk(scn, trace),
+        decode_block=scn.decode_block,
+        prefill_batch=scn.prefill_batch,
+        cached_len=scn.cached_prefix_len)
+    stats = TrafficStats.from_timings(
+        sim.timings(), ttft_slo=scn.ttft_slo, tpot_slo=scn.tpot_slo,
+        queue_depth=sim.queue_depth)
+    extras["traffic"] = dict(
+        stats.to_dict(), arrival=trace.arrival, qps=trace.qps,
+        offered_qps=trace.offered_qps, prefill_batch=scn.prefill_batch)
+    return stats.ttft["mean"], stats.tpot["mean"], stats.tps
 
 
 def forecast(scenario: Scenario, hw: HardwareLike, *,
@@ -245,6 +311,12 @@ def forecast(scenario: Scenario, hw: HardwareLike, *,
             extras["trace_ttft_savings_s"] = (cold.mean_ttft - tf.mean_ttft)
             extras["trace_prefill_savings_s"] = (cold.prefill_time
                                                  - tf.prefill_time)
+    elif scenario.has_traffic:
+        # open-loop traffic: simulate the served queue analytically; the
+        # headline metrics become the simulated stream's means and the
+        # SLO summary (percentiles, goodput) lands in extras["traffic"]
+        ttft_s, tpot_s, tps = _traffic_forecast(
+            scenario, spec, extras, ec=ec, em=em, decode_ec=decode_ec)
     else:
         ttft_s, tpot_s = pre.latency, tpot
         tps = scenario.batch / tpot
@@ -308,6 +380,12 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
             f"initializes) or run on a {tp}-chip host")
     mesh = make_host_mesh(model=tp)
     params = init_params(arch, jax.random.PRNGKey(scenario.seed))
+    if scenario.has_traffic:
+        if not engine_supported(arch):
+            raise ValueError(f"traffic scenarios need an engine-supported "
+                             f"family, not {arch.family!r}")
+        return _measure_traffic(scenario, hw_name, arch, variant, totals,
+                                kv_dtype, mesh, params)
     gen_lens = scenario.request_gen_lens
     n_req = len(gen_lens)
     max_len = scenario.prompt_len + max(gen_lens) + max(8, scenario.decode_block)
@@ -423,6 +501,110 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
         hardware=hw_name, ttft_s=ttft_s, tpot_s=tpot_s, tps=tps,
         phases=_phase_stats(totals), scenario=scenario.to_dict(),
         extras=extras, trace=trace)
+
+
+def _measure_traffic(scenario: Scenario, hw_name: str, arch, variant,
+                     totals, kv_dtype: str, mesh, params) -> Report:
+    """Serve the scenario's TrafficTrace open-loop on the real engine.
+
+    The trace's arrival seconds become ``Request.arrival_step`` gates via
+    a calibrated wall-clock step period (measured post-warmup), so the
+    engine sees the offered process at its own speed; per-request wall
+    timings reduce to the same :class:`~repro.traffic.TrafficStats` the
+    analytical simulator reports — goodput is measured-vs-forecast
+    comparable by construction.
+    """
+    import time
+
+    from repro.engine import Engine, EngineConfig, Request
+    from repro.runtime import ShardingPolicy
+    from repro.traffic import (TrafficStats, arrival_steps,
+                               timings_from_results, trace_prompts)
+
+    trace = _traffic_trace(scenario)
+    chunk = _traffic_chunk(scenario, trace)
+    max_len = (max(r.prompt_len + r.gen_len for r in trace.requests)
+               + max(8, scenario.decode_block))
+    ec = EngineConfig(max_slots=scenario.batch, max_len=max_len,
+                      chunk_size=chunk,
+                      decode_block=scenario.decode_block,
+                      block_size=scenario.engine_block_size,
+                      prefix_cache=scenario.prefix_cache,
+                      kv_dtype=kv_dtype,
+                      attn_impl=scenario.attn_impl or "gather",
+                      temperature=scenario.temperature,
+                      prefill_batch=scenario.prefill_batch,
+                      seed=scenario.seed)
+    prompts = trace_prompts(
+        trace, arch.vocab_size, seed=scenario.seed + 1,
+        shared_prefix_len=scenario.shared_prefix_len or 0)
+    with mesh:
+        eng = Engine(arch, params, mesh, ShardingPolicy(), ec)
+        eng.warmup()               # compile outside the measured window
+        period = eng.calibrate_step_period()
+        steps = arrival_steps(trace, period)
+        reqs = [Request(rid=r.rid, prompt=list(map(int, p)),
+                        max_new=r.gen_len, arrival_step=s)
+                for r, p, s in zip(trace.requests, prompts, steps)]
+        t0 = time.perf_counter()
+        results = eng.run(reqs)
+        wall = time.perf_counter() - t0
+    stats = TrafficStats.from_timings(
+        timings_from_results(results),
+        ttft_slo=scenario.ttft_slo, tpot_slo=scenario.tpot_slo,
+        queue_depth=[(t, d) for _, t, d in eng.queue_depth])
+    extras: Dict[str, object] = dict(
+        mode="engine-traffic", wall_s=wall, tokens=stats.total_tokens,
+        requests=trace.n_requests, attn_impl=ec.attn_impl,
+        block_size=ec.block_size, step_period_s=period,
+        prefix_hit_tokens=eng.prefix_hit_tokens,
+        prefix_hit_rate=eng.prefix_hit_rate,
+        peak_blocks_in_use=eng.peak_blocks_in_use,
+        traffic=dict(stats.to_dict(), arrival=trace.arrival,
+                     qps=trace.qps, offered_qps=trace.offered_qps,
+                     prefill_batch=scenario.prefill_batch))
+    return Report(
+        source="measured", model=arch.name, variant=variant.name,
+        hardware=hw_name, ttft_s=stats.ttft["mean"],
+        tpot_s=stats.tpot["mean"], tps=stats.tps,
+        phases=_phase_stats(totals), scenario=scenario.to_dict(),
+        extras=extras, trace=tuple(eng.trace))
+
+
+def max_qps(scenario: Scenario, hw: HardwareLike, *,
+            goodput_target: float = 0.99, qps_lo: float = 0.5,
+            qps_hi: Optional[float] = None, rel_tol: float = 0.02,
+            ec: float = 1.0, em: float = 1.0,
+            decode_ec: Optional[float] = None) -> float:
+    """Largest offered QPS whose FORECAST goodput meets the target.
+
+    The capacity question of the paper's what-if loop: bisect the
+    scenario's arrival process (same seed — probes are time-scalings of
+    one request population, see ``repro.traffic.arrivals``) against the
+    analytical queue simulator on ``hw``.  Needs a generated traffic
+    scenario (``Scenario.traffic(...)``) with at least one SLO bound.
+    """
+    from repro.traffic import capacity_search
+    if not scenario.has_traffic:
+        raise ValueError("max_qps needs a traffic scenario — use "
+                         "Scenario.traffic(...)")
+    if scenario.arrival == "replay":
+        raise ValueError("max_qps needs a generated arrival process; a "
+                         "replay trace has a fixed offered rate")
+    if scenario.ttft_slo is None and scenario.tpot_slo is None:
+        raise ValueError("max_qps needs ttft_slo and/or tpot_slo")
+    spec = hardware.get(hw)
+    twin = _traffic_twin(scenario, spec, ec=ec, em=em, decode_ec=decode_ec)
+
+    def goodput_at(qps: float) -> float:
+        scn = dataclasses.replace(scenario, qps=qps)
+        extras: Dict[str, object] = {}
+        _traffic_forecast(scn, spec, extras, ec=ec, em=em,
+                          decode_ec=decode_ec, twin=twin)
+        return extras["traffic"]["goodput"]
+
+    return capacity_search(goodput_at, target=goodput_target,
+                           qps_lo=qps_lo, qps_hi=qps_hi, rel_tol=rel_tol)
 
 
 def sweep(scenario: Scenario,

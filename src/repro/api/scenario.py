@@ -104,6 +104,20 @@ class Scenario:
     decode_block: int = 8
     temperature: float = 0.0
     seed: int = 0
+    # stochastic traffic (repro.traffic): arrival process + SLO pair.
+    # ``arrival`` turns the scenario into an open-loop served stream —
+    # forecast and measure both consume the same seeded TrafficTrace and
+    # report p50/p90/p99 TTFT/TPOT plus goodput under (ttft_slo, tpot_slo)
+    arrival: Optional[str] = None
+    qps: float = 0.0
+    ttft_slo: Optional[float] = None
+    tpot_slo: Optional[float] = None
+    trace_file: Optional[str] = None
+    prompt_len_dist: Optional[str] = None
+    gen_len_dist: Optional[str] = None
+    # bucketed prefill-and-insert: admit up to this many same-bucket
+    # requests in ONE batched prefill dispatch (1 = sequential admission)
+    prefill_batch: int = 1
 
     def __post_init__(self):
         # fail fast on registry names (also catches stale names coming back
@@ -154,6 +168,36 @@ class Scenario:
         if self.prompt_motif_len is not None and not (
                 1 <= self.prompt_motif_len <= self.prompt_len):
             raise ValueError("prompt_motif_len must be in [1, prompt_len]")
+        if self.prefill_batch < 1:
+            raise ValueError(f"prefill_batch must be >= 1, "
+                             f"got {self.prefill_batch}")
+        from repro.traffic import ARRIVAL_KINDS, LengthDist
+        if self.arrival is not None:
+            known = ARRIVAL_KINDS + ("replay",)
+            if self.arrival not in known:
+                raise ValueError(f"arrival must be one of {known}, "
+                                 f"got {self.arrival!r}")
+            if self.arrival == "replay":
+                if not self.trace_file:
+                    raise ValueError(
+                        "arrival='replay' requires trace_file")
+            elif not self.qps > 0:
+                raise ValueError(f"qps must be > 0 for arrival="
+                                 f"{self.arrival!r}, got {self.qps}")
+            if self.spec_k > 0:
+                raise ValueError("traffic scenarios do not compose with "
+                                 "spec_k > 0 yet (speculative admission "
+                                 "is not modeled under queueing)")
+        elif self.trace_file:
+            object.__setattr__(self, "arrival", "replay")
+        if self.ttft_slo is not None and not self.ttft_slo > 0:
+            raise ValueError(f"ttft_slo must be > 0, got {self.ttft_slo}")
+        if self.tpot_slo is not None and not self.tpot_slo > 0:
+            raise ValueError(f"tpot_slo must be > 0, got {self.tpot_slo}")
+        for name in ("prompt_len_dist", "gen_len_dist"):
+            spec = getattr(self, name)
+            if spec is not None:
+                LengthDist.parse(spec)    # raises ValueError on bad spec
 
     # ------------------------------------------------------------------
     # resolution
@@ -212,6 +256,34 @@ class Scenario:
         from repro.core.workload import DEFAULT_KV_BLOCK_SIZE
         return DEFAULT_KV_BLOCK_SIZE
 
+    @property
+    def has_traffic(self) -> bool:
+        """True when the scenario describes a served arrival stream."""
+        return self.arrival is not None
+
+    def traffic(self, arrival: str = "poisson", qps: float = 1.0, *,
+                ttft_slo: Optional[float] = None,
+                tpot_slo: Optional[float] = None,
+                trace_file: Optional[str] = None,
+                prompt_len_dist: Optional[str] = None,
+                gen_len_dist: Optional[str] = None,
+                prefill_batch: Optional[int] = None) -> "Scenario":
+        """This scenario served as an open-loop arrival stream.
+
+        ``arrival`` ∈ ``{"deterministic", "poisson", "bursty", "replay"}``
+        at ``qps`` requests/s (ignored for ``"replay"``, which loads
+        ``trace_file`` instead).  Lengths default to the scenario's
+        ``prompt_len``/``gen_len`` constants unless a distribution spec
+        (``"uniform:16:64"``, ``"lognormal:32:0.5"``) is given.  The SLO
+        pair feeds goodput; a missing bound is unbounded.
+        """
+        return dataclasses.replace(
+            self, arrival=arrival, qps=qps, ttft_slo=ttft_slo,
+            tpot_slo=tpot_slo, trace_file=trace_file,
+            prompt_len_dist=prompt_len_dist, gen_len_dist=gen_len_dist,
+            prefill_batch=(self.prefill_batch if prefill_batch is None
+                           else prefill_batch))
+
     def spec_decode(self, k: int, acceptance: float = 0.7,
                     draft_arch: Optional[str] = None) -> "Scenario":
         """This scenario with speculative decoding: ``k`` drafts verified
@@ -264,6 +336,14 @@ class Scenario:
             "decode_block": self.decode_block,
             "temperature": self.temperature,
             "seed": self.seed,
+            "arrival": self.arrival,
+            "qps": self.qps,
+            "ttft_slo": self.ttft_slo,
+            "tpot_slo": self.tpot_slo,
+            "trace_file": self.trace_file,
+            "prompt_len_dist": self.prompt_len_dist,
+            "gen_len_dist": self.gen_len_dist,
+            "prefill_batch": self.prefill_batch,
         }
         return d
 
@@ -274,4 +354,6 @@ class Scenario:
             "past_lens", "lora_rank", "shared_prefix_len", "block_size",
             "prefix_cache", "attn_impl", "tp", "spec_k", "spec_acceptance",
             "spec_draft_arch", "prompt_motif_len", "reduced", "n_requests",
-            "gen_lens", "decode_block", "temperature", "seed") if k in d})
+            "gen_lens", "decode_block", "temperature", "seed", "arrival",
+            "qps", "ttft_slo", "tpot_slo", "trace_file", "prompt_len_dist",
+            "gen_len_dist", "prefill_batch") if k in d})

@@ -18,7 +18,7 @@ is bit-for-bit identical to the unsharded model.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 from . import derived as D
 from . import operators as F
@@ -184,6 +184,44 @@ class WorkloadModel:
                                        block_size)
             done += c
         return db
+
+    def prefill_group_totals(self, chunks: Sequence[Tuple[int, int]]
+                             ) -> Totals:
+        """Workload of ONE bucket-batched prefill-and-insert dispatch.
+
+        ``chunks[i] = (chunk, past_len)`` is member ``i``'s prompt chunk
+        — the engine's batched admission (``EngineConfig.prefill_batch``)
+        runs all members as a single dispatch set, so per-token work sums
+        across members while per-pass fixed work (weight reads, dispatch
+        launches) is paid once.  Exploits that :meth:`prefill` is affine
+        in the batch dimension for fixed ``(chunk, past)``:
+
+            T(B, c, p) = B · T1 − (B − 1) · dup,   dup = 2·T1 − T2
+
+        where ``dup`` is exactly the duplicated per-pass fixed cost of
+        pricing a member standalone (its weight reads and dispatches).
+        For a uniform group this reproduces ``prefill(B, c, p)``'s totals
+        record-for-record (tested); mixed members subtract each member's
+        own ``dup``, which keeps dispatches collapsed to one member's and
+        never double-counts weight traffic.
+        """
+        if not chunks:
+            raise ValueError("prefill_group_totals needs >= 1 member")
+        if not hasattr(self, "_group_cache"):
+            self._group_cache = {}
+        total: Optional[Totals] = None
+        for c, p in chunks:
+            if c < 1 or p < 0:
+                raise ValueError(f"bad group member (chunk={c}, past={p})")
+            key = (c, p)
+            if key not in self._group_cache:
+                t1 = self.prefill(1, c, past_len=p).totals("prefill")
+                t2 = self.prefill(2, c, past_len=p).totals("prefill")
+                dup = t1.scaled(2.0).minus(t2)
+                self._group_cache[key] = (t1, dup)
+            t1, dup = self._group_cache[key]
+            total = t1 if total is None else total.plus(t1).minus(dup)
+        return total
 
     def block_table_totals(self, batch: int, kv_len: int,
                            block_size: int) -> Totals:

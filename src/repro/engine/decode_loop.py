@@ -348,6 +348,88 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
     return prefill_fn, decode_fn, {"params": param_sh, "state": state_sh}
 
 
+def make_prefill_batch_fn(cfg: ArchConfig, mesh: Mesh,
+                          policy: S.ShardingPolicy,
+                          cache: BlockPagedKVCache, *,
+                          attn_impl: str = "gather"):
+    """Jit'd bucketed batched prefill-and-insert (traffic admission).
+
+    prefill_batch_fn(params, state, qtoks (B, C), slots (B,),
+                     valids (B,)) -> (logits (B, V), state)
+
+    Admits up to B same-bucket prompt chunks in ONE dispatch set: member
+    ``i``'s chunk lands in slot ``slots[i]`` at absolute positions
+    ``pos[slots[i]] .. pos[slots[i]] + valids[i] - 1`` (``pos`` is each
+    slot's KV cursor, so chunked admissions call this once per chunk
+    index and the cursor advances by ``valids[i]`` each call).  Weight
+    reads and dispatch launches amortize across the group — the
+    admission-side analogue of batched decode, and the reason prefill
+    -length bucketing pays (MaxText's MLPerf ``_prefill_insert_batch``).
+
+    A member with ``valids[i] == 0`` is padding (groups are padded to a
+    static B so one compiled shape serves every group size): its KV
+    writes are dropped, its cursor does not advance, and its logits row
+    is garbage the scheduler ignores.  The computation is exactly a
+    speculative verify pass — per-slot multi-query attention through the
+    block tables with live-masked scatter — so the layer body is
+    ``_verify_layer`` over the group's gathered tables/cursors, and each
+    member's first-token logits are read at its last valid position.
+    """
+    from repro.models import act_sharding
+    if attn_impl not in ATTN_IMPLS:
+        raise ValueError(f"attn_impl must be one of {ATTN_IMPLS}, "
+                         f"got {attn_impl!r}")
+    tp = S.tp_degree(mesh, policy)
+    act_sharding.set_mesh(mesh, policy.dp_axes, policy.tp_axis)
+    state_sh = cache.shardings(mesh, policy)
+    param_sh = S.param_shardings(cfg, mesh, policy)
+
+    paged_verify_fn = paged_ops.paged_verify
+    if tp > 1 and attn_impl == "paged":
+        from jax.experimental.shard_map import shard_map
+        tpa = policy.tp_axis
+        head = P(None, None, tpa, None, None)   # (B, C, Hk, G, d)
+        pool = P(None, None, tpa, None)         # (N, bs, Hk, d)
+        paged_verify_fn = shard_map(
+            paged_ops.paged_verify, mesh=mesh,
+            in_specs=(head, pool, pool, P(None, None), P(None)),
+            out_specs=head, check_rep=False)
+
+    def prefill_batch(params, state, qtoks, slots, valids):
+        x = params["embed"][qtoks]                        # (B, C, d)
+        bt = state["block_tables"][slots]                 # (B, max_bps)
+        pos = state["pos"][slots]                         # (B,)
+        active = valids > 0
+
+        def layer_fn(h, inp):
+            p_layer, ck, cv = inp
+            h, ck, cv = _verify_layer(cfg, p_layer, h, ck, cv, bt, pos,
+                                      active, valids, attn_impl,
+                                      paged_verify_fn)
+            return h, (ck, cv)
+
+        x, (cks, cvs) = jax.lax.scan(
+            layer_fn, x, (params["layers"], state["cache_k"],
+                          state["cache_v"]))
+        x = apply_norm(cfg.norm_kind, x, params["ln_f"])
+        # each member's first-token logits sit at its last valid position
+        idx = jnp.clip(valids - 1, 0, x.shape[1] - 1)
+        h_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = _lm_head(cfg, params, h_last)[:, 0]      # (B, V)
+        new_state = dict(state)
+        new_state["cache_k"], new_state["cache_v"] = cks, cvs
+        # scatter-add tolerates duplicate padding slot ids (they add 0)
+        new_state["pos"] = state["pos"].at[slots].add(
+            jnp.where(active, valids, 0))
+        return logits, new_state
+
+    return jax.jit(
+        prefill_batch,
+        in_shardings=(param_sh, state_sh, None, None, None),
+        out_shardings=(None, state_sh),
+        donate_argnums=(1,))
+
+
 def make_verify_fn(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
                    cache: BlockPagedKVCache, *,
                    attn_impl: str = "gather"):

@@ -32,13 +32,17 @@ the static-shape engine actually remats the full padded virtual width),
 ``"paged"`` prices the Pallas paged flash kernels that elide the page
 buffer and the score/prob intermediates.  Left unset, neither is priced
 (the pre-kernel analytical scenario).
-Forecast TTFT is admission → first token (queue time excluded); the
-engine's measured TTFT includes queueing.
+TTFT semantics match the engine's: ``ttft`` is admission → first token
+(queue-exclusive, the prefill cost) on BOTH sides, and ``ttft_queued``
+is arrival → first token.  Trace replay has no arrival information, so
+its ``ttft_queued`` equals ``ttft``; the traffic simulator
+(``repro.traffic.simulate``) models the queue and fills in the real
+queue-inclusive figure.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig, Variant
 from repro.core.forecast import Forecaster
@@ -58,6 +62,8 @@ AUTO = "auto"
 class RequestForecast:
     rid: int
     ttft: float = 0.0           # s, admission → first token (queue excluded)
+    ttft_queued: float = 0.0    # s, arrival → first token (== ttft when the
+                                # trace carries no queueing information)
     finished: float = 0.0       # s, simulated clock at completion
     n_tokens: int = 0
     cached_tokens: int = 0      # prompt tokens served from shared blocks
@@ -99,6 +105,13 @@ class TraceForecast:
         return sum(r.ttft for r in rs) / len(rs)
 
     @property
+    def mean_ttft_queued(self) -> float:
+        rs = self.requests.values()
+        if not rs:
+            return 0.0
+        return sum(r.ttft_queued for r in rs) / len(rs)
+
+    @property
     def mean_tpot(self) -> float:
         rs = [r for r in self.requests.values() if r.n_tokens > 1]
         if not rs:
@@ -135,6 +148,21 @@ def cold_trace(trace: Sequence[TraceEvent]) -> List[TraceEvent]:
     step = max(step, 1)
     out: List[TraceEvent] = []
     for ev in trace:
+        if ev.kind == "prefill_batch":
+            # degrade the group to per-member chunks: a cold run would
+            # bucket differently anyway, and standalone members are a
+            # conservative superset of the batched dispatch's work
+            for rid, slot, chunk, past, cached, last in ev.members:
+                if past == cached and cached > 0:
+                    for off in range(0, cached, step):
+                        out.append(TraceEvent(
+                            kind="prefill_chunk", rid=rid, slot=slot,
+                            chunk=min(step, cached - off), past_len=off,
+                            cached=0, last=False))
+                out.append(TraceEvent(kind="prefill_chunk", rid=rid,
+                                      slot=slot, chunk=chunk, past_len=past,
+                                      cached=0, last=last))
+            continue
         if ev.kind != "prefill_chunk" or ev.cached == 0:
             out.append(ev)
             continue
@@ -215,6 +243,7 @@ class ForecastTwin:
                     else draft_arch)
             self._draft_wm = WorkloadModel(dcfg)
         self._prefill_memo: Dict[tuple, float] = {}
+        self._group_memo: Dict[tuple, float] = {}
         self._decode_memo: Dict[tuple, float] = {}
         self._verify_memo: Dict[tuple, float] = {}
         self._draft_memo: Dict[tuple, float] = {}
@@ -232,6 +261,25 @@ class ForecastTwin:
                 db.totals("prefill"), ec=self.prefill_ec,
                 em=self.prefill_em).latency
         return self._prefill_memo[key]
+
+    def prefill_group_latency(
+            self, members: Sequence[Tuple[int, int]]) -> float:
+        """One batched prefill-and-insert dispatch over ``(chunk,
+        past_len)`` members, priced via the affine-in-batch identity of
+        :meth:`WorkloadModel.prefill_group_totals` (weight reads are
+        shared across the group, per-token work is not)."""
+        members = tuple(sorted(members))
+        if len(members) == 1:
+            return self.prefill_chunk_latency(*members[0])
+        if members not in self._group_memo:
+            totals = self.wm.prefill_group_totals(members)
+            if self.block_size:
+                for chunk, past in members:
+                    totals = totals.plus(self.wm.block_table_totals(
+                        1, past + chunk, self.block_size))
+            self._group_memo[members] = self.fc.phase(
+                totals, ec=self.prefill_ec, em=self.prefill_em).latency
+        return self._group_memo[members]
 
     def _decode_memo_key(self, past_lens: Sequence[int]) -> tuple:
         """Exact memo key of one mixed decode step.
@@ -338,10 +386,35 @@ class ForecastTwin:
                 if ev.last:
                     # admission ends: the first token comes from these logits
                     rf.ttft = clock - rf._admitted_at
+                    rf.ttft_queued = rf.ttft
                     rf._first_token_at = clock
                     rf.n_tokens += 1
                     rf.finished = clock
                     total_tokens += 1
+            elif ev.kind == "prefill_batch":
+                # one bucketed prefill-and-insert dispatch; members are
+                # (rid, slot, chunk, past_len, cached, last) tuples
+                for rid, _slot, chunk, past, cached, _last in ev.members:
+                    rf = requests.setdefault(rid, RequestForecast(rid=rid))
+                    if past == cached:
+                        rf._admitted_at = clock
+                        rf.cached_tokens = cached
+                        cached_tokens += cached
+                        prompt_tokens += cached
+                    prompt_tokens += chunk
+                dt = self.prefill_group_latency(
+                    tuple((m[2], m[3]) for m in ev.members))
+                clock += dt
+                prefill_time += dt
+                for rid, _slot, _chunk, _past, _cached, last in ev.members:
+                    if last:
+                        rf = requests[rid]
+                        rf.ttft = clock - rf._admitted_at
+                        rf.ttft_queued = rf.ttft
+                        rf._first_token_at = clock
+                        rf.n_tokens += 1
+                        rf.finished = clock
+                        total_tokens += 1
             elif ev.kind == "decode_block":
                 # per-slot (rid, past_len, remaining) at block start; replay
                 # each fused step with budget attrition (EOS is not

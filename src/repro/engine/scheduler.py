@@ -39,8 +39,8 @@ from repro.runtime.sharding import ShardingPolicy, tp_degree
 
 from .block_pool import BlockPool, RadixIndex
 from .kv_cache import BlockPagedKVCache
-from .decode_loop import (ATTN_IMPLS, make_engine_fns, make_verify_fn,
-                          sample)
+from .decode_loop import (ATTN_IMPLS, make_engine_fns,
+                          make_prefill_batch_fn, make_verify_fn, sample)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,11 +57,12 @@ class EngineConfig:
     temperature: float = 0.0            # 0 = greedy
     eos_id: Optional[int] = None        # stop token (None: budget only)
     spec_k: int = 0                     # draft tokens/step (0 = no speculation)
+    prefill_batch: int = 1              # bucketed batched admission (1 = off)
     seed: int = 0
 
     def __post_init__(self):
         for name in ("max_slots", "max_len", "chunk_size", "decode_block",
-                     "block_size"):
+                     "block_size", "prefill_batch"):
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1, "
                                  f"got {getattr(self, name)}")
@@ -116,6 +117,15 @@ class RequestResult:
 
     @property
     def ttft(self) -> float:
+        """Admission → first token: the prefill cost, queue-EXCLUSIVE —
+        the same quantity the analytical twin forecasts, so
+        measured-vs-forecast compares like with like."""
+        return self.first_token - self.admitted
+
+    @property
+    def ttft_queued(self) -> float:
+        """Arrival → first token, queue-INCLUSIVE — what a user
+        experiences under load; the quantity SLOs are judged on."""
         return self.first_token - self.arrival
 
     @property
@@ -146,6 +156,13 @@ class TraceEvent:
         ``cached`` is the request's prefix-cache hit length (constant
         across its chunks — the first chunk has ``past_len == cached``),
         and ``last`` marks the chunk that produces the first token.
+    kind == "prefill_batch": one bucket-batched prefill-and-insert
+        dispatch admitting chunks of several requests at once (traffic
+        admission with ``prefill_batch > 1``); ``members`` holds one
+        ``(rid, slot, chunk, past_len, cached, last)`` tuple per live
+        member of the dispatch — the same fields a ``prefill_chunk``
+        event carries, so the twin prices the group with weight reads
+        amortized across members.
     kind == "decode_block": ``n_steps`` fused steps over the active slots;
         ``slots`` holds (rid, past_len, remaining_budget) per active slot
         at block start, enough for the twin to replay per-step attrition.
@@ -171,6 +188,8 @@ class TraceEvent:
     spec_k: int = 0                     # header + spec_step
     proposed: Tuple[int, ...] = ()      # spec_step: drafts verified per slot
     accepted: Tuple[int, ...] = ()      # spec_step: drafts accepted per slot
+    # prefill_batch: (rid, slot, chunk, past_len, cached, last) per member
+    members: Tuple[Tuple[int, int, int, int, int, bool], ...] = ()
 
 
 @dataclasses.dataclass
@@ -208,6 +227,10 @@ class Engine:
             self.verify_fn = make_verify_fn(cfg, mesh, policy, self.cache,
                                             attn_impl=ec.attn_impl)
             self.drafter = drafter if drafter is not None else make_drafter()
+        self.prefill_batch_fn = None
+        if ec.prefill_batch > 1:
+            self.prefill_batch_fn = make_prefill_batch_fn(
+                cfg, mesh, policy, self.cache, attn_impl=ec.attn_impl)
         self._np_rng = np.random.default_rng(ec.seed + 1)
         # speculative-decoding counters over the run
         self.spec_proposed = 0
@@ -222,7 +245,10 @@ class Engine:
         self.trace: List[TraceEvent] = []
         self.step_idx = 0
         self._t0 = time.perf_counter()
-        self._arrivals: Dict[int, float] = {}
+        self._arrivals: Dict[int, Optional[float]] = {}
+        # (step_idx, wall_s, arrived-but-waiting) sampled every step
+        self.queue_depth: List[Tuple[int, float, int]] = []
+        self.step_period: Optional[float] = None
         self._slot_blocks: Dict[int, List[int]] = {}   # slot -> owned refs
         # prefix-cache counters over the run
         self.prefix_hit_tokens = 0
@@ -247,7 +273,10 @@ class Engine:
                 f"request {req.rid}: needs {self._blocks_needed(req)} KV "
                 f"blocks but the pool only has {self.pool.n_blocks}")
         self.queue.append(req)
-        self._arrivals[req.rid] = self._now()
+        # a deferred request (open-loop traffic feed) has not "arrived"
+        # yet: its timestamp is stamped when its step gate opens
+        self._arrivals[req.rid] = (None if req.arrival_step > self.step_idx
+                                   else self._now())
 
     @property
     def n_active(self) -> int:
@@ -338,7 +367,7 @@ class Engine:
         self.state["pos"] = self.state["pos"].at[slot].set(cached)
         res = RequestResult(rid=req.rid, tokens=[], prompt_len=n,
                             cached_tokens=cached,
-                            arrival=self._arrivals.get(req.rid, 0.0),
+                            arrival=self._arrivals.get(req.rid) or 0.0,
                             admitted=self._now())
         logits = None
         for off in range(cached, n, ec.chunk_size):
@@ -373,6 +402,131 @@ class Engine:
             res.finished = now
             self._free(slot)
 
+    # ------------------------------------------------------------------
+    # bucketed batched admission: same-bucket FIFO runs prefill together
+    # ------------------------------------------------------------------
+    def _bucket_chunks(self, req: Request) -> int:
+        """Prefill-length bucket: chunk count of the cache-miss suffix.
+
+        A *preview* using the current index state (allocation may later
+        align the hit down under pool pressure — the batched dispatch
+        pads ragged members, so a rare mismatch only costs padding).
+        """
+        n = len(req.prompt)
+        cached = 0
+        if self.index is not None:
+            hits = self.index.match([int(t) for t in req.prompt])
+            cached = min(len(hits) * self.ec.block_size, n - 1)
+        return -(-(n - cached) // self.ec.chunk_size)
+
+    def _take_bucket_group(self) -> List[Tuple[Request, int, _Allocation]]:
+        """Pop the maximal same-bucket FIFO run that can admit now.
+
+        Only the contiguous queue head is considered (no skipping, so
+        bucketing never starves a request), capped by free slots and
+        ``prefill_batch``.  Returns [] if even the head cannot allocate
+        blocks (backpressure).
+        """
+        group: List[Tuple[Request, int, _Allocation]] = []
+        key = self._bucket_chunks(self.queue[0])
+        cap = min(len(self.free_slots), self.ec.prefill_batch)
+        while (len(group) < cap and self.queue
+               and self.queue[0].arrival_step <= self.step_idx
+               and self._bucket_chunks(self.queue[0]) == key):
+            alloc = self._allocate(self.queue[0])
+            if alloc is None:
+                break
+            group.append((self.queue.popleft(), self.free_slots.pop(0),
+                          alloc))
+        return group
+
+    def _admit_batch(self,
+                     group: List[Tuple[Request, int, _Allocation]]) -> None:
+        """Admit a same-bucket group with batched prefill-and-insert.
+
+        Per-request block accounting and bookkeeping mirror
+        :meth:`_admit`; the prefill chunks run as ONE batched dispatch
+        per chunk index across the group (``make_prefill_batch_fn``),
+        padded to the static ``prefill_batch`` width.  Each member's
+        first token is sampled from its own logits row of its final
+        chunk's dispatch, in queue order — at temperature 0 the admitted
+        tokens are identical to unbucketed admission (tested).
+        """
+        ec = self.ec
+        pb = ec.prefill_batch
+        members = []                    # [req, slot, prompt, cached, res]
+        for req, slot, alloc in group:
+            prompt = np.asarray(req.prompt, np.int32)
+            n, cached = len(prompt), alloc.cached
+            self._slot_blocks[slot] = alloc.table
+            self.prefix_hit_tokens += cached
+            self.prompt_tokens += n
+            if alloc.cow is not None:
+                self.state = self.cache.copy_block(self.state, *alloc.cow)
+            row = np.zeros((self.cache.max_blocks_per_seq,), np.int32)
+            row[:len(alloc.table)] = alloc.table
+            self.state["block_tables"] = (
+                self.state["block_tables"].at[slot].set(jnp.asarray(row)))
+            self.state["pos"] = self.state["pos"].at[slot].set(cached)
+            res = RequestResult(rid=req.rid, tokens=[], prompt_len=n,
+                                cached_tokens=cached,
+                                arrival=self._arrivals.get(req.rid) or 0.0,
+                                admitted=self._now())
+            members.append([req, slot, prompt, cached, res])
+        n_chunks = max(-(-(len(p) - c) // ec.chunk_size)
+                       for _, _, p, c, _ in members)
+        first_logits: List[Optional[np.ndarray]] = [None] * len(members)
+        for ci in range(n_chunks):
+            qtoks = np.zeros((pb, ec.chunk_size), np.int32)
+            # padding members duplicate a real slot id; their valid=0
+            # drops KV writes and cursor advances inside the dispatch
+            slots_arr = np.full((pb,), members[0][1], np.int32)
+            valids = np.zeros((pb,), np.int32)
+            ev_members = []
+            for i, (req, slot, prompt, cached, res) in enumerate(members):
+                slots_arr[i] = slot
+                off = cached + ci * ec.chunk_size
+                n = len(prompt)
+                if off >= n:
+                    continue            # ragged member: already done
+                piece = prompt[off:off + ec.chunk_size]
+                valids[i] = len(piece)
+                qtoks[i, :len(piece)] = piece
+                ev_members.append((req.rid, slot, len(piece), off, cached,
+                                   off + len(piece) >= n))
+            logits, self.state = self.prefill_batch_fn(
+                self.params, self.state, jnp.asarray(qtoks),
+                jnp.asarray(slots_arr), jnp.asarray(valids))
+            logits = np.asarray(jax.device_get(logits))
+            for i, (req, slot, prompt, cached, res) in enumerate(members):
+                off = cached + ci * ec.chunk_size
+                if off < len(prompt) and off + valids[i] >= len(prompt):
+                    first_logits[i] = logits[i]
+            self.trace.append(TraceEvent(kind="prefill_batch",
+                                         chunk=ec.chunk_size,
+                                         members=tuple(ev_members)))
+        now = self._now()
+        for i, (req, slot, prompt, cached, res) in enumerate(members):
+            n = len(prompt)
+            if self.index is not None:
+                self.index.insert(
+                    prompt[:(n // ec.block_size) * ec.block_size],
+                    self._slot_blocks[slot][:n // ec.block_size])
+            self._rng, sub = jax.random.split(self._rng)
+            first = int(sample(first_logits[i][None], ec.temperature,
+                               sub)[0])
+            res.first_token = now
+            res.tokens.append(first)
+            self.state["tok"] = self.state["tok"].at[slot].set(first)
+            self.running[slot] = req
+            self.results[req.rid] = res
+            if req.max_new <= 1 or (ec.eos_id is not None
+                                    and first == ec.eos_id):
+                res.finished = now
+                self._free(slot)
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.pool.in_use)
+
     def _free(self, slot: int) -> None:
         del self.running[slot]
         for b in self._slot_blocks.pop(slot):
@@ -393,8 +547,23 @@ class Engine:
                                          attn_impl=ec.attn_impl,
                                          block_size=ec.block_size,
                                          spec_k=ec.spec_k))
+        # deferred (open-loop) requests arrive when their gate opens
+        now = self._now()
+        waiting = 0
+        for r in self.queue:
+            if r.arrival_step <= self.step_idx:
+                waiting += 1
+                if self._arrivals.get(r.rid) is None:
+                    self._arrivals[r.rid] = now
+        self.queue_depth.append((self.step_idx, now, waiting))
         while (self.free_slots and self.queue
                and self.queue[0].arrival_step <= self.step_idx):
+            if ec.prefill_batch > 1:
+                group = self._take_bucket_group()
+                if not group:
+                    break              # pool exhausted: admission backpressure
+                self._admit_batch(group)
+                continue
             alloc = self._allocate(self.queue[0])
             if alloc is None:
                 break                  # pool exhausted: admission backpressure
@@ -587,6 +756,7 @@ class Engine:
         self.results.clear()
         self.trace.clear()
         self._arrivals.clear()
+        self.queue_depth.clear()
         self.step_idx = 0
         self.prefix_hit_tokens = 0
         self.prompt_tokens = 0
@@ -607,6 +777,32 @@ class Engine:
             # run starts with a cold cache and an empty pool
             self.index.evict(self.pool.n_blocks)
         self.reset_metrics()
+
+    def calibrate_step_period(self, gen_tokens: int = 16) -> float:
+        """Measured wall seconds per engine step, post-compilation.
+
+        Runs a short throwaway serve (call after :meth:`warmup` so the
+        jitted paths are compiled), evicts its index entries and resets
+        metrics, then stores and returns ``wall / steps``.  The open
+        -loop traffic feed uses this to convert a trace's arrival
+        seconds into ``Request.arrival_step`` gates
+        (``repro.traffic.feed.arrival_steps``).
+        """
+        if not self.done:
+            raise RuntimeError("calibrate_step_period with requests "
+                               "in flight")
+        prompt_len = max(min(self.ec.chunk_size,
+                             self.ec.max_len - self.ec.decode_block - 2), 1)
+        gen = max(min(gen_tokens, self.ec.max_len - prompt_len), 1)
+        t0 = time.perf_counter()
+        self.run([Request(rid=-2, prompt=[0] * prompt_len, max_new=gen)])
+        wall = time.perf_counter() - t0
+        steps = self.step_idx
+        if self.index is not None:
+            self.index.evict(self.pool.n_blocks)
+        self.reset_metrics()
+        self.step_period = wall / max(steps, 1)
+        return self.step_period
 
     def aggregate_tps(self) -> float:
         """Measured generated-tokens/s over the whole run."""

@@ -1,0 +1,463 @@
+"""Traffic subsystem: arrivals, SLO goodput, queue simulation, and the
+measured/forecast serving loop under stochastic load."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import api, configs
+from repro.core import hardware
+from repro.core.workload import WorkloadModel
+from repro.traffic import (ARRIVAL_KINDS, LengthDist, RequestTiming,
+                           TrafficStats, TrafficTrace, arrival_steps,
+                           capacity_search, make_trace, simulate_traffic,
+                           timings_from_results, trace_prompts)
+
+HW = "tpu-v5e"
+
+
+def _scn(**kw):
+    base = dict(model="qwen2-7b", batch=4, prompt_len=64, gen_len=16,
+                chunk=32, reduced=True, n_requests=32)
+    base.update(kw)
+    return api.Scenario(**base)
+
+
+def _traffic_scn(qps=2.0, **kw):
+    return _scn().traffic("poisson", qps=qps, ttft_slo=1.5e-3,
+                          tpot_slo=1e-3, **kw)
+
+
+# ---------------------------------------------------------------------------
+# arrivals: generators, determinism, serialization
+# ---------------------------------------------------------------------------
+
+def test_trace_seeded_determinism():
+    kw = dict(prompt_lens="uniform:8:32", gen_lens="lognormal:8:0.5")
+    a = make_trace("poisson", 4.0, 50, seed=7, **kw)
+    b = make_trace("poisson", 4.0, 50, seed=7, **kw)
+    assert a == b
+    c = make_trace("poisson", 4.0, 50, seed=8, **kw)
+    assert a != c
+
+
+def test_trace_qps_time_scaling():
+    """Same seed at 2x the rate = same requests, halved arrival times."""
+    a = make_trace("poisson", 2.0, 40, prompt_lens=16, gen_lens=8, seed=3)
+    b = make_trace("poisson", 4.0, 40, prompt_lens=16, gen_lens=8, seed=3)
+    for ra, rb in zip(a.requests, b.requests):
+        assert (ra.prompt_len, ra.gen_len) == (rb.prompt_len, rb.gen_len)
+        assert rb.arrival_s == pytest.approx(ra.arrival_s / 2.0)
+
+
+@pytest.mark.parametrize("kind", ARRIVAL_KINDS)
+def test_trace_file_round_trip(kind, tmp_path):
+    tr = make_trace(kind, 3.0, 25, prompt_lens="uniform:4:64",
+                    gen_lens="constant:8", seed=11)
+    path = tmp_path / "trace.jsonl"
+    tr.save(str(path))
+    back = TrafficTrace.load(str(path))
+    assert back == tr
+    # whole-dict JSON round-trips too
+    assert TrafficTrace.from_dict(json.loads(json.dumps(tr.to_dict()))) == tr
+
+
+def test_poisson_interarrival_mean():
+    """Mean inter-arrival of a long Poisson trace ~= 1/qps."""
+    qps = 5.0
+    tr = make_trace("poisson", qps, 4000, prompt_lens=8, gen_lens=4, seed=0)
+    ts = [r.arrival_s for r in tr.requests]
+    gaps = np.diff(ts)
+    assert np.mean(gaps) == pytest.approx(1.0 / qps, rel=0.1)
+    # exponential shape: variance of gaps ~= mean^2
+    assert np.var(gaps) == pytest.approx(np.mean(gaps) ** 2, rel=0.2)
+
+
+def test_poisson_interarrival_property():
+    """Hypothesis-optional: the unit-rate scaling law holds for any
+    (seed, qps) — mean gap within 3 standard errors of 1/qps."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           qps=st.floats(0.1, 100.0, allow_nan=False))
+    def prop(seed, qps):
+        tr = make_trace("poisson", qps, 600, prompt_lens=4, gen_lens=2,
+                        seed=seed)
+        gaps = np.diff([r.arrival_s for r in tr.requests])
+        mean = 1.0 / qps
+        se = mean / np.sqrt(len(gaps))
+        assert abs(np.mean(gaps) - mean) < 3.5 * se
+
+    prop()
+
+
+def test_bursty_long_run_rate():
+    tr = make_trace("bursty", 8.0, 4000, prompt_lens=8, gen_lens=4,
+                    seed=1, burst=4.0, burst_len=8)
+    assert tr.offered_qps == pytest.approx(8.0, rel=0.1)
+    # the ON-phase gaps are genuinely burstier than the mean rate
+    gaps = np.diff([r.arrival_s for r in tr.requests])
+    assert np.median(gaps) < 1.0 / 8.0
+
+
+def test_length_dist_parse_and_errors():
+    assert LengthDist.parse("32") == LengthDist("constant", 32.0)
+    assert LengthDist.parse("uniform:16:64").spec == "uniform:16:64"
+    assert LengthDist.parse(8).sample(np.random.default_rng(0)) == 8
+    with pytest.raises(ValueError, match="length dist kind"):
+        LengthDist.parse("zipf:3")
+    with pytest.raises(ValueError, match="numeric"):
+        LengthDist.parse("uniform:a:b")
+    with pytest.raises(ValueError, match="1 <= lo <= hi"):
+        LengthDist.parse("uniform:64:16")
+
+
+def test_make_trace_errors():
+    with pytest.raises(ValueError, match="qps must be > 0"):
+        make_trace("poisson", 0.0, 4, prompt_lens=8, gen_lens=4)
+    with pytest.raises(ValueError, match="arrival must be one of"):
+        make_trace("weibull", 1.0, 4, prompt_lens=8, gen_lens=4)
+    with pytest.raises(ValueError, match="sorted"):
+        TrafficTrace(requests=tuple(
+            dataclasses.replace(r, arrival_s=-r.arrival_s)
+            for r in make_trace("deterministic", 1.0, 3, prompt_lens=8,
+                                gen_lens=4).requests[1:]))
+
+
+# ---------------------------------------------------------------------------
+# SLO metrics
+# ---------------------------------------------------------------------------
+
+def test_ttft_semantics_and_goodput():
+    t = RequestTiming(rid=0, arrival=0.0, admitted=2.0, first_token=3.0,
+                      finished=5.0, n_tokens=5)
+    assert t.ttft == pytest.approx(1.0)          # admission -> first token
+    assert t.ttft_queued == pytest.approx(3.0)   # arrival -> first token
+    assert t.queue_time == pytest.approx(2.0)
+    assert t.tpot == pytest.approx(0.5)
+    # goodput judges the queue-INCLUSIVE ttft
+    assert t.meets(ttft_slo=1.5, tpot_slo=None) is False
+    assert t.meets(ttft_slo=3.5, tpot_slo=0.6) is True
+    assert t.meets(ttft_slo=3.5, tpot_slo=0.4) is False
+    assert t.meets(None, None) is True
+
+    stats = TrafficStats.from_timings(
+        [t, dataclasses.replace(t, rid=1, admitted=0.5, first_token=1.0)],
+        ttft_slo=1.5, tpot_slo=None, queue_depth=[(0.0, 2), (1.0, 0)])
+    assert stats.goodput == pytest.approx(0.5)
+    assert stats.queue_depth_max == 2
+    assert set(stats.ttft) == {"mean", "p50", "p90", "p99"}
+    assert stats.ttft_queued["mean"] >= stats.ttft["mean"]
+    d = stats.to_dict()
+    assert d["goodput"] == 0.5 and "tpot_slo" not in d   # None dropped
+
+
+def test_arrival_steps():
+    tr = make_trace("deterministic", 2.0, 4, prompt_lens=8, gen_lens=4)
+    assert arrival_steps(tr, 0.25) == [0, 2, 4, 6]
+    with pytest.raises(ValueError, match="step_period_s"):
+        arrival_steps(tr, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# analytical queue simulation (stub costs: no JAX needed)
+# ---------------------------------------------------------------------------
+
+class _StubCosts:
+    """Constant-latency cost model: prefill 10ms/chunk, decode 1ms/step;
+    a batched group costs one chunk + 20% per extra member."""
+
+    def prefill_chunk_latency(self, chunk, past_len):
+        return 0.010
+
+    def prefill_group_latency(self, members):
+        return 0.010 * (1 + 0.2 * (len(members) - 1))
+
+    def decode_step_latency(self, past_lens):
+        return 0.001
+
+
+def _sim(qps, **kw):
+    tr = make_trace("poisson", qps, 64, prompt_lens=32, gen_lens=8, seed=5)
+    args = dict(max_slots=4, chunk_size=16, decode_block=4)
+    args.update(kw)
+    return tr, simulate_traffic(_StubCosts(), tr, **args)
+
+
+def test_simulated_goodput_monotone_in_qps():
+    """Offered load up, goodput (same seed population) non-increasing."""
+    goods = []
+    for qps in (1.0, 4.0, 16.0, 64.0, 256.0):
+        tr, sim = _sim(qps)
+        stats = TrafficStats.from_timings(sim.timings(), ttft_slo=0.1,
+                                          tpot_slo=None,
+                                          queue_depth=sim.queue_depth)
+        goods.append(stats.goodput)
+    assert goods[0] == 1.0
+    assert all(a >= b for a, b in zip(goods, goods[1:]))
+    assert goods[-1] < goods[0]
+
+
+def test_simulation_conserves_tokens():
+    tr, sim = _sim(8.0)
+    want = sum(r.gen_len for r in tr.requests)
+    assert sim.total_tokens == want
+    assert len(sim.records) == tr.n_requests
+    for r in sim.records:
+        assert r.finished >= r.first_token >= r.admitted >= r.arrival - 1e-12
+
+
+def test_simulated_bucketed_admission_faster():
+    """Same trace, prefill_batch 4: batched groups cost less clock."""
+    _, solo = _sim(64.0, prefill_batch=1)
+    _, grouped = _sim(64.0, prefill_batch=4)
+    assert grouped.total_tokens == solo.total_tokens
+    assert grouped.prefill_time < solo.prefill_time
+
+
+def test_capacity_search_shapes():
+    # threshold oracle: goodput 1 below 10 qps, 0 above
+    assert capacity_search(lambda q: 1.0 if q <= 10 else 0.0,
+                           target=0.9) == pytest.approx(10.0, rel=0.03)
+    assert capacity_search(lambda q: 0.0) == 0.0          # hopeless
+    assert capacity_search(lambda q: 1.0, qps_hi=32.0) == 32.0   # capped
+    with pytest.raises(ValueError, match="target"):
+        capacity_search(lambda q: 1.0, target=0.0)
+
+
+# ---------------------------------------------------------------------------
+# prefill_group_totals: the affine-in-batch identity
+# ---------------------------------------------------------------------------
+
+def test_prefill_group_totals_uniform_identity():
+    """A uniform group of B equals B*T1 - (B-1)*dup, record for record —
+    and that equals the model's own batched prefill."""
+    wm = WorkloadModel(configs.get("qwen2-7b"))
+    for B in (1, 2, 3, 5):
+        got = wm.prefill_group_totals(((16, 32),) * B)
+        want = wm.prefill(B, 16, past_len=32).totals("prefill")
+        for f in ("ops", "mem_rd", "mem_wr", "mem_total", "dispatches"):
+            assert getattr(got, f) == pytest.approx(getattr(want, f)), (B, f)
+
+
+def test_prefill_group_totals_mixed_is_subadditive():
+    """Mixed members share weight reads: cheaper than the sum of solos."""
+    wm = WorkloadModel(configs.get("qwen2-7b"))
+    members = ((16, 0), (16, 16), (8, 0))
+    group = wm.prefill_group_totals(members)
+    solo = sum(wm.prefill(1, c, past_len=p).totals("prefill").mem_rd
+               for c, p in members)
+    assert group.mem_rd < solo
+    with pytest.raises(ValueError):
+        wm.prefill_group_totals(())
+
+
+# ---------------------------------------------------------------------------
+# Scenario traffic plumbing + api.forecast / api.max_qps (analytical)
+# ---------------------------------------------------------------------------
+
+def test_scenario_traffic_validation_errors():
+    for kw, msg in [
+        (dict(arrival="weibull", qps=1.0), "arrival must be one of"),
+        (dict(arrival="poisson", qps=0.0), "qps must be > 0"),
+        (dict(arrival="poisson", qps=1.0, ttft_slo=-1.0),
+         "ttft_slo must be > 0"),
+        (dict(arrival="poisson", qps=1.0, tpot_slo=0.0),
+         "tpot_slo must be > 0"),
+        (dict(arrival="replay"), "requires trace_file"),
+        (dict(arrival="poisson", qps=1.0, prompt_len_dist="zipf:3"),
+         "length dist kind"),
+        (dict(arrival="poisson", qps=1.0, prefill_batch=0),
+         "prefill_batch must be >= 1"),
+        (dict(arrival="poisson", qps=1.0, spec_k=2), "do not compose"),
+    ]:
+        with pytest.raises(ValueError, match=msg):
+            _scn(**kw)
+
+
+def test_scenario_traffic_round_trip():
+    scn = _traffic_scn(qps=3.0, prompt_len_dist="uniform:16:64")
+    assert scn.has_traffic
+    back = api.Scenario.from_dict(json.loads(json.dumps(scn.to_dict())))
+    assert back.arrival == "poisson" and back.qps == 3.0
+    assert back.ttft_slo == scn.ttft_slo
+    assert back.prompt_len_dist == "uniform:16:64"
+    # a bare trace_file implies replay
+    assert api.Scenario(model="qwen2-7b",
+                        trace_file="t.jsonl").arrival == "replay"
+
+
+def test_forecast_traffic_deterministic_and_summarized():
+    scn = _traffic_scn(qps=2.0)
+    r1 = api.forecast(scn, HW)
+    r2 = api.forecast(scn, HW)
+    tr = r1.extras["traffic"]
+    assert r2.extras["traffic"] == tr
+    assert tr["n_requests"] == 32
+    for key in ("ttft", "ttft_queued", "tpot"):
+        assert set(tr[key]) == {"mean", "p50", "p90", "p99"}
+    assert 0.0 <= tr["goodput"] <= 1.0
+    assert tr["ttft_queued"]["p99"] >= tr["ttft"]["p99"]
+    assert r1.tps == pytest.approx(tr["tps"])
+
+
+def test_forecast_traffic_goodput_monotone_in_qps():
+    goods = [api.forecast(_traffic_scn(qps=q), HW).extras["traffic"]
+             ["goodput"] for q in (10.0, 1000.0, 4000.0, 64000.0)]
+    assert all(a >= b for a, b in zip(goods, goods[1:]))
+    assert goods[0] == 1.0 and goods[-1] < 1.0
+
+
+def test_max_qps_meets_slo_and_saturates():
+    """The acceptance criterion: max_qps' forecast goodput meets the
+    target while 1.5x max_qps does not — deterministically."""
+    scn = _traffic_scn()
+    mq = api.max_qps(scn, HW, goodput_target=0.9)
+    assert mq == api.max_qps(scn, HW, goodput_target=0.9)   # deterministic
+    assert mq > 0
+
+    def goodput(q):
+        return api.forecast(dataclasses.replace(scn, qps=q),
+                            HW).extras["traffic"]["goodput"]
+
+    assert goodput(mq) >= 0.9
+    assert goodput(mq * 1.5) < 0.9
+
+
+def test_max_qps_needs_traffic_and_slo():
+    with pytest.raises(ValueError, match="traffic scenario"):
+        api.max_qps(_scn(), HW)
+    with pytest.raises(ValueError, match="ttft_slo and/or"):
+        api.max_qps(_scn().traffic("poisson", qps=1.0), HW)
+
+
+def test_forecast_replay_trace_file(tmp_path):
+    """arrival='replay': both runners consume the saved trace verbatim."""
+    tr = make_trace("poisson", 2000.0, 16, prompt_lens=64, gen_lens=16,
+                    seed=9)
+    path = tmp_path / "t.jsonl"
+    tr.save(str(path))
+    scn = _scn(n_requests=None).traffic("replay", trace_file=str(path),
+                                        ttft_slo=1.5e-3)
+    r = api.forecast(scn, HW)
+    assert r.extras["traffic"]["n_requests"] == 16
+    assert r.extras["traffic"]["arrival"] == "poisson"   # from the header
+    with pytest.raises(ValueError, match="generated arrival process"):
+        api.max_qps(scn, HW, goodput_target=0.9)
+
+
+# ---------------------------------------------------------------------------
+# the real engine under traffic (reduced model on host)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mesh():
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh()
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return configs.reduced(configs.get("qwen2-7b"))
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    import jax
+    from repro.models import init_params
+    return init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _run_engine(cfg, params, mesh, prompts, gen=6, prefill_batch=1,
+                slots=4, arrival_steps=None):
+    from repro.engine import Engine, EngineConfig, Request
+    from repro.runtime import ShardingPolicy
+    ec = EngineConfig(max_slots=slots, max_len=64, chunk_size=8,
+                      decode_block=4, block_size=8,
+                      prefill_batch=prefill_batch, temperature=0.0)
+    with mesh:
+        eng = Engine(cfg, params, mesh, ShardingPolicy(), ec)
+        reqs = [Request(rid=i, prompt=list(map(int, p)), max_new=gen,
+                        arrival_step=(arrival_steps[i] if arrival_steps
+                                      else 0))
+                for i, p in enumerate(prompts)]
+        results = eng.run(reqs)
+    return eng, {r.rid: list(r.tokens) for r in results}
+
+
+def _mixed_prompts(cfg, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+            for n in (12, 12, 9, 20, 12)]
+
+
+def test_bucketed_admission_token_identical(cfg, params, mesh):
+    """prefill_batch > 1 changes the schedule, not the sampled tokens:
+    batched prefill-and-insert is numerically the verify pass at T=0."""
+    prompts = _mixed_prompts(cfg)
+    _, solo = _run_engine(cfg, params, mesh, prompts, prefill_batch=1)
+    eng, grouped = _run_engine(cfg, params, mesh, prompts, prefill_batch=3)
+    assert solo == grouped
+    evs = [e for e in eng.trace if e.kind == "prefill_batch"]
+    assert evs and any(len(e.members) > 1 for e in evs)
+    # bucket invariant: co-admitted members share the suffix chunk count
+    for e in evs:
+        assert len({-(-(len(prompts[m[0]]) - m[4]) // 8)
+                    for m in e.members}) == 1
+
+
+def test_prefill_batch_trace_replay(cfg, params, mesh):
+    """The twin prices prefill_batch dispatches via the group identity:
+    same tokens, cheaper clock than the sequential schedule."""
+    from repro.engine import ForecastTwin
+    prompts = _mixed_prompts(cfg)
+    eng1, _ = _run_engine(cfg, params, mesh, prompts, prefill_batch=1)
+    eng3, _ = _run_engine(cfg, params, mesh, prompts, prefill_batch=3)
+    twin = ForecastTwin(cfg, hardware.get(HW), block_size=8)
+    solo, grouped = twin.replay(eng1.trace), twin.replay(eng3.trace)
+    assert grouped.total_tokens == solo.total_tokens
+    assert grouped.total_time < solo.total_time
+    for rf in grouped.requests.values():
+        assert rf.ttft > 0 and rf.ttft_queued == rf.ttft
+    # the cold counterfactual expands groups to per-member chunks
+    from repro.engine.forecast_twin import cold_trace
+    cold = cold_trace(eng3.trace)
+    assert all(ev.kind != "prefill_batch" for ev in cold)
+    assert twin.replay(cold).total_tokens == grouped.total_tokens
+
+
+def test_engine_ttft_flavors_under_gated_arrivals(cfg, params, mesh):
+    """arrival_step-gated requests: ttft excludes queue wait, ttft_queued
+    includes it, and the queue-depth log sees the waiting request."""
+    prompts = _mixed_prompts(cfg)[:2]
+    eng, toks = _run_engine(cfg, params, mesh, prompts, slots=1,
+                            arrival_steps=[0, 2])
+    assert sorted(toks) == [0, 1]
+    for r in eng.results.values():
+        assert r.first_token >= r.admitted >= r.arrival
+        assert r.ttft_queued >= r.ttft > 0
+    assert max(w for _, _, w in eng.queue_depth) >= 1
+
+
+def test_measured_traffic_report(cfg, params, mesh):
+    """api.measure of a Poisson scenario: open-loop feed, SLO summary,
+    and a trace the forecast side can replay."""
+    scn = api.Scenario(model="qwen2-7b", batch=2, prompt_len=16, gen_len=4,
+                       chunk=8, reduced=True, n_requests=4, prefill_batch=2,
+                       ).traffic("poisson", qps=100.0, ttft_slo=5.0,
+                                 tpot_slo=2.0)
+    ms = api.measure(scn)
+    tr = ms.extras["traffic"]
+    assert ms.extras["mode"] == "engine-traffic"
+    assert ms.extras["step_period_s"] > 0
+    assert tr["n_requests"] == 4
+    assert tr["ttft_queued"]["mean"] >= tr["ttft"]["mean"]
+    assert tr["goodput"] == 1.0            # loose SLO: everything meets it
+    for key in ("ttft", "ttft_queued", "tpot"):
+        assert set(tr[key]) == {"mean", "p50", "p90", "p99"}
+    # the measured trace replays through the twin (prefill_batch included)
+    fc = api.forecast(scn, HW, trace=ms.trace)
+    assert fc.extras["trace_total_tokens"] == ms.extras["tokens"]
