@@ -1,0 +1,129 @@
+"""Calibrate a ``host-cpu`` HardwareSpec from host micro-benchmarks.
+
+The LIFE registry ships datasheet specs (paper §4.4 parts + the v5e
+target); the machine the engine actually *measures* on is whatever CPU
+the container landed on, typically 1–2 orders of magnitude slower than
+its own datasheet under an interpreted XLA host backend.  That gap is the
+bulk of the long-standing ``tps_delta_ratio`` between ``forecast_tps_cpu``
+(Ryzen spec) and ``measured_tps_host`` in ``BENCH_engine.json``.
+
+This module closes the loop the paper's Fig. 2-H leaves open for the
+host: three micro-benchmarks estimate the quantities a
+:class:`~repro.core.hardware.HardwareSpec` needs —
+
+* **effective GEMM throughput** (TOPS): wall-clock a jit-compiled square
+  matmul at the activation dtype the engine runs (f32 on the XLA CPU
+  backend);
+* **memory bandwidth** (GB/s): wall-clock a large out-of-cache array
+  copy (one read + one write stream);
+* **per-dispatch overhead** (s): amortized wall-clock of a no-op-sized
+  jitted kernel, the ``t_dispatch`` term of Eqs. 3/5.
+
+and :func:`register_host_spec` installs the result as ``"host-cpu"`` so
+``api.forecast(scn, "host-cpu")`` prices the machine underfoot.  The
+interconnect figure is a loopback placeholder (sharded what-ifs on one
+host move bytes through memory, so the memory bandwidth is reused).
+
+    PYTHONPATH=src python -m benchmarks.calibrate_host
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.core import hardware
+from repro.core.hardware import HardwareSpec
+
+#: registry name the calibrated spec installs under
+HOST_SPEC_NAME = "host-cpu"
+
+#: micro-benchmark geometry — big enough to dominate dispatch, small
+#: enough to finish in well under a second per repeat on a slow host
+GEMM_N = 512
+COPY_MB = 64
+REPEATS = 5
+
+
+def _best(fn, repeats: int = REPEATS) -> float:
+    """Min wall-clock over repeats (the least-noise estimator)."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_gemm_tops(n: int = GEMM_N) -> float:
+    """Effective matmul throughput in TOPS (2·n³ ops per call)."""
+    import jax
+    import jax.numpy as jnp
+    a = jnp.ones((n, n), jnp.float32)
+    b = jnp.ones((n, n), jnp.float32)
+    f = jax.jit(lambda x, y: x @ y)
+    f(a, b).block_until_ready()                    # compile outside timing
+    dt = _best(lambda: f(a, b).block_until_ready())
+    return 2.0 * n ** 3 / dt / 1e12
+
+
+def measure_mem_bw_gbps(mb: int = COPY_MB) -> float:
+    """Streaming copy bandwidth in GB/s (read + write counted)."""
+    import jax
+    import jax.numpy as jnp
+    n = mb * 2 ** 20 // 4
+    x = jnp.arange(n, dtype=jnp.float32)
+    f = jax.jit(lambda v: v + 1.0)
+    f(x).block_until_ready()
+    dt = _best(lambda: f(x).block_until_ready())
+    return 2.0 * n * 4 / dt / 1e9
+
+
+def measure_dispatch_s(calls: int = 50) -> float:
+    """Amortized per-dispatch overhead of a tiny jitted kernel."""
+    import jax
+    import jax.numpy as jnp
+    x = jnp.zeros((8,), jnp.float32)
+    f = jax.jit(lambda v: v + 1.0)
+    f(x).block_until_ready()
+
+    def burst():
+        y = x
+        for _ in range(calls):
+            y = f(y)
+        y.block_until_ready()
+
+    return _best(burst) / calls
+
+
+def calibrate(*, gemm_n: int = GEMM_N, copy_mb: int = COPY_MB
+              ) -> HardwareSpec:
+    """Run the micro-benchmarks and build the host spec (not registered)."""
+    return HardwareSpec(
+        name=HOST_SPEC_NAME,
+        tops=measure_gemm_tops(gemm_n),
+        bw_gbps=measure_mem_bw_gbps(copy_mb),
+        dispatch_latency_s=measure_dispatch_s(),
+        # loopback "interconnect": sharded what-ifs on one host shuffle
+        # bytes through the same memory system
+        interconnect_GBps=measure_mem_bw_gbps(copy_mb) / 2.0,
+    )
+
+
+def register_host_spec(spec: Optional[HardwareSpec] = None) -> HardwareSpec:
+    """Calibrate (unless given) and install the ``host-cpu`` spec.
+
+    Idempotent per process: a spec already registered under
+    ``HOST_SPEC_NAME`` is returned as-is, so benchmark modules can call
+    this unconditionally.
+    """
+    if spec is None:
+        if HOST_SPEC_NAME in hardware.REGISTRY:
+            return hardware.REGISTRY[HOST_SPEC_NAME]
+        spec = calibrate()
+    return hardware.register(spec)
+
+
+if __name__ == "__main__":
+    import dataclasses
+    import json
+    print(json.dumps(dataclasses.asdict(register_host_spec()), indent=1))

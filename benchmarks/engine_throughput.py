@@ -45,11 +45,21 @@ acceptance α* at which speculation starts paying on that target.
 
 Tensor-parallel settings (``tp-*``) run the SAME engine sharded over KV
 heads on a ``model=tp`` host-device mesh (this module requests 8 XLA host
-devices before JAX initializes; settings whose tp exceeds the devices
+devices before JAX initializes; settings whose mesh exceeds the devices
 actually visible are skipped) and forecast the per-chip schedule with the
 plan's collective traffic priced in — measured-vs-forecast TPS per tp
 degree.  The tp runs use a reduced config with ``n_kv_heads=4`` so tp=4
-divides the head counts.
+divides the head counts.  Pipeline-parallel settings (``pp-*`` /
+``tp*xpp*``) split the engine's layer scan into stages over a ``pipe``
+mesh axis — the tp×pp sweep of the forecast stack, with the twin
+replaying each sharded run's own trace.
+
+Every setting also carries ``forecast_tps_host`` / ``forecast_error_host``:
+the same trace replayed on the CALIBRATED spec of the machine underfoot
+(``benchmarks.calibrate_host`` registers ``host-cpu`` from GEMM /
+bandwidth / dispatch micro-benchmarks).  Unlike the Ryzen-datasheet twin,
+this one is an accuracy target: its signed relative TPS error is the
+fair measured-vs-forecast residual on the host.
 
     PYTHONPATH=src python -m benchmarks.engine_throughput
 """
@@ -66,20 +76,25 @@ ARCH = "qwen2-7b"
 PROMPT, NEW = 32, 16
 
 #: (label, n_requests, max_slots, decode_block, shared_prefix_len,
-#:  attn_impl, tp)
+#:  attn_impl, tp, pp)
 SETTINGS = [
-    ("serial-1slot", 4, 1, 8, None, "gather", 1),
-    ("batch-2slot", 4, 2, 8, None, "gather", 1),
-    ("batch-4slot", 8, 4, 8, None, "gather", 1),
-    ("overload-2slot-8req", 8, 2, 4, None, "gather", 1),
-    ("shared-prefix-16of32", 6, 2, 8, 16, "gather", 1),
-    ("paged-2slot", 4, 2, 8, None, "paged", 1),
+    ("serial-1slot", 4, 1, 8, None, "gather", 1, 1),
+    ("batch-2slot", 4, 2, 8, None, "gather", 1, 1),
+    ("batch-4slot", 8, 4, 8, None, "gather", 1, 1),
+    ("overload-2slot-8req", 8, 2, 4, None, "gather", 1, 1),
+    ("shared-prefix-16of32", 6, 2, 8, 16, "gather", 1, 1),
+    ("paged-2slot", 4, 2, 8, None, "paged", 1, 1),
     # sharded engine: same model, same traffic at tp∈{1,4} — the tp1 row
     # is the apples-to-apples baseline for the sharding delta, so BOTH
     # rows use the 4-head override (the stock reduced config's
     # n_kv_heads=2 cannot shard 4 ways)
-    ("tp1-2slot", 4, 2, 8, None, "gather", 1),
-    ("tp4-2slot", 4, 2, 8, None, "gather", 4),
+    ("tp1-2slot", 4, 2, 8, None, "gather", 1, 1),
+    ("tp4-2slot", 4, 2, 8, None, "gather", 4, 1),
+    # tp×pp sweep: the stock reduced config's 2 layers split into 2
+    # stages (pipe axis); tp2xpp2 composes the KV-head and layer-stage
+    # shardings on a 2×2 model×pipe mesh
+    ("pp2-2slot", 4, 2, 8, None, "gather", 1, 2),
+    ("tp2xpp2-2slot", 4, 2, 8, None, "gather", 2, 2),
 ]
 
 #: labels of the tp-comparison rows (shared 4-head reduced config)
@@ -189,10 +204,13 @@ def _model_for(label: str):
 
 def rows():
     import jax
+
+    from benchmarks.calibrate_host import register_host_spec
+    register_host_spec()           # one calibration pass per process
     out = []
-    for label, n_req, slots, block, shared, impl, tp in SETTINGS:
-        if tp > jax.device_count():
-            print(f"# engine/{label}: SKIPPED (tp={tp} > "
+    for label, n_req, slots, block, shared, impl, tp, pp in SETTINGS:
+        if tp * pp > jax.device_count():
+            print(f"# engine/{label}: SKIPPED (tp={tp}×pp={pp} > "
                   f"{jax.device_count()} visible devices)")
             continue
         model, reduced = _model_for(label)
@@ -202,9 +220,10 @@ def rows():
             reduced=reduced, batch=slots, prompt_len=PROMPT, gen_len=NEW,
             gen_lens=tuple(NEW - 3 * (i % 3) for i in range(n_req)),
             chunk=16, decode_block=block, shared_prefix_len=shared,
-            block_size=8 if shared else None, attn_impl=impl, tp=tp)
+            block_size=8 if shared else None, attn_impl=impl, tp=tp, pp=pp)
         measured = api.measure(scn)
         cpu = api.forecast(scn, "cpu", em=0.8, trace=measured.trace)
+        host = api.forecast(scn, "host-cpu", trace=measured.trace)
         full = dataclasses.replace(scn, model=ARCH, reduced=False)
         v5e = {i: api.forecast(dataclasses.replace(full, attn_impl=i),
                                "tpu-v5e", em=0.8, trace=measured.trace)
@@ -212,12 +231,17 @@ def rows():
         delta = api.compare(cpu, measured)
         derived = {
             "requests": n_req, "slots": slots, "attn_impl": impl, "tp": tp,
+            "pp": pp,
             "tokens": measured.extras["tokens"],
             "wall_s": round(measured.extras["wall_s"], 2),
             "measured_tps_host": round(measured.tps, 1),
             "measured_ttft_ms_host": round(measured.ttft_s * 1e3, 2),
             "forecast_tps_cpu": round(cpu.tps, 1),
             "cpu_twin_tps_ratio": round(delta.tps.ratio, 2),
+            # calibrated-host twin: same trace on the machine underfoot
+            "forecast_tps_host": round(host.tps, 1),
+            "forecast_error_host": round(
+                (host.tps - measured.tps) / measured.tps, 3),
             "forecast_tps_v5e_gather": round(v5e["gather"].tps, 1),
             "forecast_tps_v5e_paged": round(v5e["paged"].tps, 1),
             # the kernel's forecast win over the gather path on the target
@@ -276,9 +300,12 @@ def bench_artifact(rows_out):
         settings[name.split("/", 1)[1]] = {
             "attn_impl": d["attn_impl"],
             "tp": d["tp"],
+            "pp": d["pp"],
             "measured_tps": d["measured_tps_host"],
             "forecast_tps": d["forecast_tps_cpu"],
             "tps_delta_ratio": d["cpu_twin_tps_ratio"],
+            "forecast_tps_host": d["forecast_tps_host"],
+            "forecast_error_host": d["forecast_error_host"],
             "mean_ttft_ms": d["measured_ttft_ms_host"],
             "forecast_tps_v5e_gather": d["forecast_tps_v5e_gather"],
             "forecast_tps_v5e_paged": d["forecast_tps_v5e_paged"],
@@ -290,6 +317,7 @@ def bench_artifact(rows_out):
         "prompt_len": PROMPT,
         "gen_len": NEW,
         "tp_degrees": sorted({d["tp"] for _, d in rows_out}),
+        "pp_degrees": sorted({d.get("pp", 1) for _, d in rows_out}),
         "settings": settings,
         "spec": spec,
         "traffic": traffic,

@@ -81,6 +81,11 @@ def _add_scenario_args(p: argparse.ArgumentParser, measured: bool) -> None:
                    help="tensor-parallel degree: forecasts price per-chip "
                    "work + collective traffic (interconnect_GBps); measure "
                    "runs the engine sharded on a model=tp device mesh")
+    p.add_argument("--pp", type=int, default=1,
+                   help="pipeline-parallel degree: forecasts partition the "
+                   "layer stack into stages (prefill microbatch bubbles + "
+                   "inter-stage activation hops priced); measure splits the "
+                   "engine's layer scan over a pipe=pp mesh axis")
     p.add_argument("--spec-k", type=int, default=0, dest="spec_k",
                    help="speculative decoding: drafts verified per step "
                    "(0 = off); measure runs the engine's draft→verify→"
@@ -148,7 +153,8 @@ def _scenario(args: argparse.Namespace) -> api.Scenario:
               lora_rank=args.lora_rank,
               shared_prefix_len=args.shared_prefix_len,
               block_size=args.block_size, prefix_cache=args.prefix_cache,
-              attn_impl=args.attn_impl, tp=args.tp, spec_k=args.spec_k,
+              attn_impl=args.attn_impl, tp=args.tp, pp=args.pp,
+              spec_k=args.spec_k,
               spec_acceptance=args.spec_acceptance,
               spec_draft_arch=args.spec_draft_arch,
               prompt_motif_len=args.prompt_motif_len, reduced=args.reduced)
@@ -186,6 +192,8 @@ def _print_report(r: api.Report) -> None:
         traffic += f" attn={scn['attn_impl']}"
     if scn.get("tp", 1) > 1:
         traffic += f" tp={scn['tp']}"
+    if scn.get("pp", 1) > 1:
+        traffic += f" pp={scn['pp']}"
     if scn.get("spec_k"):
         traffic += f" spec_k={scn['spec_k']}"
         if scn.get("spec_draft_arch"):
@@ -275,14 +283,19 @@ def _cmd_sweep(args) -> int:
         return 2
     reports = api.sweep(_scenario(args), args.hw or None, tops=args.tops,
                         bw=args.bw, interconnect_GBps=args.interconnect,
+                        tp_degrees=args.tp_grid, pp_degrees=args.pp_grid,
                         ec=args.ec, em=args.em, decode_ec=args.decode_ec)
     if args.json:
         print(json.dumps([r.to_dict() for r in reports], indent=1))
         return 0
-    print(f"{'hardware':26s}{'TTFT ms':>12s}{'TPOT ms':>12s}{'TPS':>12s}"
-          f"  bound")
+    plan_grid = args.tp_grid is not None or args.pp_grid is not None
+    plan_hdr = f"{'plan':>10s}" if plan_grid else ""
+    print(f"{'hardware':26s}{plan_hdr}{'TTFT ms':>12s}{'TPOT ms':>12s}"
+          f"{'TPS':>12s}  bound")
     for r in reports:
-        print(f"{r.hardware:26s}{r.ttft_s * 1e3:12.2f}"
+        plan = (f"{'tp' + str(r.scenario['tp']) + 'xpp' + str(r.scenario['pp']):>10s}"
+                if plan_grid else "")
+        print(f"{r.hardware:26s}{plan}{r.ttft_s * 1e3:12.2f}"
               f"{r.tpot_s * 1e3:12.3f}{r.tps:12.1f}  {r.ttft_bound}")
     return 0
 
@@ -360,8 +373,15 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--bw", type=_csv_floats, default=None,
                    help="grid bandwidth GB/s values (with --tops)")
     p.add_argument("--interconnect", type=float, default=None,
-                   help="grid interconnect GB/s (required for --tp > 1 "
-                   "grid sweeps)")
+                   help="grid interconnect GB/s (required for sharded "
+                   "tops×bw grid sweeps)")
+    p.add_argument("--tp-grid", type=_csv_ints, default=None, dest="tp_grid",
+                   metavar="T1,T2,...",
+                   help="also sweep tensor-parallel degrees (crossed with "
+                   "--pp-grid; every plan × every hardware target)")
+    p.add_argument("--pp-grid", type=_csv_ints, default=None, dest="pp_grid",
+                   metavar="P1,P2,...",
+                   help="also sweep pipeline-parallel degrees")
     p.add_argument("--json", action="store_true")
     p.set_defaults(fn=_cmd_sweep)
 

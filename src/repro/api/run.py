@@ -37,6 +37,19 @@ def _workload_model(scn: Scenario) -> WorkloadModel:
                          plan=scn.plan)
 
 
+def _prefill_db(wm: WorkloadModel, scn: Scenario):
+    """The scenario's prefill StatsDB (shared by the aggregate phase
+    totals and the pipeline-parallel per-stage split)."""
+    table_bs = scn.engine_block_size if scn.attn_impl else None
+    if table_bs:
+        # prefill_cached(cached=0) == prefill/chunked_prefill + table reads
+        return wm.prefill_cached(scn.batch, scn.prompt_len, 0,
+                                 chunk=scn.chunk, block_size=table_bs)
+    if scn.chunk:
+        return wm.chunked_prefill(scn.batch, scn.prompt_len, scn.chunk)
+    return wm.prefill(scn.batch, scn.prompt_len)
+
+
 def _phase_totals(wm: WorkloadModel, scn: Scenario) -> Dict[str, Totals]:
     """Hardware-agnostic workload of the scenario's phases (Fig. 2-F).
 
@@ -45,14 +58,7 @@ def _phase_totals(wm: WorkloadModel, scn: Scenario) -> Dict[str, Totals]:
     remat / fusion deltas of the impl itself live inside ``wm``).
     """
     table_bs = scn.engine_block_size if scn.attn_impl else None
-    if table_bs:
-        # prefill_cached(cached=0) == prefill/chunked_prefill + table reads
-        pre_db = wm.prefill_cached(scn.batch, scn.prompt_len, 0,
-                                   chunk=scn.chunk, block_size=table_bs)
-    elif scn.chunk:
-        pre_db = wm.chunked_prefill(scn.batch, scn.prompt_len, scn.chunk)
-    else:
-        pre_db = wm.prefill(scn.batch, scn.prompt_len)
+    pre_db = _prefill_db(wm, scn)
     out = {"prefill": pre_db.totals("prefill")}
     if scn.shared_prefix_len is not None:
         # prefix-reuse regime (block-paged cache): one warm admission's
@@ -200,6 +206,43 @@ def forecast(scenario: Scenario, hw: HardwareLike, *,
     dec_tx = fc.collective_time(dec)
 
     extras: Dict[str, object] = {}
+    if scenario.pp > 1:
+        # pipeline-parallel forecast: the per-layer workload is partitioned
+        # into pp stages (stage-boundary activation hops priced as wire in
+        # the driver records above).  TTFT pipelines the prefill's chunk
+        # microbatches GPipe-style — bubble fraction (pp-1)/(m+pp-1) —
+        # and decode's steady-state TPOT is paced by the slowest stage
+        # (every stage is busy with a different in-flight token).
+        pls = scenario.decode_past_lens
+        m = (-(-scenario.prompt_len // scenario.chunk)
+             if scenario.chunk else 1)
+        pre_stages = wm.stage_totals(_prefill_db(wm, scenario), "prefill")
+        pre = fc.pipeline_phase(pre_stages, m, ec=ec, em=em,
+                                include_dispatch=include_dispatch)
+        dec_stages = wm.decode_stage_totals_mixed(pls)
+        table_bs = scenario.engine_block_size if scenario.attn_impl else None
+        if table_bs:
+            # block-table id reads belong to the attention layers; split
+            # them over stages by each stage's share of attn layers
+            kinds = arch.block_kinds()
+            shares = [sum(1 for k in kinds[lo:hi] if k == "attn")
+                      for lo, hi in wm.stage_spans()]
+            n_attn = sum(shares) or 1
+            bt = Totals()
+            for p in pls:
+                bt = bt.plus(wm.block_table_totals(1, p + 1, table_bs))
+            dec_stages = [s.plus(bt, factor=share / n_attn)
+                          for s, share in zip(dec_stages, shares)]
+        tpot = fc.pipeline_step_latency(dec_stages, em=em, ec=decode_ec)
+        extras.update(
+            pp=scenario.pp,
+            pp_microbatches=m,
+            pp_bubble_fraction=fc.pipeline_bubble_fraction(scenario.pp, m),
+            pp_hop_wire_bytes_per_step=((scenario.pp - 1)
+                                        * wm.hop_wire_bytes(len(pls))),
+            pp_decode_stage_s=[fc.step_latency(t, em=em, ec=decode_ec)
+                               for t in dec_stages],
+            interconnect_GBps=spec.interconnect_GBps)
     if scenario.tp > 1:
         # per-chip sharded forecast: surface the collective economics
         extras.update(
@@ -351,8 +394,11 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
     token (see ``repro.engine.forecast_twin``).
 
     ``scenario.tp > 1`` runs the engine tensor-parallel on a ``model=tp``
-    device mesh (weights and the block-paged KV pool sharded over heads) —
-    on a CPU host, expose devices with
+    device mesh (weights and the block-paged KV pool sharded over heads);
+    ``scenario.pp > 1`` adds a ``pipe`` axis over which the stacked layer
+    dim of params and the KV pool shard, and the engine splits its layer
+    scan into per-stage segments aligned with that sharding (tokens stay
+    bit-identical to ``pp == 1``).  On a CPU host, expose devices with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
     """
     import time
@@ -371,14 +417,14 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
     # the engine stores KV in bf16 or int8; int4 variants measure as int8
     kv_dtype = "int8" if variant.kv_dtype.startswith("int") else "bf16"
 
-    tp = scenario.tp
-    if tp > jax.device_count():
+    tp, pp = scenario.tp, scenario.pp
+    if tp * pp > jax.device_count():
         raise ValueError(
-            f"Scenario.tp={tp} needs {tp} devices but only "
+            f"Scenario tp={tp} × pp={pp} needs {tp * pp} devices but only "
             f"{jax.device_count()} are visible — set XLA_FLAGS="
-            f"--xla_force_host_platform_device_count={tp} (before JAX "
-            f"initializes) or run on a {tp}-chip host")
-    mesh = make_host_mesh(model=tp)
+            f"--xla_force_host_platform_device_count={tp * pp} (before JAX "
+            f"initializes) or run on a {tp * pp}-chip host")
+    mesh = make_host_mesh(model=tp, pipe=pp)
     params = init_params(arch, jax.random.PRNGKey(scenario.seed))
     if scenario.has_traffic:
         if not engine_supported(arch):
@@ -449,6 +495,7 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
                       requests=n_req,
                       attn_impl=ec.attn_impl,
                       tp=tp,
+                      pp=pp,
                       block_size=ec.block_size,
                       prefix_hit_tokens=eng.prefix_hit_tokens,
                       prefix_hit_rate=eng.prefix_hit_rate,
@@ -612,6 +659,8 @@ def sweep(scenario: Scenario,
           tops: Optional[Sequence[float]] = None,
           bw: Optional[Sequence[float]] = None,
           interconnect_GBps: Optional[float] = None,
+          tp_degrees: Optional[Sequence[int]] = None,
+          pp_degrees: Optional[Sequence[int]] = None,
           ec: float = 1.0, em: float = 1.0,
           decode_ec: Optional[float] = None) -> List[Report]:
     """Forecast ``scenario`` across hardware targets (paper Fig. 5 style).
@@ -619,19 +668,35 @@ def sweep(scenario: Scenario,
     Pass named/spec'd targets via ``hardware_list``, and/or a synthetic
     TOPS×BW grid via ``tops`` + ``bw`` (both in the paper's units: TOPS and
     GB/s); the grid cross-product is appended after the named targets.
-    A sharded scenario (``tp > 1``) needs ``interconnect_GBps`` on every
-    target — named specs carry their own, grid points take it from the
-    ``interconnect_GBps`` argument (required in that case, so collective
-    traffic is never silently priced against a zero-bandwidth wire).
+    A sharded scenario (``tp > 1`` or ``pp > 1``) needs
+    ``interconnect_GBps`` on every target — named specs carry their own,
+    grid points take it from the ``interconnect_GBps`` argument (required
+    in that case, so collective traffic is never silently priced against a
+    zero-bandwidth wire).
+
+    ``tp_degrees`` / ``pp_degrees`` sweep the scenario over a model-parallel
+    plan grid as well: every (tp, pp) combination of the given degrees is
+    forecast on every hardware target (scenario-major order — all targets
+    of one plan are adjacent).  Left unset, each axis stays at the
+    scenario's own degree, so plain hardware sweeps are unchanged.
     """
+    scns = [scenario]
+    if tp_degrees is not None or pp_degrees is not None:
+        scns = [dataclasses.replace(scenario, tp=t, pp=p)
+                for t in (tp_degrees if tp_degrees is not None
+                          else (scenario.tp,))
+                for p in (pp_degrees if pp_degrees is not None
+                          else (scenario.pp,))]
     specs: List[HardwareSpec] = [hardware.get(h) for h in hardware_list or ()]
     if (tops is None) != (bw is None):
         raise ValueError("tops and bw must be given together")
     if tops is not None:
-        if scenario.tp > 1 and interconnect_GBps is None:
+        sharded = [s for s in scns if s.tp > 1 or s.pp > 1]
+        if sharded and interconnect_GBps is None:
+            s = sharded[0]
             raise ValueError(
-                f"a tops×bw grid sweep of a tp={scenario.tp} scenario needs "
-                f"interconnect_GBps for the synthetic targets")
+                f"a tops×bw grid sweep of a tp={s.tp}×pp={s.pp} scenario "
+                f"needs interconnect_GBps for the synthetic targets")
         for t in tops:
             for b in bw:
                 specs.append(HardwareSpec(
@@ -640,5 +705,5 @@ def sweep(scenario: Scenario,
                     interconnect_GBps=interconnect_GBps or 0.0))
     if not specs:
         raise ValueError("sweep needs hardware_list and/or a tops×bw grid")
-    return [forecast(scenario, s, ec=ec, em=em, decode_ec=decode_ec)
-            for s in specs]
+    return [forecast(scn, s, ec=ec, em=em, decode_ec=decode_ec)
+            for scn in scns for s in specs]

@@ -59,6 +59,14 @@ class Scenario:
                           mesh, sharding weights + the block-paged KV pool
                           over KV heads.  ``tp=1`` (default) is the
                           single-chip paper scenario, bit-for-bit.
+      * ``pp``          — pipeline-parallel degree.  Forecasts partition
+                          the layer stack into ``pp`` stages, price the
+                          inter-stage activation hops as ``wire_bytes``
+                          and model the chunked-prefill microbatch bubble
+                          ``(pp−1)/(m+pp−1)``; the measured engine runs
+                          the stacked layer scan in ``pp`` segments
+                          sharded over a ``pipe`` mesh axis, tokens
+                          bit-identical to ``pp=1``.
     Speculative decoding (``spec_k > 0``): the measured engine runs the
     draft → batched-verify → accept loop (``spec_k`` drafts per slot per
     step); the forecast prices k draft steps plus one (k+1)-query verify
@@ -85,8 +93,9 @@ class Scenario:
     block_size: Optional[int] = None
     prefix_cache: bool = True
     attn_impl: Optional[str] = None
-    # sharding (tensor-parallel degree; 1 = single chip)
+    # sharding (tensor-parallel × pipeline-parallel; 1×1 = single chip)
     tp: int = 1
+    pp: int = 1
     # speculative decoding: k drafts/step, assumed per-draft acceptance α
     # (forecast side; the measured side records realized acceptance), and
     # an optional small draft architecture (None = free n-gram drafter)
@@ -156,6 +165,8 @@ class Scenario:
                              f"{ENGINE_ATTN_IMPLS}, got {self.attn_impl!r}")
         if self.tp < 1:
             raise ValueError(f"tp must be >= 1, got {self.tp}")
+        if self.pp < 1:
+            raise ValueError(f"pp must be >= 1, got {self.pp}")
         if self.spec_k < 0:
             raise ValueError(f"spec_k must be >= 0, got {self.spec_k}")
         if not 0.0 <= self.spec_acceptance <= 1.0:
@@ -232,7 +243,7 @@ class Scenario:
         same model axis as tp, like the engine's mesh)."""
         from repro.core.workload import ShardingPlan
         ep = self.tp if self.arch.family == "moe" else 1
-        return ShardingPlan(tp=self.tp, ep=ep)
+        return ShardingPlan(tp=self.tp, ep=ep, pp=self.pp)
 
     @property
     def decode_past_lens(self) -> Tuple[int, ...]:
@@ -326,6 +337,7 @@ class Scenario:
             "prefix_cache": self.prefix_cache,
             "attn_impl": self.attn_impl,
             "tp": self.tp,
+            "pp": self.pp,
             "spec_k": self.spec_k,
             "spec_acceptance": self.spec_acceptance,
             "spec_draft_arch": self.spec_draft_arch,
@@ -352,7 +364,8 @@ class Scenario:
         return cls(**{k: d[k] for k in (
             "model", "variant", "batch", "prompt_len", "gen_len", "chunk",
             "past_lens", "lora_rank", "shared_prefix_len", "block_size",
-            "prefix_cache", "attn_impl", "tp", "spec_k", "spec_acceptance",
+            "prefix_cache", "attn_impl", "tp", "pp", "spec_k",
+            "spec_acceptance",
             "spec_draft_arch", "prompt_motif_len", "reduced", "n_requests",
             "gen_lens", "decode_block", "temperature", "seed", "arrival",
             "qps", "ttft_slo", "tpot_slo", "trace_file", "prompt_len_dist",

@@ -86,6 +86,66 @@ class Forecaster:
              em: float = 1.0) -> PhaseForecast:
         return self.phase(prefill_db.totals("prefill"), ec=ec, em=em)
 
+    # -- pipeline parallelism (GPipe-style microbatch pipelining) ----------
+    @staticmethod
+    def pipeline_bubble_fraction(pp: int, microbatches: int) -> float:
+        """Idle fraction of a ``pp``-stage pipeline fed ``m`` microbatches
+        with balanced stages: ``(pp − 1) / (m + pp − 1)`` — the classic
+        GPipe fill/drain bubble.  Monotone ↑ in ``pp``, ↓ in ``m``."""
+        if pp < 1 or microbatches < 1:
+            raise ValueError(f"pp and microbatches must be >= 1, got "
+                             f"pp={pp} m={microbatches}")
+        return (pp - 1) / (microbatches + pp - 1)
+
+    def pipeline_phase(self, stage_totals: Sequence[Totals],
+                       microbatches: int, *, ec: float = 1.0,
+                       em: float = 1.0,
+                       include_dispatch: bool = True) -> PhaseForecast:
+        """Latency of one pipelined phase (prefill) over ``m`` microbatches.
+
+        ``stage_totals[s]`` is stage ``s``'s workload for the WHOLE phase
+        (all microbatches), its outbound hop wire included
+        (:meth:`WorkloadModel.stage_totals`).  With per-microbatch stage
+        latency ``t_s / m``, the pipeline completes in
+
+            T = Σ_s t_s / m  +  (m − 1) · max_s (t_s / m)
+
+        — one microbatch traverses every stage, then the slowest stage
+        drains the remaining ``m − 1``.  Balanced stages reduce to
+        ``Σ t_s · (1 + bubble·(pp−1)/…)`` i.e. the ``(pp−1)/(m+pp−1)``
+        bubble over the ideal ``Σ t_s / pp`` per-stage span; a single
+        stage returns :meth:`phase` unchanged (bit-for-bit pp=1 path).
+        Reported components (t_compute/t_memory/…) are the phase-wide
+        sums, so ``bound`` still reflects the aggregate regime.
+        """
+        stages = [self.phase(t, ec=ec, em=em,
+                             include_dispatch=include_dispatch)
+                  for t in stage_totals]
+        if len(stages) == 1:
+            return stages[0]
+        m = microbatches
+        if m < 1:
+            raise ValueError(f"microbatches must be >= 1, got {m}")
+        lat = (sum(p.latency for p in stages) / m
+               + (m - 1) * max(p.latency for p in stages) / m)
+        return PhaseForecast(
+            t_compute=sum(p.t_compute for p in stages),
+            t_memory=sum(p.t_memory for p in stages),
+            t_dispatch=sum(p.t_dispatch for p in stages),
+            t_collective=sum(p.t_collective for p in stages),
+            latency=lat)
+
+    def pipeline_step_latency(self, stage_totals: Sequence[Totals], *,
+                              em: float = 1.0,
+                              ec: Optional[float] = None) -> float:
+        """Steady-state decode TPOT of a ``pp``-stage pipeline: stages
+        work on consecutive tokens concurrently, so the token period is
+        the SLOWEST stage's step latency — each stage's Totals already
+        carry its outbound hop wire, so this is "slowest stage + hop".
+        A single stage reduces to :meth:`step_latency` exactly."""
+        return max(self.step_latency(t, em=em, ec=ec)
+                   for t in stage_totals)
+
     # -- Eq. 4–6 -----------------------------------------------------------
     def step_latency(self, totals: Totals, *, em: float = 1.0,
                      ec: Optional[float] = None) -> float:

@@ -92,6 +92,19 @@ ALIASES: Dict[str, str] = {
 }
 
 
+def register(spec: HardwareSpec) -> HardwareSpec:
+    """Register (or replace) a spec under its name.
+
+    The entry point for *calibrated* specs — e.g.
+    ``benchmarks/calibrate_host.py`` micro-benchmarks the local machine's
+    effective GEMM throughput, memory bandwidth and dispatch overhead and
+    registers the result as ``"host-cpu"``, after which forecasts can
+    target the actual host instead of a datasheet part.
+    """
+    REGISTRY[spec.name] = spec
+    return spec
+
+
 def names() -> List[str]:
     """Sorted names of every registered hardware spec."""
     return sorted(REGISTRY)

@@ -35,6 +35,14 @@ class ShardingPlan:
     ``tp`` is the per-replica model (tensor-parallel) degree — the axis
     the serving engine shards KV heads and weights over; it divides every
     operator's per-chip work and adds Megatron-style collective traffic.
+    ``pp`` is the pipeline-parallel degree — it partitions the layer stack
+    into ``pp`` contiguous stages; each stage holds its layers' weights
+    and KV, and the activation crossing every stage boundary is recorded
+    as ``wire_bytes`` (a point-to-point hop, priced against the same
+    interconnect as collectives).  Unlike ``tp``, ``pp`` does NOT divide
+    per-operator work: the full layer stack still runs once per token —
+    pipelining only overlaps *microbatches* across stages, which is the
+    :class:`Forecaster`'s job (bubble model), not the workload's.
     ``ep`` maps MoE expert parallelism onto the same model axis (it adds
     all-to-all wire but no extra division).  ``dp``/``sp``/``fsdp``
     describe replica-level scale-out for the training/dry-run path
@@ -45,17 +53,18 @@ class ShardingPlan:
     tp: int = 1          # tensor parallel ways (model axis)
     ep: int = 1          # expert parallel ways (MoE; maps onto model axis)
     sp: int = 1          # sequence parallel ways (long-context)
+    pp: int = 1          # pipeline parallel ways (stage axis)
     fsdp: bool = False   # params/opt-state sharded over dp (ZeRO-3 style)
 
     def __post_init__(self):
-        for name in ("dp", "tp", "ep", "sp"):
+        for name in ("dp", "tp", "ep", "sp", "pp"):
             if getattr(self, name) < 1:
                 raise ValueError(f"ShardingPlan.{name} must be >= 1, "
                                  f"got {getattr(self, name)}")
 
     @property
     def n_chips(self) -> int:
-        return self.dp * self.tp * self.sp
+        return self.dp * self.tp * self.sp * self.pp
 
 #: default tokens per KV block of the paged cache — shared by the engine
 #: (``EngineConfig.block_size``) and the analytical side
@@ -110,6 +119,10 @@ class WorkloadModel:
         self.variant = variant or Variant()
         self.attn_impl = attn_impl
         self.plan = plan or ShardingPlan()
+        n_layers = len(arch.block_kinds())
+        if self.plan.pp > n_layers:
+            raise ValueError(f"pp={self.plan.pp} exceeds the {n_layers} "
+                             f"layers of {arch.name} — nothing to stage")
         if self.variant.use_mla and arch.mla is None:
             # MHA→MLA conversion (paper §3.3.2): attach default MLA geometry
             from repro.configs.base import MLAConfig
@@ -138,6 +151,7 @@ class WorkloadModel:
                 with db.scope(f"layer{i}"):
                     self._block(db, kind, batch, q_len=seq,
                                 kv_len=past_len + seq, decode=False)
+                    self._stage_hop(db, i, ntok)
             D.norm(db, ntok, a.d_model, kind=a.norm_kind,
                    dtype=v.dtype_act, fused=v.fused)
             # LM head over all positions (paper Table 4 convention)
@@ -251,6 +265,7 @@ class WorkloadModel:
                 with db.scope(f"layer{i}"):
                     self._block(db, kind, batch, q_len=1,
                                 kv_len=past_len + 1, decode=True)
+                    self._stage_hop(db, i, batch)
             D.norm(db, batch, a.d_model, kind=a.norm_kind,
                    dtype=v.dtype_act, fused=v.fused)
             F.linear(db, batch, a.d_model, a.vocab_size,
@@ -287,6 +302,7 @@ class WorkloadModel:
                 with db.scope(f"layer{i}"):
                     self._block(db, kind, batch, q_len=k + 1,
                                 kv_len=past_len + k + 1, decode=True)
+                    self._stage_hop(db, i, ntok)
             D.norm(db, ntok, a.d_model, kind=a.norm_kind,
                    dtype=v.dtype_act, fused=v.fused)
             F.linear(db, ntok, a.d_model, a.vocab_size,
@@ -366,6 +382,100 @@ class WorkloadModel:
             self._verify_cache[key] = (t0, slope)
         t0, slope = self._verify_cache[key]
         return t0.plus(slope, factor=float(sum(eff)))
+
+    # ------------------------------------------------------------------
+    # pipeline stages (plan.pp)
+    # ------------------------------------------------------------------
+    def stage_spans(self) -> List[Tuple[int, int]]:
+        """Contiguous ``[start, stop)`` layer ranges of each pipeline
+        stage — ``plan.pp`` near-equal partitions of the layer stack, the
+        first ``n_layers % pp`` stages one layer deeper (GPipe-style
+        balanced split)."""
+        n = len(self.arch.block_kinds())
+        pp = self.plan.pp
+        base, rem = divmod(n, pp)
+        spans: List[Tuple[int, int]] = []
+        start = 0
+        for s in range(pp):
+            size = base + (1 if s < rem else 0)
+            spans.append((start, start + size))
+            start += size
+        return spans
+
+    def hop_wire_bytes(self, ntok: int) -> float:
+        """Bytes of the (ntok, d_model) activation crossing ONE stage
+        boundary — a point-to-point send, not a ring collective, so the
+        full tensor crosses once regardless of ``tp`` (Megatron keeps
+        activations replicated across the tp group at block exits)."""
+        el = dtypes.get(self.variant.dtype_act).bytes_per_el
+        return float(ntok) * self.arch.d_model * el
+
+    def stage_totals(self, db: StatsDB,
+                     phase: Optional[str] = None) -> List[Totals]:
+        """Partition a driver's records into per-pipeline-stage Totals.
+
+        Every record lands in exactly one stage (the sum over stages
+        reproduces ``db.totals(phase)`` bit-for-bit, tested):
+
+        * ``layer{i}`` scopes → the stage owning layer ``i`` (inter-stage
+          hop records sit in the sending layer's scope, so each stage's
+          Totals already carry its outbound hop wire);
+        * the encoder / vision frontend and the embedding gather → stage 0
+          (they feed the first decoder layer);
+        * everything else (final norm, lm_head, sampling, block-table
+          reads) → the last stage, which owns the model head.
+        """
+        spans = self.stage_spans()
+        pp = len(spans)
+        stage_of = {}
+        for s, (lo, hi) in enumerate(spans):
+            for i in range(lo, hi):
+                stage_of[i] = s
+        out = [Totals() for _ in range(pp)]
+        for r in db.records:
+            if phase is not None and r.phase != phase:
+                continue
+            stage = pp - 1
+            placed = False
+            for seg in r.scope.split("/"):
+                if seg.startswith("layer") and seg[5:].isdigit():
+                    stage = stage_of[int(seg[5:])]
+                    placed = True
+                    break
+                if seg == "encoder":
+                    stage = 0
+                    placed = True
+                    break
+            if not placed and r.op in ("embedding", "vision_projector"):
+                stage = 0
+            out[stage].add(r)
+        return out
+
+    def decode_stage_totals_mixed(self, past_lens: Sequence[int]
+                                  ) -> List[Totals]:
+        """Per-stage Totals of ONE mixed-length decode step — the
+        stage-resolved :meth:`decode_totals_mixed`.  The affine-in-Σpast
+        identity holds per stage because each stage's records are a fixed
+        subset of the step's records; ``sum(stages) == mixed`` and the
+        single-stage case reproduces ``[decode_totals_mixed(...)]``
+        (tested)."""
+        eff = self.effective_kv_lens(past_lens)
+        B = len(eff)
+        if not hasattr(self, "_mixed_stage_cache"):
+            self._mixed_stage_cache = {}
+        if B not in self._mixed_stage_cache:
+            base_v = dataclasses.replace(self.variant, pad_to=1)
+            base_wm = WorkloadModel(self.arch, base_v,
+                                    attn_impl=self.attn_impl,
+                                    plan=self.plan)
+            st0 = base_wm.stage_totals(base_wm.decode_step(B, 0), "decode")
+            st1 = base_wm.stage_totals(base_wm.decode_step(B, 1), "decode")
+            pairs = [(t0, t1.minus(t0).scaled(1.0 / B))
+                     for t0, t1 in zip(st0, st1)]
+            self._mixed_stage_cache[B] = pairs
+        s = float(sum(eff))
+        return [t0.plus(slope, factor=s)
+                for t0, slope in self._mixed_stage_cache[B]]
 
     def effective_kv_lens(self, past_lens: Sequence[int],
                           q_len: int = 1) -> List[int]:
@@ -518,6 +628,17 @@ class WorkloadModel:
             return
         db.record("all_reduce", wire_bytes=self._act_wire_bytes(ntok),
                   dispatches=1, op_class="collective")
+
+    def _stage_hop(self, db: StatsDB, layer: int, ntok: int) -> None:
+        """Inter-stage activation send after ``layer`` when it closes a
+        non-final pipeline stage.  Recorded inside the layer's scope so
+        :meth:`stage_totals` attributes the hop to the SENDING stage.
+        ``pp == 1`` emits nothing (bit-for-bit with the unstaged model)."""
+        if self.plan.pp <= 1:
+            return
+        if any(layer == hi - 1 for (lo, hi) in self.stage_spans()[:-1]):
+            db.record("stage_hop", wire_bytes=self.hop_wire_bytes(ntok),
+                      dispatches=1, op_class="collective")
 
     def _moe_a2a(self, db: StatsDB, ntok: int) -> None:
         """MoE token dispatch + combine all-to-alls under expert

@@ -48,6 +48,16 @@ block).  Attention is embarrassingly parallel over GQA head groups, so
 the only cross-chip traffic is the all-reduce XLA inserts after the
 row-sharded o_proj/down_proj einsums — exactly the collectives the
 analytical side prices (``WorkloadModel`` with a ``ShardingPlan``).
+
+Pipeline parallelism: on a mesh with a ``pipe`` axis of size ``pp > 1``
+the stacked layer scan splits into ``pp`` contiguous segments
+(``_staged_scan``), each aligned with the ``pipe`` sharding of the
+stacked params and the KV pool's layer axis — stage ``s`` executes its
+layers against its own weight/cache shards and only the carried
+activation crosses stages (the hop the analytical side prices as
+``wire_bytes``).  The op sequence is identical to the single scan, so
+tokens are bit-identical to ``pp=1`` for both attention impls; ``tp``
+composes (KV heads × layer stages partition the pool in both axes).
 """
 from __future__ import annotations
 
@@ -73,6 +83,44 @@ from .sampling import sample
 #: the engine always runs exactly one impl (the analytical side's extra
 #: ``None`` means "price neither")
 ATTN_IMPLS = tuple(i for i in ENGINE_ATTN_IMPLS if i is not None)
+
+
+def _check_pp(cfg: ArchConfig, pp: int) -> None:
+    if pp > 1 and cfg.n_layers % pp:
+        raise ValueError(
+            f"pipeline-parallel engine splits the layer scan into stages: "
+            f"pp={pp} must divide n_layers={cfg.n_layers} of arch "
+            f"{cfg.name!r}")
+
+
+def _staged_scan(scan_fn, x, xs, pp: int):
+    """``jax.lax.scan`` over stacked per-layer leaves, split into ``pp``
+    pipeline-stage segments.
+
+    ``pp == 1`` is the literal single ``lax.scan`` of the unstaged engine
+    (same HLO, bit-for-bit).  ``pp > 1`` runs one scan per contiguous
+    layer segment — the op sequence (and therefore every token) is
+    identical, but each segment's params/KV slices align with the
+    ``pipe``-axis sharding of the stacked leaves, so under GSPMD stage
+    ``s``'s layers execute against stage ``s``'s weight and cache shards
+    and the carried activation ``x`` is what moves between stages (the
+    hop the analytical side prices as ``wire_bytes``).  Stacked scan
+    outputs are concatenated back in layer order.
+    """
+    if pp <= 1:
+        return jax.lax.scan(scan_fn, x, xs)
+    L = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    seg = L // pp
+    outs = []
+    for s in range(pp):
+        sl = jax.tree_util.tree_map(
+            lambda t: jax.lax.slice_in_dim(t, s * seg, (s + 1) * seg,
+                                           axis=0), xs)
+        x, out = jax.lax.scan(scan_fn, x, sl)
+        outs.append(out)
+    stacked = jax.tree_util.tree_map(
+        lambda *ts: jnp.concatenate(ts, axis=0), *outs)
+    return x, stacked
 
 
 # ---------------------------------------------------------------------------
@@ -248,6 +296,8 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
             f"tensor-parallel engine shards attention over KV heads: tp={tp}"
             f" must divide n_heads={cfg.n_heads} and "
             f"n_kv_heads={cfg.n_kv_heads} of arch {cfg.name!r}")
+    pp = S.pp_degree(mesh, policy)
+    _check_pp(cfg, pp)
     act_sharding.set_mesh(mesh, policy.dp_axes, policy.tp_axis)
     state_sh = cache.shardings(mesh, policy)
     param_sh = S.param_shardings(cfg, mesh, policy)
@@ -284,9 +334,9 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
                                        paged_prefill_fn)
             return h, (ck, cv)
 
-        x, (cks, cvs) = jax.lax.scan(
+        x, (cks, cvs) = _staged_scan(
             scan_fn, x, (params["layers"], state["cache_k"],
-                         state["cache_v"]))
+                         state["cache_v"]), pp)
         x = apply_norm(cfg.norm_kind, x, params["ln_f"])
         h_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
         logits = _lm_head(cfg, params, h_last)[0, 0]      # (V,)
@@ -309,8 +359,8 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
                                           paged_decode_fn)
                 return h, (ck, cv)
 
-            x, (cks, cvs) = jax.lax.scan(
-                layer_fn, x, (params["layers"], ck_all, cv_all))
+            x, (cks, cvs) = _staged_scan(
+                layer_fn, x, (params["layers"], ck_all, cv_all), pp)
             x = apply_norm(cfg.norm_kind, x, params["ln_f"])
             logits = _lm_head(cfg, params, x[:, -1:])[:, 0]   # (S, V)
             key, sub = jax.random.split(key)
@@ -380,6 +430,8 @@ def make_prefill_batch_fn(cfg: ArchConfig, mesh: Mesh,
         raise ValueError(f"attn_impl must be one of {ATTN_IMPLS}, "
                          f"got {attn_impl!r}")
     tp = S.tp_degree(mesh, policy)
+    pp = S.pp_degree(mesh, policy)
+    _check_pp(cfg, pp)
     act_sharding.set_mesh(mesh, policy.dp_axes, policy.tp_axis)
     state_sh = cache.shardings(mesh, policy)
     param_sh = S.param_shardings(cfg, mesh, policy)
@@ -408,9 +460,9 @@ def make_prefill_batch_fn(cfg: ArchConfig, mesh: Mesh,
                                       paged_verify_fn)
             return h, (ck, cv)
 
-        x, (cks, cvs) = jax.lax.scan(
+        x, (cks, cvs) = _staged_scan(
             layer_fn, x, (params["layers"], state["cache_k"],
-                          state["cache_v"]))
+                          state["cache_v"]), pp)
         x = apply_norm(cfg.norm_kind, x, params["ln_f"])
         # each member's first-token logits sit at its last valid position
         idx = jnp.clip(valids - 1, 0, x.shape[1] - 1)
@@ -452,6 +504,8 @@ def make_verify_fn(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
         raise ValueError(f"attn_impl must be one of {ATTN_IMPLS}, "
                          f"got {attn_impl!r}")
     tp = S.tp_degree(mesh, policy)
+    pp = S.pp_degree(mesh, policy)
+    _check_pp(cfg, pp)
     act_sharding.set_mesh(mesh, policy.dp_axes, policy.tp_axis)
     state_sh = cache.shardings(mesh, policy)
     param_sh = S.param_shardings(cfg, mesh, policy)
@@ -479,9 +533,9 @@ def make_verify_fn(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
                                       paged_verify_fn)
             return h, (ck, cv)
 
-        x, (cks, cvs) = jax.lax.scan(
+        x, (cks, cvs) = _staged_scan(
             layer_fn, x, (params["layers"], state["cache_k"],
-                          state["cache_v"]))
+                          state["cache_v"]), pp)
         x = apply_norm(cfg.norm_kind, x, params["ln_f"])
         logits = _lm_head(cfg, params, x)                 # (S, Q, V)
         new_state = dict(state)

@@ -196,7 +196,14 @@ class ForecastTwin:
     PER-CHIP workload of a tensor-parallel deployment: every chunk and
     step is priced with its ops/bytes divided over ``plan.tp`` chips plus
     the plan's collective wire time on ``hw.interconnect_GBps`` — the
-    forecast side of the engine's own ``model=tp`` mesh.  Left ``None``
+    forecast side of the engine's own ``model=tp`` mesh.  A plan with
+    ``pp > 1`` additionally prices the inter-stage activation hops the
+    staged layer scan incurs (``WorkloadModel`` records them per driver);
+    the engine's pipeline stages execute *sequentially* within each
+    synchronous jitted step, so replay sums the full stack plus hop wire
+    rather than applying any bubble overlap — that pipelining benefit is
+    a throughput-phase property modeled by ``Forecaster.pipeline_phase``,
+    not a property of this trace's lockstep schedule.  Left ``None``
     (single chip), replay reproduces the unsharded numbers bit-for-bit.
 
     ``attn_impl`` defaults to :data:`AUTO`: :meth:`replay` reads the

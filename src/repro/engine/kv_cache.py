@@ -121,12 +121,15 @@ class BlockPagedKVCache:
         # the block axis is a global pool any slot may address, so it is
         # replicated; TP shards the KV-head axis — each chip of a
         # ``model=tp`` mesh owns ``n_kv_heads/tp`` heads of EVERY block
-        # (the paged Pallas path shard_maps over the same axis).  No
-        # kv_len fallback here: intra-block token sharding would split
+        # (the paged Pallas path shard_maps over the same axis).  The
+        # layer axis shards over the ``pipe`` axis when the mesh has one
+        # (each pipeline stage owns its layers' blocks, composing with
+        # the kv_heads split); on a pipe-less mesh it stays replicated.
+        # No kv_len fallback here: intra-block token sharding would split
         # scatter targets across chips for zero capacity win.
         return {
-            "cache_k": (None, None, None, "kv_heads", None),
-            "cache_v": (None, None, None, "kv_heads", None),
+            "cache_k": ("layers", None, None, "kv_heads", None),
+            "cache_v": ("layers", None, None, "kv_heads", None),
             "block_tables": ("batch", None),
             "pos": ("batch",),
             "tok": ("batch",),

@@ -35,7 +35,7 @@ from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
 from repro.core.workload import DEFAULT_KV_BLOCK_SIZE
-from repro.runtime.sharding import ShardingPolicy, tp_degree
+from repro.runtime.sharding import ShardingPolicy, pp_degree, tp_degree
 
 from .block_pool import BlockPool, RadixIndex
 from .kv_cache import BlockPagedKVCache
@@ -146,8 +146,9 @@ class TraceEvent:
         ``chunk_size`` (so ``cold_trace`` backfills cache-hit prefixes at
         the engine's true chunk granularity even when every admission was
         a warm hit with a small tail suffix), ``n_steps`` the configured
-        ``decode_block``, ``tp`` the mesh's tensor-parallel degree the
-        run executed at, ``attn_impl``/``block_size``/``spec_k`` the
+        ``decode_block``, ``tp``/``pp`` the mesh's tensor- and
+        pipeline-parallel degrees the run executed at,
+        ``attn_impl``/``block_size``/``spec_k`` the
         attention path, KV paging granularity and speculation depth (so
         the twin defaults its pricing from the trace itself instead of
         out-of-band constructor args); zero workload, skipped by replay.
@@ -183,6 +184,7 @@ class TraceEvent:
     n_steps: int = 0
     slots: Tuple[Tuple[int, int, int], ...] = ()
     tp: int = 1
+    pp: int = 1                         # header only (pipeline degree)
     attn_impl: str = ""                 # header only (twin replay default)
     block_size: int = 0                 # header only
     spec_k: int = 0                     # header + spec_step
@@ -211,6 +213,7 @@ class Engine:
         self.cfg, self.params, self.ec = cfg, params, ec
         self.mesh = mesh
         self.tp = tp_degree(mesh, policy)
+        self.pp = pp_degree(mesh, policy)
         self.cache = BlockPagedKVCache(
             cfg, ec.max_slots, n_blocks=ec.pool_blocks,
             block_size=ec.block_size,
@@ -543,7 +546,7 @@ class Engine:
             # header: the engine knobs the twin's replay/cold_trace need
             self.trace.append(TraceEvent(kind="engine", chunk=ec.chunk_size,
                                          n_steps=ec.decode_block,
-                                         tp=self.tp,
+                                         tp=self.tp, pp=self.pp,
                                          attn_impl=ec.attn_impl,
                                          block_size=ec.block_size,
                                          spec_k=ec.spec_k))

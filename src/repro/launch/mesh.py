@@ -58,6 +58,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1):
-    """Tiny mesh for CPU smoke tests / examples (1 real device)."""
+def make_host_mesh(data: int = 1, model: int = 1, pipe: int = 1):
+    """Tiny mesh for CPU smoke tests / examples (1 real device).
+
+    ``pipe > 1`` appends a pipeline-stage axis; ``pipe == 1`` keeps the
+    exact 2-axis mesh (and HLO) of the pre-pipeline engine."""
+    if pipe > 1:
+        return _make_mesh((data, model, pipe), ("data", "model", "pipe"))
     return _make_mesh((data, model), ("data", "model"))

@@ -424,14 +424,17 @@ def step(cfg: ArchConfig, params: Dict, token_ids: jax.Array, state: Dict, *,
     new_state = dict(state)
     if cfg.family == "encdec" and frames is not None:
         enc_out = _encoder_forward(cfg, params, frames)
-        cks, cvs = [], []
-        for i in range(cfg.n_layers):
-            k, v = A.encode_cross_kv(cfg, params["layers"][f"l{i}"]["xattn"],
-                                     enc_out)
-            cks.append(k)
-            cvs.append(v)
-        new_state["cross_k"] = jnp.stack(cks).astype(state["cross_k"].dtype)
-        new_state["cross_v"] = jnp.stack(cvs).astype(state["cross_v"].dtype)
+        # stack the per-layer cross-KV projections and encode every layer
+        # in one vmapped computation (consistent with the scanned
+        # homogeneous stacks: one HLO op regardless of depth) — the
+        # decoder layers themselves stay dict-unrolled (heterogeneous)
+        xkv = {name: jnp.stack([params["layers"][f"l{i}"]["xattn"][name]
+                                for i in range(cfg.n_layers)])
+               for name in ("wk", "wv")}
+        cks, cvs = jax.vmap(
+            lambda p: A.encode_cross_kv(cfg, p, enc_out))(xkv)
+        new_state["cross_k"] = cks.astype(state["cross_k"].dtype)
+        new_state["cross_v"] = cvs.astype(state["cross_v"].dtype)
 
     kinds = cfg.block_kinds()
     if cfg.family in ("dense", "vlm", "moe"):

@@ -31,6 +31,8 @@ class ShardingPolicy:
     dp_axes: Tuple[str, ...] = ("data",)
     #: mesh tensor-parallel axis
     tp_axis: str = "model"
+    #: mesh pipeline-stage axis (stacked layer dim of params + KV pool)
+    pp_axis: str = "pipe"
     #: shard params' "embed" axis over dp (ZeRO-3 / FSDP)
     fsdp: bool = False
     #: shard sequence over tp for activations when batch < dp (long context)
@@ -42,6 +44,7 @@ class ShardingPolicy:
             "vocab": tp, "heads": tp, "kv_heads": tp, "mlp": tp,
             "experts": tp, "inner": tp,
             "batch": (self.dp_axes,),    # tuple-of-axes = combined sharding
+            "layers": (self.pp_axis,),   # stacked layer dim → pipeline stage
         }
         if self.fsdp:
             rules["embed"] = (self.dp_axes,)
@@ -64,6 +67,13 @@ def tp_degree(mesh: Mesh, policy: ShardingPolicy) -> int:
     has no tp axis) — the engine's measured counterpart of
     ``repro.core.ShardingPlan.tp``."""
     return int(mesh.shape.get(policy.tp_axis, 1))
+
+
+def pp_degree(mesh: Mesh, policy: ShardingPolicy) -> int:
+    """Pipeline-parallel ways of this mesh under the policy (1 if the
+    mesh has no pipe axis) — the measured counterpart of
+    ``repro.core.ShardingPlan.pp``."""
+    return int(mesh.shape.get(policy.pp_axis, 1))
 
 
 def _axis_size(mesh: Mesh, axis) -> int:
@@ -131,22 +141,22 @@ def decode_state_axes(cfg: ArchConfig) -> Dict:
     kinds = cfg.block_kinds()
     if any(k == "attn" for k in kinds):
         if cfg.mla is not None:
-            axes["cache_k"] = (None, "batch", "kv_len", None)
-            axes["cache_v"] = (None, "batch", "kv_len", None)
+            axes["cache_k"] = ("layers", "batch", "kv_len", None)
+            axes["cache_v"] = ("layers", "batch", "kv_len", None)
         else:
-            axes["cache_k"] = (None, "batch", "kv_len", "kv_heads", None)
-            axes["cache_v"] = (None, "batch", "kv_len", "kv_heads", None)
+            axes["cache_k"] = ("layers", "batch", "kv_len", "kv_heads", None)
+            axes["cache_v"] = ("layers", "batch", "kv_len", "kv_heads", None)
         if cfg.local_window:
-            axes["cache_pos"] = (None, "batch", "kv_len")
+            axes["cache_pos"] = ("layers", "batch", "kv_len")
     if any(k == "ssm" for k in kinds):
-        axes["conv_state"] = (None, "batch", None, "inner")
-        axes["ssm_state"] = (None, "batch", "inner", None)
+        axes["conv_state"] = ("layers", "batch", None, "inner")
+        axes["ssm_state"] = ("layers", "batch", "inner", None)
     if any(k == "rglru" for k in kinds):
-        axes["rg_conv"] = (None, "batch", None, "inner")
-        axes["rg_h"] = (None, "batch", "inner")
+        axes["rg_conv"] = ("layers", "batch", None, "inner")
+        axes["rg_h"] = ("layers", "batch", "inner")
     if cfg.family == "encdec":
-        axes["cross_k"] = (None, "batch", None, "kv_heads", None)
-        axes["cross_v"] = (None, "batch", None, "kv_heads", None)
+        axes["cross_k"] = ("layers", "batch", None, "kv_heads", None)
+        axes["cross_v"] = ("layers", "batch", None, "kv_heads", None)
     return axes
 
 

@@ -1,0 +1,338 @@
+"""Pipeline-parallel serving: stage partitioning, bubbles, wire, tokens.
+
+Gates (mirrors the tp suite in ``test_forecast_tp`` / ``test_engine_tp``):
+* ``pp=1`` reproduces the pre-pipeline numbers BIT-FOR-BIT — stage totals,
+  ``api.forecast`` reports and twin replay — across the paper-table
+  scenarios.
+* ``pp>1`` partitions the layer stack into stages whose totals sum to the
+  full workload exactly, plus priced inter-stage activation hops
+  (``wire_bytes`` against ``HardwareSpec.interconnect_GBps``).
+* prefill TTFT follows the GPipe bubble fraction ``(pp-1)/(m+pp-1)``
+  (monotone in both arguments — hypothesis when available); decode TPOT
+  is paced by the slowest stage.
+* the ENGINE under a ``pipe`` mesh axis emits tokens bit-identical to
+  ``pp=1`` for both attention impls, alone and composed with tp.
+"""
+import dataclasses
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro import api
+from repro.configs import get, PAPER_VARIANTS
+from repro.configs.base import Variant
+from repro.core import Forecaster, ShardingPlan, WorkloadModel, hardware
+from repro.engine import ForecastTwin, TraceEvent
+
+FIELDS = ("ops", "mem_rd", "mem_wr", "kv_rd", "kv_wr", "dispatches",
+          "wire_bytes")
+
+PAPER_SCENARIOS = [
+    ("bf16-bf16", 256), ("bf16-bf16", 2048), ("bf16-bf16", 8192),
+    ("bf16-int4", 32), ("bf16-int4", 2048),
+    ("bf16-int4-kv4", 2048),
+]
+
+
+# ---------------------------------------------------------------------------
+# pp=1 parity (bit-for-bit)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant,prompt", PAPER_SCENARIOS)
+def test_pp1_totals_bit_identical(variant, prompt):
+    arch, v = get("llama2-7b"), PAPER_VARIANTS[variant]
+    legacy = WorkloadModel(arch, v)
+    pp1 = WorkloadModel(arch, v, plan=ShardingPlan(pp=1))
+    for phase, a, b in (
+            ("prefill", legacy.prefill(1, prompt), pp1.prefill(1, prompt)),
+            ("decode", legacy.decode_step(1, prompt),
+             pp1.decode_step(1, prompt))):
+        ta, tb = a.totals(phase), b.totals(phase)
+        for f in FIELDS:
+            assert getattr(ta, f) == getattr(tb, f), (phase, f)
+    # pp=1 records no hops: the single "stage" IS the full workload
+    db = pp1.prefill(1, prompt)
+    stages = pp1.stage_totals(db, "prefill")
+    assert len(stages) == 1
+    for f in FIELDS:
+        assert getattr(stages[0], f) == getattr(db.totals("prefill"), f), f
+
+
+@pytest.mark.parametrize("variant,prompt", PAPER_SCENARIOS)
+def test_pp1_forecast_reports_bit_identical(variant, prompt):
+    base = api.Scenario(model="llama2-7b", variant=variant, batch=2,
+                        prompt_len=prompt, gen_len=64, chunk=256)
+    piped = dataclasses.replace(base, pp=1)
+    for hw in ("cpu", "v5e"):
+        a, b = api.forecast(base, hw), api.forecast(piped, hw)
+        assert (a.ttft_s, a.tpot_s, a.tps) == (b.ttft_s, b.tpot_s, b.tps)
+        assert a.phases == b.phases
+        assert (a.ttft_bound, a.tpot_bound) == (b.ttft_bound, b.tpot_bound)
+
+
+def test_pp1_twin_replay_bit_identical():
+    arch = get("llama2-7b")
+    trace = [
+        TraceEvent(kind="engine", chunk=64, n_steps=4),
+        TraceEvent(kind="prefill_chunk", rid=0, slot=0, chunk=64,
+                   past_len=0, last=True),
+        TraceEvent(kind="decode_block", n_steps=4, slots=((0, 64, 8),)),
+    ]
+    legacy = ForecastTwin(arch, hardware.TPU_V5E, Variant(), em=0.8)
+    pp1 = ForecastTwin(arch, hardware.TPU_V5E, Variant(), em=0.8,
+                       plan=ShardingPlan(pp=1))
+    a, b = legacy.replay(trace), pp1.replay(trace)
+    assert a.total_time == b.total_time
+    assert a.requests[0].ttft == b.requests[0].ttft
+
+
+# ---------------------------------------------------------------------------
+# pp>1 semantics: partition exactness + hop wire pricing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pp", [2, 4, 5])
+def test_stage_totals_partition_exactly(pp):
+    """Conservation: summed per-stage totals == whole-phase totals, every
+    field, bit-for-bit (each record belongs to exactly one stage)."""
+    wm = WorkloadModel(get("llama2-7b"), plan=ShardingPlan(pp=pp))
+    for phase, db in (("prefill", wm.prefill(2, 384)),
+                      ("decode", wm.decode_step(2, 384))):
+        stages = wm.stage_totals(db, phase)
+        assert len(stages) == pp
+        full = db.totals(phase)
+        for f in FIELDS:
+            assert sum(getattr(s, f) for s in stages) == pytest.approx(
+                getattr(full, f), rel=1e-12), (phase, f)
+
+
+def test_hop_wire_bytes_formula():
+    """Each of the pp-1 stage boundaries moves the full (ntok, d_model)
+    activation tensor: wire = ntok · d_model · act_bytes."""
+    arch = get("llama2-7b")
+    for pp, batch, prompt in ((2, 1, 128), (4, 2, 96)):
+        wm = WorkloadModel(arch, plan=ShardingPlan(pp=pp))
+        t = wm.prefill(batch, prompt).totals("prefill")
+        assert t.wire_bytes == pytest.approx(
+            (pp - 1) * batch * prompt * arch.d_model * 2)   # bf16 acts
+        d = wm.decode_step(batch, prompt).totals("decode")
+        assert d.wire_bytes == pytest.approx(
+            (pp - 1) * batch * arch.d_model * 2)
+    # pure-pp plans leave per-op work undivided: the full stack still
+    # runs once per token, just spread over stages
+    t1 = WorkloadModel(arch).prefill(1, 128).totals("prefill")
+    t2 = WorkloadModel(arch, plan=ShardingPlan(pp=2)).prefill(
+        1, 128).totals("prefill")
+    assert t2.ops == pytest.approx(t1.ops)
+
+
+def test_pp_forecast_prices_bubbles_and_wire():
+    scn = api.Scenario(model="llama2-7b", batch=2, prompt_len=2048,
+                       gen_len=64, chunk=256, pp=4)
+    r = api.forecast(scn, "v5e")
+    assert r.extras["pp"] == 4
+    assert r.extras["pp_microbatches"] == 8
+    assert r.extras["pp_bubble_fraction"] == pytest.approx(3 / 11)
+    assert r.extras["pp_hop_wire_bytes_per_step"] > 0
+    assert len(r.extras["pp_decode_stage_s"]) == 4
+    assert r.tpot_s == pytest.approx(max(r.extras["pp_decode_stage_s"]))
+    assert r.phases["decode"].wire_bytes > 0
+    # decode TPOT paced by the slowest of 4 half-size stages beats pp=1
+    r1 = api.forecast(dataclasses.replace(scn, pp=1), "v5e")
+    assert r.tpot_s < r1.tpot_s
+    assert r.ttft_s < r1.ttft_s
+    # a no-interconnect spec refuses to price the hops
+    lonely = hardware.HardwareSpec(name="lonely", tops=100.0, bw_gbps=500.0)
+    with pytest.raises(ValueError, match="interconnect"):
+        api.forecast(scn, lonely)
+
+
+def test_pp_must_not_exceed_layers():
+    with pytest.raises(ValueError, match="stage"):
+        WorkloadModel(get("llama2-7b"), plan=ShardingPlan(pp=64))
+
+
+def test_tp_pp_compose_in_forecast():
+    scn = api.Scenario(model="llama2-7b", batch=4, prompt_len=1024,
+                       gen_len=32, chunk=256, tp=4, pp=2)
+    r = api.forecast(scn, "v5e")
+    assert r.extras["tp"] == 4 and r.extras["pp"] == 2
+    # per-chip work divides by tp only; hop wire rides on top of the
+    # all-reduce wire
+    tp_only = api.forecast(dataclasses.replace(scn, pp=1), "v5e")
+    assert (r.phases["decode"].wire_bytes
+            > tp_only.phases["decode"].wire_bytes)
+
+
+def test_sweep_tp_pp_grid():
+    scn = api.Scenario(model="llama2-7b", prompt_len=512, gen_len=32)
+    reports = api.sweep(scn, ["v5e"], tp_degrees=[1, 2], pp_degrees=[1, 2])
+    plans = [(r.scenario["tp"], r.scenario["pp"]) for r in reports]
+    assert plans == [(1, 1), (1, 2), (2, 1), (2, 2)]
+    assert all(r.tps > 0 for r in reports)
+
+
+def test_pipeline_phase_math():
+    fc = Forecaster(hardware.TPU_V5E)
+    wm = WorkloadModel(get("llama2-7b"), plan=ShardingPlan(pp=4))
+    stages = wm.stage_totals(wm.prefill(1, 1024), "prefill")
+    one = fc.pipeline_phase(stages, 1)
+    lats = [fc.phase(s).latency for s in stages]
+    # m=1: no overlap — the pipeline degenerates to the stage sum
+    assert one.latency == pytest.approx(sum(lats))
+    # m→∞ approaches the no-bubble bound max(sum/m·m, ...) = sum·(1+ε)
+    many = fc.pipeline_phase(stages, 1024)
+    assert sum(lats) / 4 < many.latency < one.latency
+    # twin pp model: hops priced, stages sequential (no bubble division)
+    tw = ForecastTwin(get("llama2-7b"), hardware.TPU_V5E, Variant(),
+                      plan=ShardingPlan(pp=2))
+    t1 = ForecastTwin(get("llama2-7b"), hardware.TPU_V5E,
+                      Variant()).decode_step_latency([256])
+    assert tw.decode_step_latency([256]) > t1
+
+
+def test_bubble_fraction_monotone():
+    pytest.importorskip(
+        "hypothesis",
+        reason="optional dev dependency (pip install hypothesis)")
+    from hypothesis import given, settings, strategies as st
+    fc = Forecaster
+
+    @settings(max_examples=30, deadline=None)
+    @given(pp=st.integers(1, 32), m=st.integers(1, 256))
+    def prop(pp, m):
+        b = fc.pipeline_bubble_fraction(pp, m)
+        assert 0.0 <= b < 1.0
+        assert fc.pipeline_bubble_fraction(pp + 1, m) >= b   # deeper: worse
+        assert fc.pipeline_bubble_fraction(pp, m + 1) <= b   # more µbatches
+        assert fc.pipeline_bubble_fraction(1, m) == 0.0
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# engine under a pipe mesh axis
+# ---------------------------------------------------------------------------
+
+def test_engine_rejects_undividable_layers():
+    if jax.device_count() < 3:
+        pytest.skip("needs >= 3 devices")
+    from repro.engine import Engine, EngineConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import init_params
+    from repro.runtime import ShardingPolicy
+    from repro import configs
+    cfg = configs.reduced(configs.get("qwen2-7b"))          # n_layers=2
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    mesh = make_host_mesh(pipe=3)
+    with pytest.raises(ValueError, match="divide"), mesh:
+        Engine(cfg, params, mesh, ShardingPolicy(),
+               EngineConfig(max_slots=1, max_len=32, chunk_size=8,
+                            decode_block=2))
+
+
+def test_measure_rejects_oversized_mesh():
+    scn = api.Scenario(model="qwen2-7b", reduced=True, prompt_len=8,
+                       gen_len=2, tp=jax.device_count(), pp=2)
+    with pytest.raises(ValueError, match="devices"):
+        api.measure(scn)
+
+
+@pytest.mark.skipif(jax.device_count() < 4,
+                    reason="needs >= 4 devices (XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+@pytest.mark.parametrize("impl", ["gather", "paged"])
+def test_pp_tokens_identical_inprocess(impl):
+    from repro.engine import Engine, EngineConfig, Request
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import init_params
+    from repro.runtime import ShardingPolicy
+    from repro import configs
+    cfg = configs.reduced(configs.get("qwen2-7b"), n_heads=4, n_kv_heads=4)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[int(7 * i + j) % cfg.vocab_size for j in range(12)]
+               for i in range(3)]
+
+    def run(tp, pp):
+        mesh = make_host_mesh(model=tp, pipe=pp)
+        with mesh:
+            eng = Engine(cfg, params, mesh, ShardingPolicy(),
+                         EngineConfig(max_slots=2, max_len=48, chunk_size=8,
+                                      decode_block=2, attn_impl=impl))
+            res = eng.run([Request(rid=i, prompt=p, max_new=5)
+                           for i, p in enumerate(prompts)])
+        return [r.tokens for r in res], eng
+
+    ref, _ = run(1, 1)
+    t2, eng2 = run(1, 2)
+    t22, eng22 = run(2, 2)
+    assert t2 == ref
+    assert t22 == ref
+    assert eng2.pp == 2 and eng2.tp == 1
+    assert eng22.pp == 2 and eng22.tp == 2
+    assert eng2.trace[0].kind == "engine" and eng2.trace[0].pp == 2
+
+
+@pytest.mark.skipif(jax.device_count() < 4,
+                    reason="needs >= 4 devices (XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_measure_pp_reports_and_twin_replay():
+    scn = api.Scenario(model="qwen2-7b", reduced=True, batch=2,
+                       prompt_len=16, gen_len=4, chunk=8, n_requests=3,
+                       tp=2, pp=2)
+    m = api.measure(scn)
+    assert m.extras["tp"] == 2 and m.extras["pp"] == 2
+    assert m.trace[0].pp == 2
+    f = api.forecast(scn, "v5e", trace=m.trace)
+    assert f.extras["pp"] == 2
+    assert f.phases["decode"].wire_bytes > 0
+    assert f.tps > 0
+
+
+# ---------------------------------------------------------------------------
+# always-on coverage: fresh interpreter with 8 forced host devices
+# ---------------------------------------------------------------------------
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")   # never probe TPU/GPU here
+import jax
+from repro import configs
+from repro.engine import Engine, EngineConfig, Request
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params
+from repro.runtime import ShardingPolicy
+
+cfg = configs.reduced(configs.get("qwen2-7b"), n_heads=4, n_kv_heads=4)
+params = init_params(cfg, jax.random.PRNGKey(0))
+prompts = [[(7 * i + j) % cfg.vocab_size for j in range(12)]
+           for i in range(3)]
+
+def run(tp, pp, impl):
+    mesh = make_host_mesh(model=tp, pipe=pp)
+    with mesh:
+        eng = Engine(cfg, params, mesh, ShardingPolicy(),
+                     EngineConfig(max_slots=2, max_len=48, chunk_size=8,
+                                  decode_block=2, attn_impl=impl))
+        res = eng.run([Request(rid=i, prompt=p, max_new=5)
+                       for i, p in enumerate(prompts)])
+    return [r.tokens for r in res]
+
+ref = run(1, 1, "gather")
+assert run(1, 2, "gather") == ref, "gather pp=2 diverged"
+assert run(2, 2, "gather") == ref, "gather tp2xpp2 diverged"
+assert run(1, 2, "paged") == ref, "paged pp=2 diverged"
+assert run(2, 2, "paged") == ref, "paged tp2xpp2 diverged"
+print("OK", ref[0][:3])
+"""
+
+
+@pytest.mark.slow
+def test_pp_tokens_identical_subprocess():
+    r = subprocess.run([sys.executable, "-c", _SUBPROC],
+                       capture_output=True, text=True, timeout=560,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert r.stdout.startswith("OK")
