@@ -1,7 +1,6 @@
 """Shared helpers for the paper-table benchmarks."""
-from repro.core import WorkloadModel, Forecaster, hardware
+from repro.core import WorkloadModel
 from repro.configs import get, PAPER_VARIANTS
-from repro.configs.base import Variant
 
 LLAMA2 = get("llama2-7b")
 

@@ -229,6 +229,7 @@ def rows():
                                "tpu-v5e", em=0.8, trace=measured.trace)
                for i in ("gather", "paged")}
         delta = api.compare(cpu, measured)
+        host_delta = api.compare(host, measured)
         derived = {
             "requests": n_req, "slots": slots, "attn_impl": impl, "tp": tp,
             "pp": pp,
@@ -241,7 +242,7 @@ def rows():
             # calibrated-host twin: same trace on the machine underfoot
             "forecast_tps_host": round(host.tps, 1),
             "forecast_error_host": round(
-                (host.tps - measured.tps) / measured.tps, 3),
+                host_delta.forecast_error["tps"], 3),
             "forecast_tps_v5e_gather": round(v5e["gather"].tps, 1),
             "forecast_tps_v5e_paged": round(v5e["paged"].tps, 1),
             # the kernel's forecast win over the gather path on the target
@@ -311,6 +312,8 @@ def bench_artifact(rows_out):
             "forecast_tps_v5e_paged": d["forecast_tps_v5e_paged"],
             "forecast_paged_speedup_v5e": d["forecast_paged_speedup_v5e"],
         }
+    errs = {name: s["forecast_error_host"] for name, s in settings.items()
+            if s.get("forecast_error_host") is not None}
     return {
         "benchmark": "engine_throughput",
         "arch": ARCH,
@@ -321,6 +324,16 @@ def bench_artifact(rows_out):
         "settings": settings,
         "spec": spec,
         "traffic": traffic,
+        # first-class forecast-accuracy summary for the calibrated host
+        # spec: signed per-setting TPS error plus the scalar the CI
+        # regression gate tracks across BENCH_history entries
+        "forecast_error": {
+            "hardware": "host-cpu",
+            "metric": "tps",
+            "per_setting": errs,
+            "worst_abs": (round(max(abs(e) for e in errs.values()), 3)
+                          if errs else None),
+        },
     }
 
 

@@ -3,7 +3,6 @@ placeholders (idempotent: re-run after regenerating artifacts)."""
 import glob
 import json
 import os
-import re
 
 
 def load(mesh, art_dir="artifacts/dryrun"):

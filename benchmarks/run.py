@@ -45,6 +45,46 @@ MODULES = [
 ]
 
 
+def _previous_payload(hist_path: str, modname: str):
+    """Last BENCH_history entry for ``modname``, or None."""
+    if not os.path.exists(hist_path):
+        return None
+    prev = None
+    with open(hist_path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if rec.get("module") == modname:
+                prev = rec
+    return prev
+
+
+def _forecast_error_regression(prev, payload):
+    """Error message if the calibrated-host forecast error regressed vs
+    the previous BENCH_history entry, else None.
+
+    The gate compares ``forecast_error.worst_abs`` (largest |signed TPS
+    error| across settings on the ``host-cpu`` spec) and tolerates noise:
+    fail only when the new worst error exceeds the previous by more than
+    25% relative AND 2 percentage points absolute.
+    """
+    new = (payload.get("forecast_error") or {}).get("worst_abs")
+    old = ((prev or {}).get("forecast_error") or {}).get("worst_abs")
+    if new is None or old is None:
+        return None
+    if new > old * 1.25 and new > old + 0.02:
+        return (f"forecast error regressed on {payload.get('benchmark')}: "
+                f"worst |rel err| {old:.3f} -> {new:.3f} on "
+                f"{payload['forecast_error'].get('hardware')} "
+                f"(prev sha {prev.get('git_sha')})")
+    return None
+
+
 def _git_sha() -> str:
     try:
         out = subprocess.run(
@@ -64,6 +104,10 @@ def main() -> None:
                     help="comma-separated module subset (same as positional)")
     ap.add_argument("--artifact-dir", default=".",
                     help="where BENCH_*.json artifacts are written")
+    ap.add_argument("--gate-forecast-error", action="store_true",
+                    help="exit nonzero if a module's calibrated-host "
+                         "forecast error regressed vs its previous "
+                         "BENCH_history.jsonl entry (the CI accuracy gate)")
     args = ap.parse_args()
     only = list(args.modules)
     if args.only:
@@ -76,6 +120,7 @@ def main() -> None:
                   f"known: {', '.join(MODULES)}", file=sys.stderr)
             sys.exit(2)
     failed = []
+    regressions = []
     print("name,us_per_call,derived")
     for modname in MODULES:
         if only and modname not in only:
@@ -103,6 +148,12 @@ def main() -> None:
                 f.write("\n")
             print(f"wrote {path}", file=sys.stderr)
             hist = os.path.join(args.artifact_dir, "BENCH_history.jsonl")
+            prev = _previous_payload(hist, modname)
+            msg = _forecast_error_regression(prev, payload)
+            if msg:
+                print(msg, file=sys.stderr)
+                if args.gate_forecast_error:
+                    regressions.append(msg)
             record = {
                 "date": datetime.datetime.now(
                     datetime.timezone.utc).isoformat(timespec="seconds"),
@@ -117,6 +168,10 @@ def main() -> None:
         print(f"{len(failed)} benchmark module(s) failed: "
               f"{', '.join(failed)}", file=sys.stderr)
         sys.exit(1)
+    if regressions:
+        print(f"{len(regressions)} forecast-error regression(s) — see "
+              f"above", file=sys.stderr)
+        sys.exit(3)
 
 
 if __name__ == "__main__":

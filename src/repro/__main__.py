@@ -243,12 +243,15 @@ def _print_report(r: api.Report) -> None:
 def _print_delta(d: api.ReportDelta) -> None:
     print(f"{d.model} · {d.variant}:  forecast[{d.forecast_hw}] vs "
           f"measured[{d.measured_hw}]")
-    print(f"  {'metric':8s}{'forecast':>14s}{'measured':>14s}{'ratio':>9s}")
+    print(f"  {'metric':8s}{'forecast':>14s}{'measured':>14s}{'ratio':>9s}"
+          f"{'rel err':>9s}")
     for name, m, unit in (("TTFT", d.ttft, "ms"), ("TPOT", d.tpot, "ms"),
                           ("TPS", d.tps, "tok/s")):
         scale = 1e3 if unit == "ms" else 1.0
         print(f"  {name:8s}{m.forecast * scale:12.3f} {unit:<3s}"
-              f"{m.measured * scale:10.3f} {unit:<3s}{m.ratio:9.2f}")
+              f"{m.measured * scale:10.3f} {unit:<3s}{m.ratio:9.2f}"
+              f"{m.rel_err:+9.1%}")
+    print(f"  worst |rel err|: {d.worst_abs_error:.1%}")
 
 
 def _emit(obj, as_json: bool, printer) -> None:
@@ -332,6 +335,40 @@ def _cmd_compare(args) -> int:
     return 0
 
 
+def _parse_perturb(items) -> dict:
+    out = {}
+    for item in items or []:
+        if "=" not in item:
+            raise ValueError(f"--perturb expects CLASS=FACTOR, got {item!r}")
+        cls, factor = item.split("=", 1)
+        out[cls.strip()] = float(factor)
+    return out
+
+
+def _cmd_audit(args) -> int:
+    # the sharded target needs host devices BEFORE jax initializes its
+    # backend (the count is locked at first device use)
+    if not args.no_multidevice:
+        from repro.launch.mesh import ensure_host_device_count
+        ensure_host_device_count(args.sharded_tp * args.sharded_pp)
+    from repro import analysis
+    cfg = analysis.AuditConfig(
+        arch=args.model, reduced=args.reduced,
+        perturb=_parse_perturb(args.perturb),
+        tol=analysis.Tolerances(matmul_rtol=args.tol_matmul,
+                                wire_rtol=args.tol_wire,
+                                unpriced_share=args.unpriced_share),
+        run_engine=not args.skip_engine,
+        sharded_tp=1 if args.no_multidevice else args.sharded_tp,
+        sharded_pp=1 if args.no_multidevice else args.sharded_pp)
+    report = analysis.run_audit(cfg)
+    if args.json:
+        print(json.dumps(report.to_dict(), indent=1))
+    else:
+        print(analysis.format_report(report, verbose=args.verbose))
+    return report.exit_code(strict=args.strict)
+
+
 def _cmd_hardware(args) -> int:
     print(f"{'name':26s}{'compute':>13s}{'mem bw':>14s}{'interconnect':>17s}")
     for name in hardware.list():
@@ -406,6 +443,44 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("measured", help="measured report JSON path")
     p.add_argument("--json", action="store_true")
     p.set_defaults(fn=_cmd_compare)
+
+    p = sub.add_parser(
+        "audit",
+        help="static audit: lint the analytical DSL, reconcile compiled "
+        "engine HLO against WorkloadModel pricing, check compile hygiene")
+    p.add_argument("--model", default="qwen2-7b",
+                   help="architecture to audit (default: qwen2-7b)")
+    p.add_argument("--full-size", action="store_false", dest="reduced",
+                   help="audit the full-size config (slow compiles; "
+                   "default audits the reduced config)")
+    p.add_argument("--strict", action="store_true",
+                   help="exit nonzero on warnings too (CI gate mode)")
+    p.add_argument("--json", action="store_true")
+    p.add_argument("--verbose", action="store_true",
+                   help="also print info-severity findings")
+    p.add_argument("--perturb", action="append", metavar="CLASS=FACTOR",
+                   help="scale an analytical op-class total before "
+                   "reconciliation (mutation test: a perturbed audit "
+                   "MUST fail); repeatable")
+    p.add_argument("--skip-engine", action="store_true",
+                   help="skip the execution-based retrace pass (keeps the "
+                   "audit fully static)")
+    p.add_argument("--no-multidevice", action="store_true",
+                   help="skip the sharded tp×pp target (single device)")
+    p.add_argument("--sharded-tp", type=int, default=2, dest="sharded_tp",
+                   help="tensor-parallel degree of the sharded target")
+    p.add_argument("--sharded-pp", type=int, default=2, dest="sharded_pp",
+                   help="pipeline-parallel degree of the sharded target")
+    p.add_argument("--tol-matmul", type=float, default=0.15,
+                   dest="tol_matmul",
+                   help="relative tolerance of the dot-vs-gemm+bmm check")
+    p.add_argument("--tol-wire", type=float, default=0.5, dest="tol_wire",
+                   help="relative tolerance of the collective wire check")
+    p.add_argument("--unpriced-share", type=float, default=0.02,
+                   dest="unpriced_share",
+                   help="module flops/bytes share above which an HLO op "
+                   "family must have an analytical counterpart")
+    p.set_defaults(fn=_cmd_audit)
 
     p = sub.add_parser("hardware", help="list known hardware specs")
     p.set_defaults(fn=_cmd_hardware)

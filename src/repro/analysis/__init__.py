@@ -1,0 +1,33 @@
+"""Static audit subsystem: does the compiled engine match its analytical
+twin, and is the analytical DSL internally consistent?
+
+Three passes over the SAME source of truth the forecaster prices:
+
+* :mod:`repro.analysis.lint` — declarative rules over the analytical
+  OpRecord DSL (closed op-class vocabulary, conservation laws, the
+  affine-decode identity);
+* :mod:`repro.analysis.pricing` — jit-lower + compile (never execute)
+  the engine's hot paths and reconcile XLA's emitted FLOPs / bytes /
+  collective wire against the matching ``WorkloadModel`` records;
+* :mod:`repro.analysis.hygiene` — donation aliasing of the KV pool and
+  jit retrace detection over a mixed-length engine run.
+
+Entry points: :func:`run_audit` (library),
+``python -m repro audit [--json] [--strict]`` (CLI / CI gate).
+"""
+from .findings import AuditReport, Finding, Severity
+from .audit import AuditConfig, default_targets, format_report, run_audit
+from .pricing import (AuditGeometry, CompiledTarget, PricingTarget,
+                      Tolerances, lower_target, reconcile, run_pricing)
+from .lint import (lint_affine_decode, lint_dtypes, lint_model, lint_plan,
+                   lint_records, lint_stage_conservation)
+from .hygiene import audit_donation, audit_retrace
+
+__all__ = [
+    "AuditConfig", "AuditGeometry", "AuditReport", "CompiledTarget",
+    "Finding", "PricingTarget", "Severity", "Tolerances",
+    "audit_donation", "audit_retrace", "default_targets", "format_report",
+    "lint_affine_decode", "lint_dtypes", "lint_model", "lint_plan",
+    "lint_records", "lint_stage_conservation", "lower_target",
+    "reconcile", "run_audit", "run_pricing",
+]

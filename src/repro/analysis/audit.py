@@ -1,0 +1,124 @@
+"""Audit orchestrator: lint + pricing cross-check + compile hygiene.
+
+``run_audit`` is what ``python -m repro audit`` and the CI gate call: it
+builds the default target matrix for the host's device count, runs the
+three passes and returns one :class:`AuditReport`.  A clean tree emits
+only info-severity findings; ``--strict`` (the CI mode) also fails on
+warnings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro import configs
+from repro.core.operators import OP_CLASSES
+from repro.core.workload import ShardingPlan, WorkloadModel
+
+from repro.configs.base import Variant
+
+from . import hygiene, lint, pricing
+from .findings import AuditReport, Severity
+
+
+@dataclasses.dataclass
+class AuditConfig:
+    arch: str = "qwen2-7b"
+    reduced: bool = True               # CPU-sized config (audit default)
+    variant: str = "bf16-bf16"
+    tol: pricing.Tolerances = dataclasses.field(
+        default_factory=pricing.Tolerances)
+    geom: pricing.AuditGeometry = dataclasses.field(
+        default_factory=pricing.AuditGeometry)
+    #: analytical op-class scale factors applied before reconciliation —
+    #: the mutation-test hook; a non-empty dict MUST produce an error
+    perturb: Dict[str, float] = dataclasses.field(default_factory=dict)
+    targets: Optional[Sequence[pricing.PricingTarget]] = None
+    run_engine: bool = True            # execution-based retrace pass
+    #: sharded plan to audit when the host exposes enough devices
+    sharded_tp: int = 2
+    sharded_pp: int = 2
+
+
+def default_targets(cfg: AuditConfig) -> List[pricing.PricingTarget]:
+    """Single-chip matrix plus one sharded decode target when the host
+    exposes ``sharded_tp × sharded_pp`` devices (the CLI raises the host
+    device count before jax initializes)."""
+    import jax
+    targets = list(pricing.DEFAULT_TARGETS)
+    # pure-tp plan: the only sharded case where collective wire bytes are
+    # strictly gated (pp>1 adds unpriced GSPMD stage resharding)
+    if cfg.sharded_tp > 1 and jax.device_count() >= cfg.sharded_tp:
+        targets.append(pricing.PricingTarget(
+            "decode", "gather", tp=cfg.sharded_tp, pp=1))
+    need = cfg.sharded_tp * cfg.sharded_pp
+    if need > 1 and jax.device_count() >= need:
+        targets.append(pricing.PricingTarget(
+            "decode", "gather", tp=cfg.sharded_tp, pp=cfg.sharded_pp))
+    return targets
+
+
+def run_audit(cfg: Optional[AuditConfig] = None) -> AuditReport:
+    cfg = cfg or AuditConfig()
+    for cls in cfg.perturb:
+        if cls not in OP_CLASSES:
+            raise ValueError(f"--perturb class {cls!r} is not an operator "
+                             f"class; known: {sorted(OP_CLASSES)}")
+    arch = configs.get(cfg.arch)
+    if cfg.reduced:
+        arch = configs.reduced(arch)
+    variant = configs.PAPER_VARIANTS.get(cfg.variant, Variant())
+    report = AuditReport(meta={
+        "arch": cfg.arch, "reduced": cfg.reduced,
+        "perturb": dict(cfg.perturb),
+        "tolerances": dataclasses.asdict(cfg.tol)})
+
+    # ---- pass 1: operator-DSL lint (pure analytical, no jax) -----------
+    wm = WorkloadModel(arch, variant)
+    db = wm.prefill(1, cfg.geom.chunk_size)
+    wm.decode_step(2, cfg.geom.l_virt - 1, db=db)
+    report.extend(lint.lint_model(wm, db, phase=None))
+    # stage conservation under an actual multi-stage plan
+    pp = min(cfg.sharded_pp, len(arch.block_kinds()))
+    wm_pp = WorkloadModel(arch, variant, plan=ShardingPlan(pp=pp))
+    db_pp = wm_pp.decode_step(2, cfg.geom.l_virt - 1)
+    report.extend(lint.lint_stage_conservation(wm_pp, db_pp, "decode"))
+
+    # ---- pass 2: pricing cross-check (compile, never execute) ----------
+    targets = (list(cfg.targets) if cfg.targets is not None
+               else default_targets(cfg))
+    price_findings, compiled = pricing.run_pricing(
+        arch, targets, tol=cfg.tol, perturb=cfg.perturb, geom=cfg.geom)
+    report.extend(price_findings)
+    report.meta["targets"] = [ct.target.name for ct in compiled]
+    report.meta["compile_s"] = round(
+        sum(ct.compile_s for ct in compiled), 2)
+
+    # ---- pass 3: compile hygiene ---------------------------------------
+    for ct in compiled:
+        report.extend(hygiene.audit_donation(ct))
+    if cfg.run_engine:
+        report.extend(hygiene.audit_retrace(arch))
+    return report
+
+
+def format_report(report: AuditReport, verbose: bool = False) -> str:
+    """Human-readable rendering (the non-``--json`` CLI output)."""
+    lines: List[str] = []
+    meta = report.meta
+    lines.append(
+        f"audit: {meta.get('arch')}"
+        f"{' (reduced)' if meta.get('reduced') else ''} — "
+        f"{len(meta.get('targets', []))} compiled targets in "
+        f"{meta.get('compile_s', 0)} s")
+    if meta.get("perturb"):
+        lines.append(f"  perturbed classes: {meta['perturb']}")
+    counts = report.counts()
+    for f in report.findings:
+        if f.severity == Severity.INFO and not verbose:
+            continue
+        lines.append(f"  [{f.severity}] {f.code}: {f.message}")
+    lines.append(
+        f"  {counts['error']} error(s), {counts['warning']} warning(s), "
+        f"{counts['info']} info")
+    return "\n".join(lines)

@@ -173,12 +173,30 @@ class ReportDelta:
     tpot: MetricDelta
     tps: MetricDelta
 
+    @property
+    def forecast_error(self) -> Dict[str, float]:
+        """Signed relative forecast error per metric — the paper's
+        accuracy quantity ((forecast − measured) / measured), tracked
+        per-setting in BENCH_history and gated in CI."""
+        return {"ttft": self.ttft.rel_err, "tpot": self.tpot.rel_err,
+                "tps": self.tps.rel_err}
+
+    @property
+    def worst_abs_error(self) -> float:
+        """Largest |relative error| across the three metrics — the scalar
+        the CI regression gate compares between runs."""
+        finite = [abs(e) for e in self.forecast_error.values()
+                  if e == e and abs(e) != float("inf")]
+        return max(finite) if finite else float("inf")
+
     def to_dict(self) -> dict:
         return {
             "model": self.model, "variant": self.variant,
             "forecast_hw": self.forecast_hw, "measured_hw": self.measured_hw,
             "ttft": self.ttft.to_dict(), "tpot": self.tpot.to_dict(),
             "tps": self.tps.to_dict(),
+            "forecast_error": self.forecast_error,
+            "worst_abs_error": self.worst_abs_error,
         }
 
 

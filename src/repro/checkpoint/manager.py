@@ -90,7 +90,7 @@ class CheckpointManager:
                 f"checkpoint has {len(manifest['leaves'])} leaves, "
                 f"expected {len(leaves)} — incompatible tree")
         import jax.numpy as jnp
-        import ml_dtypes  # registers bf16/fp8 numpy extension dtypes
+        import ml_dtypes  # noqa: F401 — registers bf16/fp8 numpy dtypes
         restored = []
         for i, (leaf, meta) in enumerate(zip(leaves, manifest["leaves"])):
             raw = data[meta["key"]]

@@ -10,7 +10,6 @@ Beyond the paper (§7 leaves these to future work — see DESIGN.md §5):
 """
 from __future__ import annotations
 
-from math import ceil
 from typing import Optional
 
 from . import operators as F

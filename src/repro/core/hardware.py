@@ -28,6 +28,29 @@ class HardwareSpec:
     ici_links: int = 0               # links per chip (e.g. v5e 2D torus: 4)
     hbm_bytes: float = 0.0           # HBM capacity per chip
 
+    def __post_init__(self):
+        """Reject physically meaningless specs at construction.
+
+        A zero/negative peak rate silently turns every roofline forecast
+        into 0 or ∞, which then propagates through sweeps and BENCH
+        artifacts — fail here instead, with the offending field named.
+        """
+        if not isinstance(self.name, str) or not self.name.strip():
+            raise ValueError("HardwareSpec.name must be a non-empty string")
+        for field in ("tops", "bw_gbps"):
+            v = getattr(self, field)
+            if v is None or not v > 0:
+                raise ValueError(
+                    f"HardwareSpec.{field} must be > 0, got {v!r} "
+                    f"(spec {self.name!r})")
+        for field in ("dispatch_latency_s", "onchip_bytes",
+                      "interconnect_GBps", "ici_links", "hbm_bytes"):
+            v = getattr(self, field)
+            if v is None or v < 0:
+                raise ValueError(
+                    f"HardwareSpec.{field} must be >= 0, got {v!r} "
+                    f"(spec {self.name!r})")
+
     @property
     def flops(self) -> float:
         return self.tops * 1e12

@@ -31,8 +31,13 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
 
 # e.g. ``%all-reduce.1 = f32[64,256]{1,0} all-reduce(%dot.1), ...``
 #      ``... = (f32[8]{0}, f32[8]{0}) all-reduce(...)`` (tuple results)
+# The shapes group must also admit layout/annotation-bearing types emitted
+# by newer XLA — tiled layouts ``{1,0:T(8,128)}``, memory-space suffixes
+# ``S(1)``, and sharding annotations such as ``maximal device=0`` — which
+# contain ``:``, ``(``, ``)``, ``=`` and uppercase letters.  The op-name
+# alternation anchors the match, so the broader class cannot overrun it.
 _OP_RE = re.compile(
-    r"=\s*(?P<shapes>\(?[a-z0-9\[\],{}\s]*\)?)\s*"
+    r"=\s*(?P<shapes>\(?[a-zA-Z0-9\[\],{}():=\s]*\)?)\s*"
     r"(?P<op>all-reduce-start|all-gather-start|collective-permute-start|"
     r"all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
     r"\(", re.IGNORECASE)
@@ -163,6 +168,14 @@ def count_ops(hlo_text: str, names: List[str]) -> Dict[str, int]:
 #              excluded: internal values live in registers/VMEM)
 #   * wire   — collective wire bytes (same conventions as parse_collectives)
 
+#: layout/annotation suffixes inside brace groups — tiled layouts
+#: ``{1,0:T(8,128)}`` and memory-space tags ``{1,0:T(8,128)S(1)}`` from
+#: newer XLA.  The embedded ``T(`` / ``S(`` would otherwise satisfy
+#: ``_INSTR_RE``'s op-name-followed-by-paren group and shadow the real
+#: opcode, silently dropping the instruction (collectives included) from
+#: the analysis — normalize to the bare dims ``{1,0}`` before parsing.
+_LAYOUT_ANNOT_RE = re.compile(r"\{([\d,\s]*):[^{}]*\}")
+
 _HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{")
 _INSTR_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s*"
@@ -242,13 +255,42 @@ class ModuleCost:
     collective_wire: Dict[str, float]
     collective_counts: Dict[str, int]
     unknown_trip_loops: int          # loops lacking known_trip_count
+    #: trip-folded FLOPs per HLO op family (``dot``, ``add``, ``fusion``…) —
+    #: what the static auditor reconciles op-class-by-op-class against the
+    #: analytical records (dot ↔ gemm/bmm being the load-bearing pair)
+    flops_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: trip-folded boundary bytes per HLO op family
+    bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: ring-convention wire ELEMENTS per collective kind — the
+    #: dtype-independent twin of ``collective_wire``.  Backends may widen
+    #: on-wire dtypes relative to the serving deployment (XLA:CPU
+    #: legalizes bf16 compute to f32), so reconciling wire traffic against
+    #: an analytical model priced at serving dtype must compare elements
+    #: (or elements × serving bytes/el), not raw module bytes.
+    collective_wire_elements: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def wire_elements(self) -> float:
+        return sum(self.collective_wire_elements.values())
+
+    @property
+    def dot_flops(self) -> float:
+        """FLOPs of matmul-family ops (dot + convolution) — the exact,
+        dtype-independent quantity both XLA and the analytical model count
+        the same way (2·m·k·n up to the −mn accumulator term)."""
+        return (self.flops_by_op.get("dot", 0.0)
+                + self.flops_by_op.get("convolution", 0.0))
 
     def as_dict(self):
         return {"flops": self.flops, "bytes": self.bytes,
                 "wire_bytes": self.wire_bytes,
                 "collective_wire": self.collective_wire,
                 "collective_counts": self.collective_counts,
-                "unknown_trip_loops": self.unknown_trip_loops}
+                "unknown_trip_loops": self.unknown_trip_loops,
+                "flops_by_op": self.flops_by_op,
+                "bytes_by_op": self.bytes_by_op,
+                "collective_wire_elements": self.collective_wire_elements}
 
 
 def analyze(hlo_text: str, n_devices: int = 1,
@@ -283,7 +325,7 @@ def analyze(hlo_text: str, n_devices: int = 1,
         instrs = []
         symtab: Dict[str, str] = {}
         for line in lines:
-            m = _INSTR_RE.match(line)
+            m = _INSTR_RE.match(_LAYOUT_ANNOT_RE.sub(r"{\1}", line))
             if not m:
                 continue
             iname, rtype, op, rest = m.groups()
@@ -376,8 +418,15 @@ def analyze(hlo_text: str, n_devices: int = 1,
     # ---- pass 4: accumulate costs ---------------------------------------
     flops = 0.0
     bytes_ = 0.0
+    fby: Dict[str, float] = {}
+    bby: Dict[str, float] = {}
     wire: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    welems: Dict[str, float] = {}
     counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+
+    def _acc(d: Dict[str, float], key: str, v: float) -> None:
+        d[key] = d.get(key, 0.0) + v
+
     for cname, (instrs, symtab) in parsed.items():
         m_here = mult.get(cname, 0.0)
         if m_here == 0.0 or cname in reducer_bodies:
@@ -397,15 +446,21 @@ def analyze(hlo_text: str, n_devices: int = 1,
                     for ci in mc.group(1).split(","):
                         if ci.strip() and int(ci) < len(lhs_dims):
                             contract *= lhs_dims[int(ci)]
-                flops += m_here * 2.0 * ops_n * contract
+                f = m_here * 2.0 * ops_n * contract
+                flops += f
+                _acc(fby, "dot", f)
             elif op in _ELEMENTWISE_FLOP_OPS and not in_fusion:
-                flops += m_here * _type_numel(rtype)
+                f = m_here * _type_numel(rtype)
+                flops += f
+                _acc(fby, op, f)
             elif op in _ELEMENTWISE_FLOP_OPS and in_fusion and op != "fusion":
                 # fusion internals: count arithmetic, not memory
                 if op in ("add", "multiply", "subtract", "divide",
                           "exponential", "tanh", "logistic", "rsqrt",
                           "power", "maximum", "minimum", "log"):
-                    flops += m_here * _type_numel(rtype)
+                    f = m_here * _type_numel(rtype)
+                    flops += f
+                    _acc(fby, op, f)
                 continue
             if in_fusion:
                 continue
@@ -414,13 +469,19 @@ def analyze(hlo_text: str, n_devices: int = 1,
                 # in-place: update operand read + written (+ indices)
                 refs = _OPERAND_RE.findall(rest)
                 upd = symtab.get(refs[1], "") if len(refs) > 1 else ""
-                bytes_ += m_here * 2.0 * _type_bytes(upd)
+                b = m_here * 2.0 * _type_bytes(upd)
+                bytes_ += b
+                _acc(bby, op, b)
             elif op in ("dynamic-slice", "gather"):
-                bytes_ += m_here * 2.0 * _type_bytes(rtype)
+                b = m_here * 2.0 * _type_bytes(rtype)
+                bytes_ += b
+                _acc(bby, op, b)
             elif op == "scatter":
                 refs = _OPERAND_RE.findall(rest)
                 upd = symtab.get(refs[-1], "") if refs else ""
-                bytes_ += m_here * 2.0 * _type_bytes(upd)
+                b = m_here * 2.0 * _type_bytes(upd)
+                bytes_ += b
+                _acc(bby, op, b)
             elif op == "fusion":
                 callee = _CALLS_RE.search(line)
                 cal = callee.group(1) if callee else ""
@@ -435,39 +496,48 @@ def analyze(hlo_text: str, n_devices: int = 1,
                 if cal in dus_root_update_bytes:
                     # in-place buffer update: result aliases the buffer —
                     # charge the written window, not the whole result
-                    bytes_ += m_here * (opbytes + dus_root_update_bytes[cal])
+                    b = m_here * (opbytes + dus_root_update_bytes[cal])
                 else:
-                    bytes_ += m_here * (opbytes + _type_bytes(rtype))
+                    b = m_here * (opbytes + _type_bytes(rtype))
+                bytes_ += b
+                _acc(bby, op, b)
             elif op in _BYTE_OPS:
                 opbytes = 0.0
                 for ref in _OPERAND_RE.findall(rest.split(" calls=")[0]):
                     if ref in symtab:
                         opbytes += _operand_bytes(symtab[ref])
-                bytes_ += m_here * (opbytes + _type_bytes(rtype))
+                b = m_here * (opbytes + _type_bytes(rtype))
+                bytes_ += b
+                _acc(bby, op, b)
             # ---- collectives --------------------------------------------
             base_op = op.replace("-start", "")
             if base_op in _COLLECTIVES:
                 nb = _type_bytes(rtype)
+                ne = _type_numel(rtype)
                 if op.endswith("-start"):
                     nb /= 2.0          # (operand, result) tuple type
+                    ne /= 2.0
                 g = _group_size(line, n_devices)
                 if g > 1:
                     if base_op == "all-reduce":
-                        w = nb * 2.0 * (g - 1) / g
+                        ring = 2.0 * (g - 1) / g
                     elif base_op == "all-gather":
-                        w = nb * (g - 1) / g
+                        ring = (g - 1) / g
                     elif base_op == "reduce-scatter":
-                        w = nb * (g - 1)
+                        ring = float(g - 1)
                     elif base_op == "all-to-all":
-                        w = nb * (g - 1) / g
+                        ring = (g - 1) / g
                     else:
-                        w = nb
-                    wire[base_op] += m_here * w
+                        ring = 1.0
+                    wire[base_op] += m_here * nb * ring
+                    _acc(welems, base_op, m_here * ne * ring)
                     counts[base_op] += int(m_here)
     return ModuleCost(flops=flops, bytes=bytes_,
                       wire_bytes=sum(wire.values()),
                       collective_wire=wire, collective_counts=counts,
-                      unknown_trip_loops=unknown_loops)
+                      unknown_trip_loops=unknown_loops,
+                      flops_by_op=fby, bytes_by_op=bby,
+                      collective_wire_elements=welems)
 
 
 def cost_analysis_dict(compiled) -> dict:
@@ -480,3 +550,56 @@ def cost_analysis_dict(compiled) -> dict:
     if isinstance(cost, (list, tuple)):
         cost = cost[0] if cost else {}
     return cost
+
+
+# ===========================================================================
+# Donation / buffer-aliasing introspection (compile-hygiene audits)
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class AliasEntry:
+    """One ``input_output_alias`` record of a compiled module header:
+    output tuple index ← (parameter number, parameter tuple index)."""
+    output_index: tuple
+    param_number: int
+    param_index: tuple
+    kind: str                    # "may-alias" | "must-alias"
+
+
+_ALIAS_HDR_RE = re.compile(r"input_output_alias=\{(.*?)\}(?:,\s*\w+=|\s*$)")
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d,\s]*)\}:\s*\((\d+),\s*\{([\d,\s]*)\},\s*(may-alias|must-alias)\)")
+_ENTRY_LAYOUT_RE = re.compile(r"entry_computation_layout=\{\((.*?)\)->")
+
+
+def _idx_tuple(text: str) -> tuple:
+    return tuple(int(x) for x in text.split(",") if x.strip())
+
+
+def parse_input_output_aliases(hlo_text: str) -> List[AliasEntry]:
+    """Donated-buffer aliases declared in the module header.
+
+    ``jax.jit(..., donate_argnums=...)`` surfaces as
+    ``input_output_alias={ {out}: (param, {idx}, kind), ... }`` on the
+    ``HloModule`` line; an input buffer that XLA could NOT reuse in place
+    simply has no entry — which is exactly what the donation auditor
+    looks for (a silently copied KV pool)."""
+    for line in hlo_text.splitlines():
+        if "input_output_alias=" not in line:
+            continue
+        m = _ALIAS_HDR_RE.search(line)
+        body = m.group(1) if m else line.split("input_output_alias=", 1)[1]
+        return [AliasEntry(output_index=_idx_tuple(o), param_number=int(p),
+                           param_index=_idx_tuple(i), kind=k)
+                for o, p, i, k in _ALIAS_ENTRY_RE.findall(body)]
+    return []
+
+
+def entry_parameter_shapes(hlo_text: str) -> List[str]:
+    """Normalized ``dtype[dims]`` of each entry parameter, in parameter
+    order, read from the header's ``entry_computation_layout`` (layout
+    and memory-space annotations stripped)."""
+    m = _ENTRY_LAYOUT_RE.search(hlo_text)
+    if not m:
+        return []
+    return [f"{dt}[{dims}]" for dt, dims in _SHAPE_RE.findall(m.group(1))]

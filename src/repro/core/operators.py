@@ -30,6 +30,26 @@ def _nb(name: str) -> float:
     return dtypes.nbytes(name)
 
 
+#: Closed ``op_class`` vocabulary of every record the analytical model may
+#: emit.  The static auditor (``repro.analysis``) lints emitted OpRecord
+#: streams against this set — a new operator class must be added HERE
+#: (with pricing semantics) before any driver may tag records with it:
+#:
+#:   gemm / bmm   — matmul-family compute (reconciled against HLO ``dot``)
+#:   elemw / nlf / softmax — pointwise & non-linear-function work
+#:   quant        — quantize/dequantize passes
+#:   embedding    — table-lookup gathers of the token embedding
+#:   conv         — (depthwise) convolutions
+#:   gather       — paged-KV page rematerialization + block-table reads
+#:   kv           — KV-cache (or recurrent-state) reads/writes
+#:   scan         — sequential recurrent-state update kernels (SSM/RG-LRU)
+#:   collective   — cross-chip wire traffic (all-reduce/all-to-all/hops)
+OP_CLASSES = frozenset({
+    "gemm", "bmm", "elemw", "nlf", "softmax", "quant", "embedding",
+    "conv", "gather", "kv", "scan", "collective",
+})
+
+
 # ---------------------------------------------------------------------------
 # Linear / GEMM (+ bias, quantized weights, LoRA)
 # ---------------------------------------------------------------------------

@@ -147,6 +147,7 @@ class WorkloadModel:
                          dtype_act=v.dtype_act, dtype_w=v.dtype_w,
                          group_size=v.group_size, name="vision_projector")
             F.embedding(db, ntok, a.vocab_size, a.d_model, dtype=v.dtype_act)
+            self._collective(db, ntok)   # vocab-parallel embedding all-reduce
             for i, kind in enumerate(a.block_kinds()):
                 with db.scope(f"layer{i}"):
                     self._block(db, kind, batch, q_len=seq,
@@ -261,6 +262,7 @@ class WorkloadModel:
         a, v = self.arch, self.variant
         with db.scope("model"), db.sharded(self.plan.tp):
             F.embedding(db, batch, a.vocab_size, a.d_model, dtype=v.dtype_act)
+            self._collective(db, batch)  # vocab-parallel embedding all-reduce
             for i, kind in enumerate(a.block_kinds()):
                 with db.scope(f"layer{i}"):
                     self._block(db, kind, batch, q_len=1,
@@ -298,6 +300,7 @@ class WorkloadModel:
         ntok = batch * (k + 1)
         with db.scope("model"), db.sharded(self.plan.tp):
             F.embedding(db, ntok, a.vocab_size, a.d_model, dtype=v.dtype_act)
+            self._collective(db, ntok)   # vocab-parallel embedding all-reduce
             for i, kind in enumerate(a.block_kinds()):
                 with db.scope(f"layer{i}"):
                     self._block(db, kind, batch, q_len=k + 1,
@@ -420,8 +423,9 @@ class WorkloadModel:
         * ``layer{i}`` scopes → the stage owning layer ``i`` (inter-stage
           hop records sit in the sending layer's scope, so each stage's
           Totals already carry its outbound hop wire);
-        * the encoder / vision frontend and the embedding gather → stage 0
-          (they feed the first decoder layer);
+        * the encoder / vision frontend, the embedding gather and the
+          vocab-parallel embedding all-reduce → stage 0 (they feed the
+          first decoder layer);
         * everything else (final norm, lm_head, sampling, block-table
           reads) → the last stage, which owns the model head.
         """
@@ -446,9 +450,27 @@ class WorkloadModel:
                     stage = 0
                     placed = True
                     break
-            if not placed and r.op in ("embedding", "vision_projector"):
+            # the only unplaced all_reduce is the vocab-parallel embedding
+            # combine (layer all-reduces carry layer{i} scopes)
+            if not placed and r.op in ("embedding", "vision_projector",
+                                       "all_reduce"):
                 stage = 0
             out[stage].add(r)
+        return out
+
+    def wire_bytes_by_op(self, db: StatsDB,
+                         phase: Optional[str] = None) -> dict:
+        """Per-op wire-byte totals of the ``collective`` records in ``db``
+        (``all_reduce`` / ``all_to_all`` / ``stage_hop``) — the analytical
+        side of the static auditor's collective cross-check against the
+        per-chip HLO wire bytes of :func:`repro.core.hlo.analyze`."""
+        out: dict = {}
+        for r in db.records:
+            if r.op_class != "collective":
+                continue
+            if phase is not None and r.phase != phase:
+                continue
+            out[r.op] = out.get(r.op, 0.0) + r.wire_bytes
         return out
 
     def decode_stage_totals_mixed(self, past_lens: Sequence[int]
@@ -622,8 +644,10 @@ class WorkloadModel:
         return ntok * a.d_model * el * 2.0 * (v.tp - 1) / v.tp
 
     def _collective(self, db: StatsDB, ntok: int) -> None:
-        """One Megatron-style all-reduce after a row-sharded projection
-        (attention o_proj / MLP down_proj)."""
+        """One Megatron-style all-reduce of an (ntok, d_model) activation:
+        after a row-sharded projection (attention o_proj / MLP down_proj)
+        or combining the masked partial lookups of the vocab-parallel
+        embedding table."""
         if self.plan.tp <= 1:
             return
         db.record("all_reduce", wire_bytes=self._act_wire_bytes(ntok),

@@ -8,7 +8,7 @@ out (global_batch, seq) and sharded by ``runtime.sharding.batch_shardings``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

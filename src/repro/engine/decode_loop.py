@@ -93,6 +93,30 @@ def _check_pp(cfg: ArchConfig, pp: int) -> None:
             f"{cfg.name!r}")
 
 
+def _check_impl_and_plan(cfg: ArchConfig, mesh: Mesh,
+                         policy: S.ShardingPolicy, attn_impl: str):
+    """Shared admission check for every jitted-entry-point factory.
+
+    Validates ``attn_impl`` against the engine's vocabulary and the mesh
+    plan against the arch (tp must divide both head counts, pp must
+    divide the layer stack) and returns ``(tp, pp)``.  All three
+    factories go through here so a bad plan fails identically no matter
+    which entry point is built first.
+    """
+    if attn_impl not in ATTN_IMPLS:
+        raise ValueError(f"attn_impl must be one of {ATTN_IMPLS}, "
+                         f"got {attn_impl!r}")
+    tp = S.tp_degree(mesh, policy)
+    if tp > 1 and (cfg.n_kv_heads % tp or cfg.n_heads % tp):
+        raise ValueError(
+            f"tensor-parallel engine shards attention over KV heads: tp={tp}"
+            f" must divide n_heads={cfg.n_heads} and "
+            f"n_kv_heads={cfg.n_kv_heads} of arch {cfg.name!r}")
+    pp = S.pp_degree(mesh, policy)
+    _check_pp(cfg, pp)
+    return tp, pp
+
+
 def _staged_scan(scan_fn, x, xs, pp: int):
     """``jax.lax.scan`` over stacked per-layer leaves, split into ``pp``
     pipeline-stage segments.
@@ -287,17 +311,7 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
         -> (tokens (n,S), produced (n,S), active(S,), state)
     """
     from repro.models import act_sharding
-    if attn_impl not in ATTN_IMPLS:
-        raise ValueError(f"attn_impl must be one of {ATTN_IMPLS}, "
-                         f"got {attn_impl!r}")
-    tp = S.tp_degree(mesh, policy)
-    if tp > 1 and (cfg.n_kv_heads % tp or cfg.n_heads % tp):
-        raise ValueError(
-            f"tensor-parallel engine shards attention over KV heads: tp={tp}"
-            f" must divide n_heads={cfg.n_heads} and "
-            f"n_kv_heads={cfg.n_kv_heads} of arch {cfg.name!r}")
-    pp = S.pp_degree(mesh, policy)
-    _check_pp(cfg, pp)
+    tp, pp = _check_impl_and_plan(cfg, mesh, policy, attn_impl)
     act_sharding.set_mesh(mesh, policy.dp_axes, policy.tp_axis)
     state_sh = cache.shardings(mesh, policy)
     param_sh = S.param_shardings(cfg, mesh, policy)
@@ -426,12 +440,7 @@ def make_prefill_batch_fn(cfg: ArchConfig, mesh: Mesh,
     member's first-token logits are read at its last valid position.
     """
     from repro.models import act_sharding
-    if attn_impl not in ATTN_IMPLS:
-        raise ValueError(f"attn_impl must be one of {ATTN_IMPLS}, "
-                         f"got {attn_impl!r}")
-    tp = S.tp_degree(mesh, policy)
-    pp = S.pp_degree(mesh, policy)
-    _check_pp(cfg, pp)
+    tp, pp = _check_impl_and_plan(cfg, mesh, policy, attn_impl)
     act_sharding.set_mesh(mesh, policy.dp_axes, policy.tp_axis)
     state_sh = cache.shardings(mesh, policy)
     param_sh = S.param_shardings(cfg, mesh, policy)
@@ -500,12 +509,7 @@ def make_verify_fn(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
     writes like prefill chunk padding.
     """
     from repro.models import act_sharding
-    if attn_impl not in ATTN_IMPLS:
-        raise ValueError(f"attn_impl must be one of {ATTN_IMPLS}, "
-                         f"got {attn_impl!r}")
-    tp = S.tp_degree(mesh, policy)
-    pp = S.pp_degree(mesh, policy)
-    _check_pp(cfg, pp)
+    tp, pp = _check_impl_and_plan(cfg, mesh, policy, attn_impl)
     act_sharding.set_mesh(mesh, policy.dp_axes, policy.tp_axis)
     state_sh = cache.shardings(mesh, policy)
     param_sh = S.param_shardings(cfg, mesh, policy)

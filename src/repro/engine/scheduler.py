@@ -239,7 +239,12 @@ class Engine:
         self.spec_proposed = 0
         self.spec_accepted = 0
         self.spec_steps = 0
-        self.state = self.cache.init_state()
+        # commit the fresh state to its serving shardings up front:
+        # otherwise the first jitted step sees uncommitted inputs and
+        # compiles a second executable once its (committed) outputs feed
+        # the next call — every entry point would compile twice
+        self.state = jax.device_put(self.cache.init_state(),
+                                    self.shardings["state"])
         self._rng = jax.random.PRNGKey(ec.seed)
         self.queue: Deque[Request] = collections.deque()
         self.free_slots: List[int] = list(range(ec.max_slots))

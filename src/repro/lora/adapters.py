@@ -3,7 +3,7 @@ per-GEMM application — the two operating modes LIFE models (Eq. 7,
 Table 12 / Fig. 9)."""
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

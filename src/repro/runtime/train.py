@@ -15,8 +15,7 @@ scheduler overlaps with the per-layer matmuls of the scan body.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ prefix caching stays exercisable under traffic.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List
 
 import numpy as np
 

@@ -1,0 +1,213 @@
+"""Operator-DSL linter: golden per-family snapshots + seeded violations.
+
+No jax needed — the linter runs over pure analytical OpRecord streams.
+"""
+import dataclasses
+
+import pytest
+
+from repro import configs
+from repro.analysis import (AuditReport, Finding, Severity, lint_dtypes,
+                            lint_model, lint_plan, lint_records,
+                            lint_stage_conservation)
+from repro.configs.base import Variant
+from repro.core import hardware
+from repro.core.stats import OpRecord
+from repro.core.workload import ShardingPlan, WorkloadModel
+
+#: one paper-table scenario per family — the golden set: a clean tree
+#: lints to ZERO findings for every family
+FAMILY_ARCHS = {
+    "dense": "qwen2-7b",
+    "moe": "qwen2-moe-a2.7b",
+    "vlm": "internvl2-26b",
+    "encdec": "whisper-base",
+    "ssm": "falcon-mamba-7b",
+}
+
+
+def _wm(arch_name, **plan):
+    arch = configs.reduced(configs.get(arch_name))
+    return WorkloadModel(arch, Variant(), plan=ShardingPlan(**plan))
+
+
+def _rec(**kw):
+    base = dict(op="gemm", scope="model/layer0", phase="decode", ops=100.0,
+                mem_rd=64.0, mem_wr=32.0, kv_rd=0.0, kv_wr=0.0,
+                dispatches=1, wire_bytes=0.0, op_class="gemm")
+    base.update(kw)
+    return OpRecord(**base)
+
+
+# ---------------------------------------------------------------------------
+# golden snapshots: every family lints clean, end to end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family,arch", sorted(FAMILY_ARCHS.items()))
+def test_family_lints_clean(family, arch):
+    wm = _wm(arch)
+    db = wm.prefill(1, 32)
+    wm.decode_step(2, 31, db=db)
+    findings = [f for f in lint_model(wm, db)
+                if f.severity > Severity.INFO]
+    assert findings == [], [f.code for f in findings]
+
+
+@pytest.mark.parametrize("family,arch", sorted(FAMILY_ARCHS.items()))
+def test_family_stage_conservation_pp2(family, arch):
+    wm = _wm(arch, pp=2)
+    db = wm.decode_step(2, 31)
+    assert lint_stage_conservation(wm, db, "decode") == []
+
+
+def test_family_lints_clean_sharded_dense():
+    # tp2 adds collective records (incl. the vocab-parallel embedding
+    # all-reduce) — they must satisfy the wire/compute rules too
+    wm = _wm("qwen2-7b", tp=2)
+    db = wm.decode_step(2, 31)
+    assert [f for f in lint_model(wm, db, "decode")
+            if f.severity > Severity.INFO] == []
+    assert any(r.op_class == "collective" for r in db.records)
+
+
+# ---------------------------------------------------------------------------
+# seeded violations: each rule fires exactly once on its crafted record
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("record,code", [
+    (_rec(op_class="warp_shuffle"), "lint.op_class_vocabulary"),
+    (_rec(ops=-1.0), "lint.negative_field"),
+    (_rec(kv_rd=128.0), "lint.kv_exceeds_mem"),
+    (_rec(wire_bytes=64.0), "lint.misplaced_wire"),
+    (_rec(op="all_reduce", op_class="collective", wire_bytes=0.0, ops=0.0),
+     "lint.malformed_collective"),
+    (_rec(op="all_reduce", op_class="collective", wire_bytes=64.0, ops=5.0),
+     "lint.malformed_collective"),
+])
+def test_seeded_violation_fires_once(record, code):
+    findings = lint_records([_rec(), record, _rec()])
+    assert len(findings) == 1
+    assert findings[0].code == code
+    assert findings[0].severity == Severity.ERROR
+
+
+def test_finding_cap_suppresses_repeats():
+    findings = lint_records([_rec(ops=-1.0)] * 12, max_findings_per_rule=8)
+    errors = [f for f in findings if f.severity == Severity.ERROR]
+    infos = [f for f in findings if f.severity == Severity.INFO]
+    assert len(errors) == 8
+    assert len(infos) == 1 and "suppressed" in infos[0].message
+
+
+def test_lint_plan_tp_divisibility():
+    wm = _wm("qwen2-7b", tp=3)   # 3 never divides the reduced head counts
+    findings = lint_plan(wm)
+    assert any(f.code == "lint.tp_divisibility"
+               and f.severity == Severity.ERROR for f in findings)
+
+
+def test_lint_dtypes_unknown_dtype():
+    wm = WorkloadModel(configs.reduced(configs.get("qwen2-7b")),
+                       dataclasses.replace(Variant(), kv_dtype="fp3"))
+    findings = lint_dtypes(wm)
+    assert [f.code for f in findings] == ["lint.dtype_unknown"]
+
+
+# ---------------------------------------------------------------------------
+# report plumbing
+# ---------------------------------------------------------------------------
+
+def test_exit_code_severity_policy():
+    warn = Finding("lint", "x", Severity.WARNING, "w", {})
+    info = Finding("lint", "y", Severity.INFO, "i", {})
+    err = Finding("lint", "z", Severity.ERROR, "e", {})
+    assert AuditReport([info]).exit_code(strict=True) == 0
+    assert AuditReport([info, warn]).exit_code(strict=False) == 0
+    assert AuditReport([info, warn]).exit_code(strict=True) == 1
+    assert AuditReport([err]).exit_code(strict=False) == 1
+
+
+def test_finding_roundtrips_to_dict():
+    f = Finding("lint", "lint.x", Severity.WARNING, "msg", {"k": 1})
+    d = f.to_dict()
+    assert d["severity"] == "warning" and d["code"] == "lint.x"
+    rep = AuditReport([f], meta={"arch": "a"})
+    assert rep.to_dict()["counts"]["warning"] == 1
+
+
+# ---------------------------------------------------------------------------
+# HardwareSpec construction validation (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    {"tops": 0.0}, {"tops": -1.0}, {"bw_gbps": 0.0},
+    {"dispatch_latency_s": -1e-6}, {"interconnect_GBps": -1.0},
+    {"hbm_bytes": -1.0}, {"name": ""},
+])
+def test_hardware_spec_rejects_invalid(kw):
+    base = dict(name="t", tops=1.0, bw_gbps=10.0)
+    base.update(kw)
+    with pytest.raises(ValueError):
+        hardware.HardwareSpec(**base)
+
+
+def test_hardware_get_miss_lists_known_names():
+    with pytest.raises(KeyError) as ei:
+        hardware.get("gpu-that-does-not-exist")
+    assert "tpu-v5e" in str(ei.value) or "cpu" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-optional property tests (the rest of the module runs without)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    from repro.core.operators import OP_CLASSES
+
+    _COMPUTE_CLASSES = sorted(OP_CLASSES - {"collective"})
+    nonneg = st.floats(min_value=0.0, max_value=1e12, allow_nan=False)
+
+    @st.composite
+    def valid_records(draw):
+        if draw(st.booleans()):
+            mem_rd = draw(nonneg)
+            mem_wr = draw(nonneg)
+            return _rec(op_class=draw(st.sampled_from(_COMPUTE_CLASSES)),
+                        ops=draw(nonneg), mem_rd=mem_rd, mem_wr=mem_wr,
+                        kv_rd=draw(st.floats(0.0, mem_rd, allow_nan=False)),
+                        kv_wr=draw(st.floats(0.0, mem_wr, allow_nan=False)),
+                        dispatches=draw(st.integers(0, 100)),
+                        wire_bytes=0.0)
+        return _rec(op="all_reduce", op_class="collective", ops=0.0,
+                    mem_rd=0.0, mem_wr=0.0, kv_rd=0.0, kv_wr=0.0,
+                    wire_bytes=draw(st.floats(1.0, 1e12, allow_nan=False)),
+                    dispatches=draw(st.integers(0, 100)))
+
+    @given(st.lists(valid_records(), max_size=30))
+    @settings(max_examples=50, deadline=None)
+    def test_property_valid_records_lint_clean(records):
+        assert lint_records(records) == []
+
+    @given(valid_records(), st.sampled_from(["vocab", "neg", "kv", "wire"]))
+    @settings(max_examples=50, deadline=None)
+    def test_property_seeded_violation_detected(record, kind):
+        if kind == "vocab":
+            record = dataclasses.replace(record, op_class="not_a_class")
+        elif kind == "neg":
+            record = dataclasses.replace(record, ops=-1.0)
+        elif kind == "kv":
+            record = dataclasses.replace(
+                record, op_class="kv", wire_bytes=0.0,
+                mem_rd=10.0, kv_rd=20.0)
+        else:
+            record = dataclasses.replace(
+                record, op_class="elemw", ops=1.0, wire_bytes=7.0)
+        findings = lint_records([record])
+        assert findings and all(
+            f.severity == Severity.ERROR for f in findings)

@@ -1,0 +1,83 @@
+"""Pricing cross-check + compile hygiene: the audit's jax-facing half.
+
+One target is lowered once per session and reused across tests —
+``reconcile`` and ``audit_donation`` are pure functions of the compiled
+artifact, so the mutation test costs no extra compile.
+"""
+import subprocess
+import sys
+
+import pytest
+
+from repro import configs
+from repro.analysis import (AuditGeometry, PricingTarget, Severity,
+                            audit_donation, audit_retrace, lower_target,
+                            reconcile, run_pricing)
+
+ARCH = configs.reduced(configs.get("qwen2-7b"))
+
+
+@pytest.fixture(scope="module")
+def decode_target():
+    return lower_target(ARCH, PricingTarget("decode", "gather"),
+                        AuditGeometry())
+
+
+def test_clean_target_reconciles(decode_target):
+    findings = reconcile(decode_target)
+    errors = [f for f in findings if f.severity > Severity.INFO]
+    assert errors == [], [f.message for f in errors]
+    assert any(f.code == "pricing.matmul_ok" for f in findings)
+
+
+def test_mutation_perturbed_gemm_is_flagged(decode_target):
+    findings = reconcile(decode_target, perturb={"gemm": 1.5})
+    mismatches = [f for f in findings
+                  if f.code == "pricing.matmul_mismatch"]
+    assert mismatches and mismatches[0].severity == Severity.ERROR
+    # the finding must NAME the mismatched operator class
+    assert "gemm" in mismatches[0].message
+
+
+def test_mutation_small_perturbation_within_tolerance(decode_target):
+    # 5% sits inside the 15% matmul rtol: the audit must not cry wolf
+    findings = reconcile(decode_target, perturb={"gemm": 1.05})
+    assert not [f for f in findings if f.severity > Severity.INFO]
+
+
+def test_kv_pool_donation_aliased(decode_target):
+    findings = audit_donation(decode_target)
+    assert [f.code for f in findings] == ["hygiene.donation_ok"]
+
+
+def test_prefill_and_verify_targets_price_clean():
+    findings, compiled = run_pricing(
+        ARCH, [PricingTarget("prefill", "paged"),
+               PricingTarget("verify", "paged")])
+    assert len(compiled) == 2
+    errors = [f for f in findings if f.severity > Severity.INFO]
+    assert errors == [], [f.message for f in errors]
+
+
+def test_oversized_plan_is_skipped_not_fatal():
+    findings, compiled = run_pricing(
+        ARCH, [PricingTarget("decode", "gather", tp=64, pp=64)])
+    assert compiled == []
+    assert [f.code for f in findings] == ["pricing.target_skipped"]
+    assert findings[0].severity == Severity.INFO
+
+
+def test_engine_runs_without_retrace():
+    findings = audit_retrace(ARCH)
+    codes = [f.code for f in findings]
+    assert "hygiene.retrace" not in codes
+    assert "hygiene.engine_stalled" not in codes
+    assert codes.count("hygiene.retrace_ok") == 2   # prefill + decode
+
+
+def test_audit_cli_help_smoke():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro", "audit", "--help"],
+        capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0
+    assert "--strict" in out.stdout and "--perturb" in out.stdout

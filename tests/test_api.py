@@ -113,6 +113,46 @@ def test_compare_forecast_vs_measured_pair():
     json.dumps(d.to_dict())
 
 
+def test_compare_reports_forecast_error_first_class():
+    fc = _small_forecast(em=0.8)
+    measured = dataclasses.replace(
+        fc, source="measured", hardware="host",
+        ttft_s=fc.ttft_s * 2, tpot_s=fc.tpot_s * 4, tps=fc.tps / 4)
+    d = api.compare(fc, measured)
+    # signed relative error per headline metric: (forecast - measured)/measured
+    assert d.forecast_error["ttft"] == pytest.approx(-0.5)
+    assert d.forecast_error["tpot"] == pytest.approx(-0.75)
+    assert d.forecast_error["tps"] == pytest.approx(3.0)
+    assert d.worst_abs_error == pytest.approx(3.0)
+    dd = d.to_dict()
+    assert dd["forecast_error"]["tps"] == pytest.approx(3.0)
+    assert dd["worst_abs_error"] == pytest.approx(3.0)
+
+
+def test_bench_forecast_error_regression_gate():
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    try:
+        from benchmarks.run import _forecast_error_regression
+    finally:
+        sys.path.pop(0)
+    prev = {"git_sha": "abc", "forecast_error": {"worst_abs": 1.0}}
+    ok = {"benchmark": "engine", "forecast_error": {"worst_abs": 1.1}}
+    bad = {"benchmark": "engine",
+           "forecast_error": {"worst_abs": 1.6, "hardware": "host-cpu"}}
+    assert _forecast_error_regression(prev, ok) is None
+    msg = _forecast_error_regression(prev, bad)
+    assert msg and "regressed" in msg and "abc" in msg
+    # noise floor: 25% relative AND 2 points absolute must both trip
+    small_base = {"forecast_error": {"worst_abs": 0.01}}
+    small_new = {"benchmark": "e", "forecast_error": {"worst_abs": 0.02}}
+    assert _forecast_error_regression(small_base, small_new) is None
+    # legacy history entries without the section never gate
+    assert _forecast_error_regression({}, bad) is None
+    assert _forecast_error_regression(None, bad) is None
+
+
 def test_compare_rejects_different_workloads():
     a = _small_forecast()
     b = dataclasses.replace(a, source="measured", model="qwen2-7b")

@@ -15,8 +15,8 @@ import pytest
 from repro import api
 from repro.configs import get, PAPER_VARIANTS
 from repro.configs.base import Variant
-from repro.core import (DistributedForecaster, Forecaster, ShardingPlan,
-                        Totals, WorkloadModel, hardware, predict_phase)
+from repro.core import (DistributedForecaster, ShardingPlan,
+                        WorkloadModel, hardware, predict_phase)
 from repro.engine import ForecastTwin, TraceEvent
 
 FIELDS = ("ops", "mem_rd", "mem_wr", "kv_rd", "kv_wr", "dispatches",

@@ -1,7 +1,6 @@
 """Paged flash attention: Pallas kernels vs the gather path (interpret
 mode on CPU), end-to-end engine equivalence, and the analytical fusion
 pricing of both attention impls."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.quant import (quantize_weight, dequantize_weight, quant_dense,
-                         quantize_tree, tree_storage_bytes, QuantizedTensor)
+                         quantize_tree, QuantizedTensor)
 from repro.lora import (init_adapter, init_adapters_for_tree, merge,
                         apply_inline, merge_flops)
 from repro.core import StatsDB

@@ -1,6 +1,5 @@
 """Runtime behaviour: training convergence, checkpoint/restart fault
 tolerance, serving (chunked prefill + KV quant), data determinism."""
-import shutil
 
 import jax
 import jax.numpy as jnp

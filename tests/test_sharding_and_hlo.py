@@ -3,7 +3,6 @@ import types
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import hlo
@@ -159,3 +158,66 @@ ENTRY %main (buf: f32[100,1000], upd: f32[1,1000]) -> f32[100,1000] {
     mc = hlo.analyze(txt, 1)
     # charged 2x the 4KB update, NOT the 400KB buffer
     assert mc.bytes == pytest.approx(2 * 1000 * 4)
+
+
+def test_annotated_shapes_still_match_collectives():
+    """Layout/annotation-bearing shapes from newer XLA (tiled layouts
+    ``{1,0:T(8,128)}``, memory-space suffixes ``S(1)``, ``maximal
+    device=N`` sharding) must not drop collectives from the analyzer."""
+    txt = """
+HloModule m, entry_computation_layout={(f32[64,64]{1,0:T(8,128)S(1)})->f32[64,64]{1,0:T(8,128)}}
+
+ENTRY %main (a: f32[64,64]) -> f32[64,64] {
+  %a = f32[64,64]{1,0:T(8,128)S(1)} parameter(0), sharding={maximal device=0}
+  %ar = f32[64,64]{1,0:T(8,128)} all-reduce(%a), replica_groups=[1,4]<=[4], to_apply=%add
+  ROOT %ag = f32[64,64]{1,0:T(8,128)S(1)} all-gather(%ar), replica_groups=[1,4]<=[4], dimensions={0}
+}
+"""
+    n = 64 * 64 * 4
+    mc = hlo.analyze(txt, 4)
+    assert mc.collective_counts["all-reduce"] == 1
+    assert mc.collective_counts["all-gather"] == 1
+    assert mc.collective_wire["all-reduce"] == pytest.approx(n * 2 * 3 / 4)
+    assert mc.collective_wire["all-gather"] == pytest.approx(n * 3 / 4)
+
+
+def test_collective_wire_elements_are_dtype_independent():
+    """wire ELEMENTS must equal wire bytes / dtype width — the quantity
+    the auditor renormalizes to the serving dtype (XLA:CPU widens bf16
+    collectives to f32; raw byte comparison would be 2x off)."""
+    tmpl = """
+HloModule m
+
+ENTRY %main (a: {dt}[128,128]) -> {dt}[128,128] {{
+  %a = {dt}[128,128]{{1,0}} parameter(0)
+  ROOT %ar = {dt}[128,128]{{1,0}} all-reduce(%a), replica_groups=[2,4]<=[8], to_apply=%add
+}}
+"""
+    f32 = hlo.analyze(tmpl.format(dt="f32"), 8)
+    bf16 = hlo.analyze(tmpl.format(dt="bf16"), 8)
+    elems = 128 * 128 * 2 * 3 / 4          # ring all-reduce element count
+    assert f32.wire_elements == pytest.approx(elems)
+    assert bf16.wire_elements == pytest.approx(elems)
+    assert f32.wire_bytes == pytest.approx(2 * bf16.wire_bytes)
+
+
+def test_parse_input_output_aliases_header():
+    txt = ("HloModule jit_step, input_output_alias={ {1,0}: (1, {0}, "
+           "may-alias), {1,1}: (1, {1}, must-alias) }, "
+           "entry_computation_layout={(f32[2,2]{1,0}, (f32[4,8,16,2,64]"
+           "{4,3,2,1,0}, s32[2]{0}))->(f32[2,2], (f32[4,8,16,2,64], "
+           "s32[2]))}\n\nENTRY %main () -> f32[] {}\n")
+    aliases = hlo.parse_input_output_aliases(txt)
+    assert len(aliases) == 2
+    assert aliases[0].output_index == (1, 0)
+    assert aliases[0].param_number == 1
+    assert aliases[0].param_index == (0,)
+    assert aliases[0].kind == "may-alias"
+    assert aliases[1].kind == "must-alias"
+    shapes = hlo.entry_parameter_shapes(txt)
+    assert "f32[4,8,16,2,64]" in shapes     # rank-5 pool buffer survives
+    assert shapes[0] == "f32[2,2]"
+
+
+def test_no_aliases_parses_empty():
+    assert hlo.parse_input_output_aliases("HloModule m\nENTRY e () {}") == []

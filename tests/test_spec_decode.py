@@ -12,7 +12,7 @@ import pytest
 from repro import configs
 from repro.configs.base import Variant
 from repro.core import Forecaster, WorkloadModel, hardware
-from repro.engine import (AUTO, Engine, EngineConfig, ForecastTwin,
+from repro.engine import (Engine, EngineConfig, ForecastTwin,
                           NgramDrafter, Request, despeculate_trace,
                           make_drafter)
 from repro.kernels.paged_attention import paged_verify

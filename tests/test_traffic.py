@@ -11,8 +11,7 @@ from repro.core import hardware
 from repro.core.workload import WorkloadModel
 from repro.traffic import (ARRIVAL_KINDS, LengthDist, RequestTiming,
                            TrafficStats, TrafficTrace, arrival_steps,
-                           capacity_search, make_trace, simulate_traffic,
-                           timings_from_results, trace_prompts)
+                           capacity_search, make_trace, simulate_traffic)
 
 HW = "tpu-v5e"
 
