@@ -60,6 +60,19 @@ def _add_scenario_args(p: argparse.ArgumentParser, measured: bool) -> None:
                    help="per-slot KV lengths of a mixed decode batch")
     p.add_argument("--lora-rank", type=int, default=None,
                    help="include a one-time LoRA merge of this rank")
+    p.add_argument("--lora-tenants", type=int, default=0,
+                   dest="lora_n_tenants",
+                   help="serve this many LoRA tenants through the grouped "
+                   "adapter pool (0 = off); forecast prices the per-slot "
+                   "rank mix, measure runs the grouped-LoRA engine")
+    p.add_argument("--lora-ranks", type=_csv_ints, default=None,
+                   metavar="R1,R2,...", dest="lora_ranks",
+                   help="adapter ranks tenants cycle through "
+                   "(default: 8 for every tenant)")
+    p.add_argument("--lora-popularity", type=float, default=0.0,
+                   dest="lora_popularity",
+                   help="Zipf exponent of the tenant popularity law "
+                   "(0 = uniform traffic across tenants)")
     p.add_argument("--shared-prefix", type=int, default=None,
                    dest="shared_prefix_len",
                    help="leading prompt tokens shared by all requests "
@@ -157,7 +170,10 @@ def _scenario(args: argparse.Namespace) -> api.Scenario:
               spec_k=args.spec_k,
               spec_acceptance=args.spec_acceptance,
               spec_draft_arch=args.spec_draft_arch,
-              prompt_motif_len=args.prompt_motif_len, reduced=args.reduced)
+              prompt_motif_len=args.prompt_motif_len, reduced=args.reduced,
+              lora_n_tenants=args.lora_n_tenants,
+              lora_ranks=tuple(args.lora_ranks or ()),
+              lora_popularity=args.lora_popularity)
     for name in ("n_requests", "decode_block", "temperature", "seed",
                  "arrival", "qps", "ttft_slo", "tpot_slo", "trace_file",
                  "prompt_len_dist", "gen_len_dist", "prefill_batch"):
@@ -194,6 +210,9 @@ def _print_report(r: api.Report) -> None:
         traffic += f" tp={scn['tp']}"
     if scn.get("pp", 1) > 1:
         traffic += f" pp={scn['pp']}"
+    if scn.get("lora_n_tenants"):
+        ranks = ",".join(map(str, scn.get("lora_ranks") or ()))
+        traffic += f" lora={scn['lora_n_tenants']}ten(r{ranks})"
     if scn.get("spec_k"):
         traffic += f" spec_k={scn['spec_k']}"
         if scn.get("spec_draft_arch"):

@@ -46,6 +46,14 @@ def default_targets(cfg: AuditConfig) -> List[pricing.PricingTarget]:
     device count before jax initializes)."""
     import jax
     targets = list(pricing.DEFAULT_TARGETS)
+    # grouped-LoRA decode: the multi-tenant adapter pool's low-rank GEMMs
+    # must reconcile against WorkloadModel.lora_step (gather impl = pure
+    # XLA reference, so dot FLOPs are exactly comparable)
+    # rank 64 so the adapter GEMMs carry a super-tolerance share of the
+    # module's dot FLOPs at audit scale — dropping the lora_step records
+    # from the comparator must break the reconciliation, not hide in the
+    # matmul_rtol band
+    targets.append(pricing.PricingTarget("decode", "gather", lora_rank=64))
     # pure-tp plan: the only sharded case where collective wire bytes are
     # strictly gated (pp>1 adds unpriced GSPMD stage resharding)
     if cfg.sharded_tp > 1 and jax.device_count() >= cfg.sharded_tp:

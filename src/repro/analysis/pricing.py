@@ -52,16 +52,22 @@ from .findings import Finding, Severity
 
 @dataclasses.dataclass(frozen=True)
 class PricingTarget:
-    """One engine entry point to lower, compile and reconcile."""
+    """One engine entry point to lower, compile and reconcile.
+
+    ``lora_rank > 0`` compiles the target with a grouped-LoRA adapter
+    pool of that rank (every slot live on an adapter) and adds the
+    matching ``WorkloadModel.lora_step`` records to the comparator."""
     kind: str                   # "prefill" | "decode" | "verify"
     attn_impl: str              # "gather" | "paged"
     tp: int = 1
     pp: int = 1
+    lora_rank: int = 0
 
     @property
     def name(self) -> str:
         plan = f"/tp{self.tp}pp{self.pp}" if self.tp * self.pp > 1 else ""
-        return f"{self.kind}/{self.attn_impl}{plan}"
+        lora = f"/lora{self.lora_rank}" if self.lora_rank else ""
+        return f"{self.kind}/{self.attn_impl}{plan}{lora}"
 
 
 #: single-chip coverage of every entry point × both attention impls; the
@@ -136,7 +142,9 @@ def lower_target(cfg: ArchConfig, target: PricingTarget,
     cache = BlockPagedKVCache(
         cfg, geom.max_slots, n_blocks=geom.n_blocks,
         block_size=geom.block_size,
-        max_blocks_per_seq=geom.max_blocks_per_seq, kv_dtype="bf16")
+        max_blocks_per_seq=geom.max_blocks_per_seq, kv_dtype="bf16",
+        lora_slots=(geom.max_slots if target.lora_rank else 0),
+        lora_max_rank=target.lora_rank)
     params = abstract_params(cfg)
     state = cache.abstract_state()
 
@@ -193,6 +201,12 @@ def lower_target(cfg: ArchConfig, target: PricingTarget,
         db = wm.decode_step(batch, past)
     else:
         db = wm.verify_step(batch, past, geom.spec_k)
+    if target.lora_rank:
+        # every compiled slot is live on a rank-R adapter (the XLA
+        # reference computes the whole static batch, so the comparator
+        # prices the full mix)
+        wm.lora_step([target.lora_rank] * batch, q_len=q_len,
+                     max_rank=target.lora_rank, db=db, phase=phase)
     return CompiledTarget(target=target, hlo_text=text, module_cost=mc,
                           cost_analysis=ca, db=db, wm=wm, phase=phase,
                           compile_s=compile_s, batch=batch, q_len=q_len)

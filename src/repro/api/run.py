@@ -94,6 +94,22 @@ def _phase_totals(wm: WorkloadModel, scn: Scenario) -> Dict[str, Totals]:
             from repro import configs
             draft_wm = WorkloadModel(configs.get(scn.spec_draft_arch))
             out["spec_draft"] = draft_wm.decode_totals_mixed(pls)
+    if scn.has_lora_tenants:
+        # multi-tenant grouped LoRA: every phase's dispatches carry the
+        # per-slot adapter mix, priced at the pool-padded rank (both
+        # executable impls compute/DMA the padded lanes)
+        mix = list(scn.lora_decode_mix)
+        R = max(scn.lora_ranks)
+        step = wm.lora_step(mix, max_rank=R).totals("lora_step")
+        out["lora_step"] = step
+        out["decode"] = out["decode"].plus(step)
+        out["prefill"] = out["prefill"].plus(
+            wm.lora_step(mix, q_len=scn.prompt_len,
+                         max_rank=R).totals("lora_step"))
+        if "spec_verify" in out:
+            out["spec_verify"] = out["spec_verify"].plus(
+                wm.lora_step(mix, q_len=scn.spec_k + 1,
+                             max_rank=R).totals("lora_step"))
     return out
 
 
@@ -139,7 +155,9 @@ def _traffic_twin(scn: Scenario, spec: HardwareSpec, *, ec: float,
     return ForecastTwin(scn.arch, spec, scn.variant_obj, ec=decode_ec,
                         em=em, prefill_ec=ec, prefill_em=em,
                         block_size=twin_bs, attn_impl=scn.attn_impl,
-                        plan=scn.plan)
+                        plan=scn.plan,
+                        lora_mix=scn.lora_decode_mix,
+                        lora_max_rank=max(scn.lora_ranks, default=0))
 
 
 def _traffic_forecast(scn: Scenario, spec: HardwareSpec,
@@ -277,6 +295,23 @@ def forecast(scenario: Scenario, hw: HardwareLike, *,
     if "lora_update" in totals:
         extras["lora_update_s"] = fc.phase(totals["lora_update"],
                                            ec=ec, em=em).latency
+    if scenario.has_lora_tenants:
+        # per-tenant-mix adapter economics of one decode step
+        mix = scenario.lora_decode_mix
+        hist: Dict[int, int] = {}
+        for r in mix:
+            hist[r] = hist.get(r, 0) + 1
+        lt = totals["lora_step"]
+        extras["lora"] = dict(
+            n_tenants=scenario.lora_n_tenants,
+            ranks=list(scenario.lora_ranks),
+            popularity=scenario.lora_popularity,
+            pool_rank=max(scenario.lora_ranks),
+            decode_mix={str(r): n for r, n in sorted(hist.items())},
+            step_flops=lt.ops, step_bytes=lt.mem_total,
+            step_s=fc.step_latency(lt, em=em, ec=decode_ec),
+            step_frac=(fc.step_latency(lt, em=em, ec=decode_ec)
+                       / max(tpot, 1e-30)))
     if scenario.shared_prefix_len is not None:
         # per-admission TTFT physics of the prefix-reuse regime: the first
         # request prefills the full prompt cold (batch 1, like the engine
@@ -322,7 +357,10 @@ def forecast(scenario: Scenario, hw: HardwareLike, *,
                                        if scenario.attn_impl is not None
                                        else AUTO),
                             plan=scenario.plan,
-                            draft_arch=scenario.spec_draft_arch)
+                            draft_arch=scenario.spec_draft_arch,
+                            lora_mix=scenario.lora_decode_mix,
+                            lora_max_rank=max(scenario.lora_ranks,
+                                              default=0))
         tf = twin.replay(trace)
         ttft_s, tpot_s, tps = tf.mean_ttft, tf.mean_tpot, tf.tps
         extras["trace_total_time_s"] = tf.total_time
@@ -465,9 +503,14 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
                           attn_impl=scenario.attn_impl or "gather",
                           temperature=scenario.temperature,
                           spec_k=scenario.spec_k,
+                          lora_tenants=scenario.lora_n_tenants,
+                          lora_ranks=scenario.lora_ranks,
                           seed=scenario.seed)
+        aids = scenario.lora_adapter_ids(n_req)
         reqs = [Request(rid=i, prompt=list(map(int, prompts[i])),
-                        max_new=gen_lens[i]) for i in range(n_req)]
+                        max_new=gen_lens[i],
+                        adapter_id=(aids[i] if aids else None))
+                for i in range(n_req)]
         drafter = None
         if scenario.spec_k and scenario.spec_draft_arch:
             from repro.engine.drafter import make_drafter
@@ -481,6 +524,11 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
             eng = Engine(arch, params, mesh, ShardingPolicy(), ec,
                          drafter=drafter)
             eng.warmup()               # compile outside the measured window
+            # materialize host-side factors of every tenant the run will
+            # touch (stand-in for checkpointed adapters already in host
+            # RAM) — the device loads on pool misses stay measured
+            for a in sorted({a for a in aids if a is not None}):
+                eng.adapter_store.factors(a)
             t0 = time.perf_counter()
             results = eng.run(reqs)
             wall = time.perf_counter() - t0
@@ -500,6 +548,15 @@ def measure(scenario: Scenario, hw: Optional[HardwareLike] = None) -> Report:
                       prefix_hit_tokens=eng.prefix_hit_tokens,
                       prefix_hit_rate=eng.prefix_hit_rate,
                       peak_blocks_in_use=eng.peak_blocks_in_use)
+        if ec.lora_tenants:
+            extras["lora"] = dict(
+                n_tenants=ec.lora_tenants, ranks=list(ec.lora_ranks),
+                popularity=scenario.lora_popularity,
+                pool_slots=ec.adapter_pool_slots,
+                hit_rate=eng.adapter_hit_rate,
+                hits=eng.adapter_pool.hits,
+                misses=eng.adapter_pool.misses,
+                evictions=eng.adapter_pool.evictions)
         if ec.spec_k:
             extras.update(spec_k=ec.spec_k,
                           spec_steps=eng.spec_steps,
@@ -581,18 +638,25 @@ def _measure_traffic(scenario: Scenario, hw_name: str, arch, variant,
                       attn_impl=scenario.attn_impl or "gather",
                       temperature=scenario.temperature,
                       prefill_batch=scenario.prefill_batch,
+                      lora_tenants=scenario.lora_n_tenants,
+                      lora_ranks=scenario.lora_ranks,
                       seed=scenario.seed)
     prompts = trace_prompts(
         trace, arch.vocab_size, seed=scenario.seed + 1,
         shared_prefix_len=scenario.shared_prefix_len or 0)
+    aids = scenario.lora_adapter_ids(trace.n_requests)
     with mesh:
         eng = Engine(arch, params, mesh, ShardingPolicy(), ec)
         eng.warmup()               # compile outside the measured window
+        for a in sorted({a for a in aids if a is not None}):
+            eng.adapter_store.factors(a)   # host factors, like measure()
         period = eng.calibrate_step_period()
         steps = arrival_steps(trace, period)
         reqs = [Request(rid=r.rid, prompt=list(map(int, p)),
-                        max_new=r.gen_len, arrival_step=s)
-                for r, p, s in zip(trace.requests, prompts, steps)]
+                        max_new=r.gen_len, arrival_step=s,
+                        adapter_id=(aids[i] if aids else None))
+                for i, (r, p, s) in enumerate(
+                    zip(trace.requests, prompts, steps))]
         t0 = time.perf_counter()
         results = eng.run(reqs)
         wall = time.perf_counter() - t0
@@ -610,6 +674,15 @@ def _measure_traffic(scenario: Scenario, hw_name: str, arch, variant,
         traffic=dict(stats.to_dict(), arrival=trace.arrival,
                      qps=trace.qps, offered_qps=trace.offered_qps,
                      prefill_batch=scenario.prefill_batch))
+    if ec.lora_tenants:
+        extras["lora"] = dict(
+            n_tenants=ec.lora_tenants, ranks=list(ec.lora_ranks),
+            popularity=scenario.lora_popularity,
+            pool_slots=ec.adapter_pool_slots,
+            hit_rate=eng.adapter_hit_rate,
+            hits=eng.adapter_pool.hits,
+            misses=eng.adapter_pool.misses,
+            evictions=eng.adapter_pool.evictions)
     return Report(
         source="measured", model=arch.name, variant=variant.name,
         hardware=hw_name, ttft_s=stats.ttft["mean"],

@@ -18,6 +18,23 @@ from repro import configs
 from repro.configs.base import ArchConfig, Variant, PAPER_VARIANTS
 
 
+def zipf_adapter_ids(n_tenants: int, count: int, s: float = 0.0,
+                     seed: int = 0) -> Tuple[int, ...]:
+    """``count`` tenant ids drawn from a Zipf(``s``) popularity law.
+
+    Tenant ``i`` has weight ``1/(i+1)**s`` (``s=0`` = uniform) — the
+    standard skewed multi-tenant traffic assumption.  Pure Python and
+    seeded, so the measured engine and the analytical forecast sample
+    the *same* tenant stream.
+    """
+    import random
+    if n_tenants < 1 or count < 1:
+        return ()
+    rng = random.Random(seed)
+    weights = [1.0 / float(i + 1) ** s for i in range(n_tenants)]
+    return tuple(rng.choices(range(n_tenants), weights=weights, k=count))
+
+
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """One inference workload: architecture × variant × traffic shape.
@@ -127,6 +144,16 @@ class Scenario:
     # bucketed prefill-and-insert: admit up to this many same-bucket
     # requests in ONE batched prefill dispatch (1 = sequential admission)
     prefill_batch: int = 1
+    # multi-tenant LoRA serving: ``lora_n_tenants`` tenants cycling
+    # through ``lora_ranks`` (tenant t has rank ranks[t % len(ranks)]),
+    # requests drawn from a Zipf(``lora_popularity``) tenant law
+    # (0 = uniform).  The measured engine serves through the grouped-LoRA
+    # pool; the forecast prices the per-slot rank mix of every step.
+    # Distinct from ``lora_rank``, which merges ONE adapter into the
+    # weights (Eq. 7) instead of serving many dynamically.
+    lora_n_tenants: int = 0
+    lora_ranks: Tuple[int, ...] = ()
+    lora_popularity: float = 0.0
 
     def __post_init__(self):
         # fail fast on registry names (also catches stale names coming back
@@ -182,6 +209,23 @@ class Scenario:
         if self.prefill_batch < 1:
             raise ValueError(f"prefill_batch must be >= 1, "
                              f"got {self.prefill_batch}")
+        if self.lora_n_tenants < 0:
+            raise ValueError(f"lora_n_tenants must be >= 0, "
+                             f"got {self.lora_n_tenants}")
+        if self.lora_n_tenants > 0:
+            ranks = tuple(int(r) for r in self.lora_ranks) or (8,)
+            if min(ranks) < 1:
+                raise ValueError(f"lora_ranks must be >= 1 each, "
+                                 f"got {ranks}")
+            object.__setattr__(self, "lora_ranks", ranks)
+        elif self.lora_ranks:
+            raise ValueError("lora_ranks requires lora_n_tenants > 0")
+        else:
+            # JSON roundtrips deserialize the empty default as a list
+            object.__setattr__(self, "lora_ranks", ())
+        if self.lora_popularity < 0:
+            raise ValueError(f"lora_popularity must be >= 0, "
+                             f"got {self.lora_popularity}")
         from repro.traffic import ARRIVAL_KINDS, LengthDist
         if self.arrival is not None:
             known = ARRIVAL_KINDS + ("replay",)
@@ -295,6 +339,44 @@ class Scenario:
             prefill_batch=(self.prefill_batch if prefill_batch is None
                            else prefill_batch))
 
+    @classmethod
+    def lora_tenants(cls, n: int, ranks: Sequence[int],
+                     popularity: float = 0.0, *,
+                     model: Union[str, ArchConfig] = "llama2-7b",
+                     **kw) -> "Scenario":
+        """A multi-tenant LoRA serving scenario: ``n`` tenants whose
+        adapter ranks cycle through ``ranks``, requests drawn from a
+        Zipf(``popularity``) tenant distribution (0 = uniform)."""
+        return cls(model=model, lora_n_tenants=int(n),
+                   lora_ranks=tuple(int(r) for r in ranks),
+                   lora_popularity=popularity, **kw)
+
+    @property
+    def has_lora_tenants(self) -> bool:
+        return self.lora_n_tenants > 0
+
+    def lora_rank_of(self, adapter_id: int) -> int:
+        """Adapter rank of one tenant (same cycling as AdapterStore)."""
+        if not self.lora_ranks:
+            return 0
+        return self.lora_ranks[adapter_id % len(self.lora_ranks)]
+
+    def lora_adapter_ids(self, count: int) -> Tuple[int, ...]:
+        """Seeded per-request tenant assignment (measured AND forecast
+        paths sample the same stream)."""
+        if not self.has_lora_tenants:
+            return ()
+        return zipf_adapter_ids(self.lora_n_tenants, count,
+                                self.lora_popularity, self.seed)
+
+    @property
+    def lora_decode_mix(self) -> Tuple[int, ...]:
+        """Per-slot adapter ranks of the decode step being forecast."""
+        if not self.has_lora_tenants:
+            return ()
+        return tuple(self.lora_rank_of(a)
+                     for a in self.lora_adapter_ids(self.batch))
+
     def spec_decode(self, k: int, acceptance: float = 0.7,
                     draft_arch: Optional[str] = None) -> "Scenario":
         """This scenario with speculative decoding: ``k`` drafts verified
@@ -356,6 +438,9 @@ class Scenario:
             "prompt_len_dist": self.prompt_len_dist,
             "gen_len_dist": self.gen_len_dist,
             "prefill_batch": self.prefill_batch,
+            "lora_n_tenants": self.lora_n_tenants,
+            "lora_ranks": list(self.lora_ranks),
+            "lora_popularity": self.lora_popularity,
         }
         return d
 
@@ -369,4 +454,5 @@ class Scenario:
             "spec_draft_arch", "prompt_motif_len", "reduced", "n_requests",
             "gen_lens", "decode_block", "temperature", "seed", "arrival",
             "qps", "ttft_slo", "tpot_slo", "trace_file", "prompt_len_dist",
-            "gen_len_dist", "prefill_batch") if k in d})
+            "gen_len_dist", "prefill_batch", "lora_n_tenants",
+            "lora_ranks", "lora_popularity") if k in d})

@@ -542,6 +542,65 @@ class WorkloadModel:
                     F.lora_merge(db, k, n, r, dtype_w=v.dtype_w)
         return db
 
+    def lora_step(self, mix: Sequence[int], q_len: int = 1,
+                  max_rank: Optional[int] = None,
+                  db: Optional[StatsDB] = None,
+                  dtype_lora: str = "bf16",
+                  phase: str = "lora_step") -> StatsDB:
+        """Per-step grouped-LoRA surcharge of ONE multi-tenant engine step.
+
+        ``mix[i]`` is the adapter rank live slot ``i`` decodes with
+        (0 = base model), ``q_len`` the queries each slot scores (1 for
+        decode, ``k + 1`` for a speculative verify, the chunk length for
+        a prefill chunk).  Prices what the engine actually runs per
+        attention layer: the scalar-prefetched adapter-index gather, then
+        per live slot the two low-rank GEMMs ``(x @ A[idx]) @ B[idx]``
+        over q/k/v/o at the *pool-padded* rank ``max_rank`` (adapters are
+        stored zero-padded to the pool-wide max rank — pad lanes cost MXU
+        cycles and DMA bytes in the fused kernel AND in the gathered XLA
+        reference, so the analytical model charges them too; default: the
+        mix's own max).  Factor reads are charged per slot, not per
+        distinct tenant, matching the kernel's per-grid-step DMA.  An
+        empty/all-zero mix prices only the index gather.  Work divides by
+        ``plan.tp`` (the rank axis shards; the delta's psum merges into
+        the projection all-reduce already priced by the base step).
+        """
+        db = db or StatsDB()
+        db.set_phase(phase)
+        a, v = self.arch, self.variant
+        mix = [int(r) for r in mix]
+        if any(r < 0 for r in mix) or q_len < 1:
+            raise ValueError(f"lora_step needs ranks >= 0 and q_len >= 1, "
+                             f"got mix={mix}, q_len={q_len}")
+        live = [r for r in mix if r > 0]
+        R = max_rank if max_rank is not None else (max(live) if live else 0)
+        if live and R < max(live):
+            raise ValueError(f"max_rank={R} below the mix's max {max(live)}")
+        n_attn = sum(1 for k in a.block_kinds() if k == "attn")
+        act_b = dtypes.get(v.dtype_act).bytes_per_el
+        lora_b = dtypes.get(dtype_lora).bytes_per_el
+        d, H, Hk, hd = a.d_model, a.n_heads, a.n_kv_heads, (a.head_dim or 0)
+        projs = (("q", d, H * hd), ("k", d, Hk * hd), ("v", d, Hk * hd),
+                 ("o", H * hd, d))
+        S_live, T = len(live), q_len
+        with db.scope("model"), db.sharded(self.plan.tp):
+            # per-slot adapter pool indices, prefetched by every layer
+            db.record("adapter_table", mem_rd=float(n_attn * len(mix) * 4),
+                      dispatches=0, op_class="gather")
+            if not live:
+                return db
+            for name, k, n in projs:
+                ops = S_live * (2.0 * T * k * R + 2.0 * T * R * n)
+                param = S_live * (k * R + R * n) * lora_b
+                acts_rd = S_live * T * (k + R) * act_b
+                acts_wr = S_live * T * (R + n) * act_b
+                db.record(f"grouped_lora_{name}",
+                          ops=float(n_attn * ops),
+                          mem_rd=float(n_attn * (param + acts_rd)),
+                          mem_wr=float(n_attn * acts_wr),
+                          dispatches=n_attn, op_class="gemm")
+        return db
+
     # ------------------------------------------------------------------
     # static size accounting
     # ------------------------------------------------------------------

@@ -3,6 +3,10 @@
 Subsystem layout:
     block_pool    — ref-counted global KV block pool + radix prefix index
                     (host-side: prefix matching, eviction, copy-on-write)
+    adapter_pool  — ref-counted LRU pool of device LoRA adapter slots +
+                    host-side per-tenant adapter store (multi-tenant
+                    serving; the grouped-LoRA Pallas kernel reads the
+                    pool through per-slot adapter indices)
     kv_cache      — block-paged KV cache descriptor (block tables, int8
                     storage, COW block copy, slot reset)
     decode_loop   — jitted chunked-prefill admission + fused multi-token
@@ -24,6 +28,8 @@ Subsystem layout:
                     despeculate_trace for speedup grounding)
 """
 from .sampling import sample, kv_jnp_dtype, KV_DTYPES
+from .adapter_pool import (AdapterPool, AdapterPoolExhausted, AdapterStore,
+                           LORA_FACTORS)
 from .block_pool import BlockPool, PoolExhausted, RadixIndex
 from .kv_cache import BlockPagedKVCache, PagedKVCache, engine_supported
 from .decode_loop import ATTN_IMPLS, make_engine_fns, make_verify_fn
@@ -36,7 +42,9 @@ from .forecast_twin import (AUTO, ForecastTwin, TraceForecast,
                             despeculate_trace, replay_trace)
 
 __all__ = [
-    "sample", "kv_jnp_dtype", "KV_DTYPES", "BlockPool", "PoolExhausted",
+    "sample", "kv_jnp_dtype", "KV_DTYPES",
+    "AdapterPool", "AdapterPoolExhausted", "AdapterStore", "LORA_FACTORS",
+    "BlockPool", "PoolExhausted",
     "RadixIndex", "BlockPagedKVCache", "PagedKVCache", "engine_supported",
     "ATTN_IMPLS", "make_engine_fns", "make_verify_fn",
     "Drafter", "NgramDrafter", "DraftModelDrafter", "make_drafter",

@@ -76,7 +76,9 @@ from repro.runtime import sharding as S
 
 from repro.core.workload import ENGINE_ATTN_IMPLS
 from repro.kernels.paged_attention import ops as paged_ops
+from repro.kernels.grouped_lora import ops as lora_ops
 
+from .adapter_pool import LORA_FACTORS
 from .kv_cache import BlockPagedKVCache
 from .sampling import sample
 
@@ -115,6 +117,63 @@ def _check_impl_and_plan(cfg: ArchConfig, mesh: Mesh,
     pp = S.pp_degree(mesh, policy)
     _check_pp(cfg, pp)
     return tp, pp
+
+
+def _make_lora_fn(cache: BlockPagedKVCache, mesh: Mesh,
+                  policy: S.ShardingPolicy, attn_impl: str, tp: int):
+    """Grouped-LoRA delta callable for this engine configuration, or None.
+
+    Matches the attention dispatch: the ``gather`` path uses the XLA
+    gather reference (GSPMD shards it like any einsum); the ``paged``
+    path uses the fused Pallas kernel — shard_map'd over the rank axis
+    when tp > 1, since Pallas calls are opaque to GSPMD.
+    """
+    if cache.lora_slots <= 0:
+        return None
+    if attn_impl == "paged":
+        if tp > 1:
+            if cache.lora_max_rank % tp:
+                raise ValueError(
+                    f"tensor-parallel grouped LoRA shards the rank axis: "
+                    f"tp={tp} must divide the padded pool rank "
+                    f"{cache.lora_max_rank}")
+            return lora_ops.make_sharded_grouped_lora(mesh, policy.tp_axis)
+        return lora_ops.grouped_lora
+    return lora_ops.grouped_lora_ref
+
+
+def _lora_state_xs(state):
+    """Per-layer adapter-pool scan operands (stacked on the layer axis)."""
+    return {k: state["lora_" + k] for k in LORA_FACTORS}
+
+
+def _pregather_lora(xs, idx):
+    """Hoist the pool gather out of the step/layer loops (XLA path).
+
+    ``(L, P, ...)`` pool buffers → ``(L, S, ...)`` per-slot factors with
+    hole slots (idx < 0) zeroed, so each per-step delta is the two pure
+    einsums of ``grouped_lora_pregathered`` instead of gather+mask per
+    projection per layer per token: the takes/wheres run once per
+    dispatch rather than ``decode_block × n_layers`` times.  Executed
+    matmul FLOPs — and therefore the token stream and the audit
+    reconciliation — are unchanged.
+    """
+    safe = jnp.maximum(idx, 0)
+    live = (idx >= 0)[None, :, None, None]
+    return {k: jnp.where(live, jnp.take(v, safe, axis=1),
+                         jnp.zeros((), v.dtype))
+            for k, v in xs.items()}
+
+
+def _qkv_deltas(cfg: ArchConfig, h, lora, lora_idx, lora_fn):
+    """Grouped low-rank q/k/v deltas of the normed input, shaped for
+    ``_project_qkv(deltas=...)`` (pre-RoPE, pre-GQA-reshape)."""
+    b, s, _ = h.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dq = lora_fn(h, lora["A_q"], lora["B_q"], lora_idx).reshape(b, s, H, hd)
+    dk = lora_fn(h, lora["A_k"], lora["B_k"], lora_idx).reshape(b, s, Hk, hd)
+    dv = lora_fn(h, lora["A_v"], lora["B_v"], lora_idx).reshape(b, s, Hk, hd)
+    return dq, dk, dv
 
 
 def _staged_scan(scan_fn, x, xs, pp: int):
@@ -164,7 +223,8 @@ def _channel_mix(cfg: ArchConfig, p, x):
 
 def _prefill_layer(cfg: ArchConfig, p, x, ck, cv, bt_slot, pos_q, valid_end,
                    attn_impl: str = "gather",
-                   paged_fn=paged_ops.paged_prefill):
+                   paged_fn=paged_ops.paged_prefill,
+                   lora=None, lora_idx=None, lora_fn=None):
     """One layer of a single-slot prompt chunk.
 
     x: (1, C, d); ck/cv: (N, bs, Hk, hd) full block-pool buffers of this
@@ -172,11 +232,19 @@ def _prefill_layer(cfg: ArchConfig, p, x, ck, cv, bt_slot, pos_q, valid_end,
     absolute positions of the chunk tokens; positions ``>= valid_end`` are
     padding (their K/V scatter targets block id N — out of bounds, so the
     writes are dropped — and their outputs are ignored by the caller).
+
+    ``lora`` (this layer's adapter-pool factors), ``lora_idx`` (the
+    slot's adapter pool index, (1,), -1 = base model) and ``lora_fn``
+    add grouped low-rank deltas on q/k/v (pre-RoPE) and the attention
+    output — multi-tenant LoRA serving.
     """
     N, bs = ck.shape[0], ck.shape[1]
     L_virt = bt_slot.shape[0] * bs
     h = apply_norm(cfg.norm_kind, x, p["ln1"])
-    q, k_new, v_new = A._project_qkv(cfg, p["attn"], h, pos_q[None, :])
+    deltas = (None if lora is None
+              else _qkv_deltas(cfg, h, lora, lora_idx, lora_fn))
+    q, k_new, v_new = A._project_qkv(cfg, p["attn"], h, pos_q[None, :],
+                                     deltas)
     # scatter the chunk's K/V through the block table
     blk = jnp.where(pos_q < valid_end, bt_slot[pos_q // bs], N)
     off = pos_q % bs
@@ -198,27 +266,35 @@ def _prefill_layer(cfg: ArchConfig, p, x, ck, cv, bt_slot, pos_q, valid_end,
         out = A._gqa_scores_softmax_out(q, page_k.astype(x.dtype),
                                         page_v.astype(x.dtype), mask,
                                         cfg.head_dim ** -0.5)
+    out_flat = out.reshape(b, s, -1)
     y = jnp.einsum("bshd,hde->bse",
-                   out.reshape(b, s, cfg.n_heads, cfg.head_dim),
+                   out_flat.reshape(b, s, cfg.n_heads, cfg.head_dim),
                    p["attn"]["wo"])
+    if lora is not None:
+        y = y + lora_fn(out_flat, lora["A_o"], lora["B_o"], lora_idx)
     return _channel_mix(cfg, p, x + y), ck, cv
 
 
 def _decode_layer(cfg: ArchConfig, p, x, ck, cv, bt, pos, active,
                   attn_impl: str = "gather",
-                  paged_fn=paged_ops.paged_decode):
+                  paged_fn=paged_ops.paged_decode,
+                  lora=None, lora_idx=None, lora_fn=None):
     """One layer of a one-token step for ALL slots.
 
     x: (S, 1, d); ck/cv: (N, bs, Hk, hd); bt: (S, max_bps) block tables;
     pos: (S,) per-slot cursors; active: (S,) bool — inactive slots neither
     write KV nor advance (their scatter block id is forced out of bounds
-    and dropped).
+    and dropped).  ``lora``/``lora_idx`` (S,)/``lora_fn`` apply per-slot
+    grouped low-rank deltas (multi-tenant LoRA; -1 = base model).
     """
     N, bs = ck.shape[0], ck.shape[1]
     S_, max_bps = bt.shape
     L_virt = max_bps * bs
     h = apply_norm(cfg.norm_kind, x, p["ln1"])
-    q, k_new, v_new = A._project_qkv(cfg, p["attn"], h, pos[:, None])
+    deltas = (None if lora is None
+              else _qkv_deltas(cfg, h, lora, lora_idx, lora_fn))
+    q, k_new, v_new = A._project_qkv(cfg, p["attn"], h, pos[:, None],
+                                     deltas)
     rows = jnp.arange(S_, dtype=jnp.int32)
     blk = jnp.where(active, bt[rows, pos // bs], N)
     ck = ck.at[blk, pos % bs].set(k_new[:, 0].astype(ck.dtype))
@@ -238,15 +314,19 @@ def _decode_layer(cfg: ArchConfig, p, x, ck, cv, bt, pos, active,
         out = A._gqa_scores_softmax_out(q, page_k.astype(x.dtype),
                                         page_v.astype(x.dtype), mask,
                                         cfg.head_dim ** -0.5)
+    out_flat = out.reshape(S_, 1, -1)
     y = jnp.einsum("bshd,hde->bse",
-                   out.reshape(S_, 1, cfg.n_heads, cfg.head_dim),
+                   out_flat.reshape(S_, 1, cfg.n_heads, cfg.head_dim),
                    p["attn"]["wo"])
+    if lora is not None:
+        y = y + lora_fn(out_flat, lora["A_o"], lora["B_o"], lora_idx)
     return _channel_mix(cfg, p, x + y), ck, cv
 
 
 def _verify_layer(cfg: ArchConfig, p, x, ck, cv, bt, pos, active, valid_q,
                   attn_impl: str = "gather",
-                  paged_fn=paged_ops.paged_verify):
+                  paged_fn=paged_ops.paged_verify,
+                  lora=None, lora_idx=None, lora_fn=None):
     """One layer of a speculative-verify step: Q = k+1 queries per slot.
 
     x: (S, Q, d) — slot ``s``'s queries are its pending token plus its k
@@ -268,7 +348,9 @@ def _verify_layer(cfg: ArchConfig, p, x, ck, cv, bt, pos, active, valid_q,
     L_virt = max_bps * bs
     h = apply_norm(cfg.norm_kind, x, p["ln1"])
     pos_q = pos[:, None] + jnp.arange(Q, dtype=jnp.int32)[None, :]  # (S, Q)
-    q, k_new, v_new = A._project_qkv(cfg, p["attn"], h, pos_q)
+    deltas = (None if lora is None
+              else _qkv_deltas(cfg, h, lora, lora_idx, lora_fn))
+    q, k_new, v_new = A._project_qkv(cfg, p["attn"], h, pos_q, deltas)
     qi = jnp.arange(Q, dtype=jnp.int32)[None, :]
     live = active[:, None] & (qi < valid_q[:, None])
     rows = jnp.arange(S_, dtype=jnp.int32)[:, None]
@@ -288,9 +370,12 @@ def _verify_layer(cfg: ArchConfig, p, x, ck, cv, bt, pos, active, valid_q,
         out = A._gqa_scores_softmax_out(q, page_k.astype(x.dtype),
                                         page_v.astype(x.dtype), mask,
                                         cfg.head_dim ** -0.5)
+    out_flat = out.reshape(S_, Q, -1)
     y = jnp.einsum("bshd,hde->bse",
-                   out.reshape(S_, Q, cfg.n_heads, cfg.head_dim),
+                   out_flat.reshape(S_, Q, cfg.n_heads, cfg.head_dim),
                    p["attn"]["wo"])
+    if lora is not None:
+        y = y + lora_fn(out_flat, lora["A_o"], lora["B_o"], lora_idx)
     return _channel_mix(cfg, p, x + y), ck, cv
 
 
@@ -335,22 +420,34 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
             in_specs=(head, pool, pool, P(None), P(), P()),
             out_specs=head, check_rep=False)
 
+    use_lora = cache.lora_slots > 0
+    lora_fn = _make_lora_fn(cache, mesh, policy, attn_impl, tp)
+    hoist_lora = use_lora and attn_impl == "gather"
+    if hoist_lora:
+        lora_fn = lora_ops.grouped_lora_pregathered
+
     def prefill(params, state, tokens, slot, start, valid):
         x = params["embed"][tokens]                       # (1, C, d)
         pos_q = start + jnp.arange(chunk_size, dtype=jnp.int32)
         valid_end = start + valid
         bt_slot = state["block_tables"][slot]             # (max_bps,)
+        lora_idx = (state["adapter_slots"][slot][None] if use_lora
+                    else None)
 
         def scan_fn(h, inp):
-            p_layer, ck, cv = inp
+            p_layer, ck, cv = inp[:3]
+            lora = inp[3] if use_lora else None
             h, ck, cv = _prefill_layer(cfg, p_layer, h, ck, cv, bt_slot,
                                        pos_q, valid_end, attn_impl,
-                                       paged_prefill_fn)
+                                       paged_prefill_fn,
+                                       lora, lora_idx, lora_fn)
             return h, (ck, cv)
 
-        x, (cks, cvs) = _staged_scan(
-            scan_fn, x, (params["layers"], state["cache_k"],
-                         state["cache_v"]), pp)
+        xs = (params["layers"], state["cache_k"], state["cache_v"])
+        if use_lora:
+            lx = _lora_state_xs(state)
+            xs = xs + (_pregather_lora(lx, lora_idx) if hoist_lora else lx,)
+        x, (cks, cvs) = _staged_scan(scan_fn, x, xs, pp)
         x = apply_norm(cfg.norm_kind, x, params["ln_f"])
         h_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
         logits = _lm_head(cfg, params, h_last)[0, 0]      # (V,)
@@ -361,20 +458,28 @@ def make_engine_fns(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
 
     def decode(params, state, active, remaining, rng):
         bt = state["block_tables"]
+        lora_idx = state["adapter_slots"] if use_lora else None
+        lora_xs = _lora_state_xs(state) if use_lora else None
+        if hoist_lora:
+            lora_xs = _pregather_lora(lora_xs, lora_idx)
 
         def step_fn(carry, _):
             ck_all, cv_all, pos, tok, act, rem, key = carry
             x = params["embed"][tok[:, None]]             # (S, 1, d)
 
             def layer_fn(h, inp):
-                p_layer, ck, cv = inp
+                p_layer, ck, cv = inp[:3]
+                lora = inp[3] if use_lora else None
                 h, ck, cv = _decode_layer(cfg, p_layer, h, ck, cv, bt,
                                           pos, act, attn_impl,
-                                          paged_decode_fn)
+                                          paged_decode_fn,
+                                          lora, lora_idx, lora_fn)
                 return h, (ck, cv)
 
-            x, (cks, cvs) = _staged_scan(
-                layer_fn, x, (params["layers"], ck_all, cv_all), pp)
+            xs = (params["layers"], ck_all, cv_all)
+            if use_lora:
+                xs = xs + (lora_xs,)
+            x, (cks, cvs) = _staged_scan(layer_fn, x, xs, pp)
             x = apply_norm(cfg.norm_kind, x, params["ln_f"])
             logits = _lm_head(cfg, params, x[:, -1:])[:, 0]   # (S, V)
             key, sub = jax.random.split(key)
@@ -456,22 +561,33 @@ def make_prefill_batch_fn(cfg: ArchConfig, mesh: Mesh,
             in_specs=(head, pool, pool, P(None, None), P(None)),
             out_specs=head, check_rep=False)
 
+    use_lora = cache.lora_slots > 0
+    lora_fn = _make_lora_fn(cache, mesh, policy, attn_impl, tp)
+    hoist_lora = use_lora and attn_impl == "gather"
+    if hoist_lora:
+        lora_fn = lora_ops.grouped_lora_pregathered
+
     def prefill_batch(params, state, qtoks, slots, valids):
         x = params["embed"][qtoks]                        # (B, C, d)
         bt = state["block_tables"][slots]                 # (B, max_bps)
         pos = state["pos"][slots]                         # (B,)
         active = valids > 0
+        lora_idx = state["adapter_slots"][slots] if use_lora else None
 
         def layer_fn(h, inp):
-            p_layer, ck, cv = inp
+            p_layer, ck, cv = inp[:3]
+            lora = inp[3] if use_lora else None
             h, ck, cv = _verify_layer(cfg, p_layer, h, ck, cv, bt, pos,
                                       active, valids, attn_impl,
-                                      paged_verify_fn)
+                                      paged_verify_fn,
+                                      lora, lora_idx, lora_fn)
             return h, (ck, cv)
 
-        x, (cks, cvs) = _staged_scan(
-            layer_fn, x, (params["layers"], state["cache_k"],
-                          state["cache_v"]), pp)
+        xs = (params["layers"], state["cache_k"], state["cache_v"])
+        if use_lora:
+            lx = _lora_state_xs(state)
+            xs = xs + (_pregather_lora(lx, lora_idx) if hoist_lora else lx,)
+        x, (cks, cvs) = _staged_scan(layer_fn, x, xs, pp)
         x = apply_norm(cfg.norm_kind, x, params["ln_f"])
         # each member's first-token logits sit at its last valid position
         idx = jnp.clip(valids - 1, 0, x.shape[1] - 1)
@@ -525,21 +641,32 @@ def make_verify_fn(cfg: ArchConfig, mesh: Mesh, policy: S.ShardingPolicy,
             in_specs=(head, pool, pool, P(None, None), P(None)),
             out_specs=head, check_rep=False)
 
+    use_lora = cache.lora_slots > 0
+    lora_fn = _make_lora_fn(cache, mesh, policy, attn_impl, tp)
+    hoist_lora = use_lora and attn_impl == "gather"
+    if hoist_lora:
+        lora_fn = lora_ops.grouped_lora_pregathered
+
     def verify(params, state, qtoks, active, valid_q):
         x = params["embed"][qtoks]                        # (S, Q, d)
         bt = state["block_tables"]
         pos = state["pos"]
+        lora_idx = state["adapter_slots"] if use_lora else None
 
         def layer_fn(h, inp):
-            p_layer, ck, cv = inp
+            p_layer, ck, cv = inp[:3]
+            lora = inp[3] if use_lora else None
             h, ck, cv = _verify_layer(cfg, p_layer, h, ck, cv, bt, pos,
                                       active, valid_q, attn_impl,
-                                      paged_verify_fn)
+                                      paged_verify_fn,
+                                      lora, lora_idx, lora_fn)
             return h, (ck, cv)
 
-        x, (cks, cvs) = _staged_scan(
-            layer_fn, x, (params["layers"], state["cache_k"],
-                          state["cache_v"]), pp)
+        xs = (params["layers"], state["cache_k"], state["cache_v"])
+        if use_lora:
+            lx = _lora_state_xs(state)
+            xs = xs + (_pregather_lora(lx, lora_idx) if hoist_lora else lx,)
+        x, (cks, cvs) = _staged_scan(layer_fn, x, xs, pp)
         x = apply_norm(cfg.norm_kind, x, params["ln_f"])
         logits = _lm_head(cfg, params, x)                 # (S, Q, V)
         new_state = dict(state)

@@ -152,16 +152,20 @@ def cold_trace(trace: Sequence[TraceEvent]) -> List[TraceEvent]:
             # degrade the group to per-member chunks: a cold run would
             # bucket differently anyway, and standalone members are a
             # conservative superset of the batched dispatch's work
-            for rid, slot, chunk, past, cached, last in ev.members:
+            mranks = ev.adapter_ranks or ()
+            for i, (rid, slot, chunk, past, cached, last) in enumerate(
+                    ev.members):
+                r = (mranks[i],) if i < len(mranks) else ()
                 if past == cached and cached > 0:
                     for off in range(0, cached, step):
                         out.append(TraceEvent(
                             kind="prefill_chunk", rid=rid, slot=slot,
                             chunk=min(step, cached - off), past_len=off,
-                            cached=0, last=False))
+                            cached=0, last=False, adapter_ranks=r))
                 out.append(TraceEvent(kind="prefill_chunk", rid=rid,
                                       slot=slot, chunk=chunk, past_len=past,
-                                      cached=0, last=last))
+                                      cached=0, last=last,
+                                      adapter_ranks=r))
             continue
         if ev.kind != "prefill_chunk" or ev.cached == 0:
             out.append(ev)
@@ -218,6 +222,16 @@ class ForecastTwin:
     ``spec_step`` events as k draft-model decode steps plus the verify
     pass; left ``None``, drafting is free (the self-speculative n-gram
     drafter runs on the host off the critical accelerator path).
+
+    Multi-tenant LoRA: trace events carry ``adapter_ranks`` (the per-slot
+    adapter ranks of each dispatch), which replay prices via
+    ``WorkloadModel.lora_step`` at the pool-padded rank — resolved from
+    the trace's ``"engine"`` header (``lora_ranks``) in AUTO mode, or
+    pinned with ``lora_max_rank``.  ``lora_mix`` gives direct method
+    calls (the traffic simulator's surface has no events) a default
+    per-slot rank mix: slot ``i`` serves rank ``lora_mix[i % len]``.
+    Left empty with no event ranks, nothing is priced (bit-for-bit
+    pre-LoRA numbers).
     """
 
     def __init__(self, arch: ArchConfig, hw: HardwareSpec,
@@ -227,7 +241,9 @@ class ForecastTwin:
                  block_size: Optional[int] = None,
                  attn_impl: Optional[str] = AUTO,
                  plan: Optional["ShardingPlan"] = None,
-                 draft_arch=None):
+                 draft_arch=None,
+                 lora_mix: Sequence[int] = (),
+                 lora_max_rank: int = 0):
         self._attn_auto = attn_impl == AUTO
         if self._attn_auto:
             attn_impl = None
@@ -249,44 +265,94 @@ class ForecastTwin:
             dcfg = (configs.get(draft_arch) if isinstance(draft_arch, str)
                     else draft_arch)
             self._draft_wm = WorkloadModel(dcfg)
+        self.lora_mix = tuple(int(r) for r in lora_mix)
+        self.lora_max_rank = int(lora_max_rank)
         self._prefill_memo: Dict[tuple, float] = {}
         self._group_memo: Dict[tuple, float] = {}
         self._decode_memo: Dict[tuple, float] = {}
         self._verify_memo: Dict[tuple, float] = {}
         self._draft_memo: Dict[tuple, float] = {}
+        self._lora_memo: Dict[tuple, object] = {}
         self._auto_twins: Dict[tuple, "ForecastTwin"] = {}
 
     # ------------------------------------------------------------------
-    def prefill_chunk_latency(self, chunk: int, past_len: int) -> float:
-        key = (chunk, past_len)
+    def _default_ranks(self, n: int) -> Tuple[int, ...]:
+        """Per-slot rank mix for direct (trace-less) pricing calls."""
+        if not self.lora_mix:
+            return ()
+        return tuple(self.lora_mix[i % len(self.lora_mix)]
+                     for i in range(n))
+
+    def _lora_totals(self, ranks: Tuple[int, ...], q_len: int = 1):
+        """Grouped-LoRA work of one dispatch (None when nothing to price).
+
+        Priced at the pool-padded rank ``max(lora_max_rank, ranks)`` —
+        both executable impls compute and DMA the padded lanes."""
+        if not ranks:
+            return None
+        R = max(self.lora_max_rank, max(ranks))
+        if R == 0:
+            # all-base mix on a LoRA-less engine (rank 0 = no adapter):
+            # nothing executes, so nothing is priced
+            return None
+        key = (tuple(sorted(ranks)), q_len, R)
+        if key not in self._lora_memo:
+            self._lora_memo[key] = self.wm.lora_step(
+                list(ranks), q_len=q_len,
+                max_rank=R or None).totals("lora_step")
+        return self._lora_memo[key]
+
+    # ------------------------------------------------------------------
+    def prefill_chunk_latency(self, chunk: int, past_len: int,
+                              adapter_ranks: Optional[Sequence[int]] = None
+                              ) -> float:
+        ranks = (self._default_ranks(1) if adapter_ranks is None
+                 else tuple(int(r) for r in adapter_ranks))
+        key = (chunk, past_len, ranks)
         if key not in self._prefill_memo:
             db = self.wm.prefill(1, chunk, past_len=past_len)
             if self.block_size:
                 self.wm.block_table_reads(db, 1, past_len + chunk,
                                           self.block_size)
+            totals = db.totals("prefill")
+            lt = self._lora_totals(ranks, q_len=chunk)
+            if lt is not None:
+                totals = totals.plus(lt)
             self._prefill_memo[key] = self.fc.phase(
-                db.totals("prefill"), ec=self.prefill_ec,
+                totals, ec=self.prefill_ec,
                 em=self.prefill_em).latency
         return self._prefill_memo[key]
 
     def prefill_group_latency(
-            self, members: Sequence[Tuple[int, int]]) -> float:
+            self, members: Sequence[Tuple[int, int]],
+            adapter_ranks: Optional[Sequence[int]] = None) -> float:
         """One batched prefill-and-insert dispatch over ``(chunk,
         past_len)`` members, priced via the affine-in-batch identity of
         :meth:`WorkloadModel.prefill_group_totals` (weight reads are
         shared across the group, per-token work is not)."""
-        members = tuple(sorted(members))
+        members = tuple(members)
+        ranks = (self._default_ranks(len(members)) if adapter_ranks is None
+                 else tuple(int(r) for r in adapter_ranks))
         if len(members) == 1:
-            return self.prefill_chunk_latency(*members[0])
-        if members not in self._group_memo:
-            totals = self.wm.prefill_group_totals(members)
+            return self.prefill_chunk_latency(*members[0],
+                                              adapter_ranks=ranks)
+        order = tuple(sorted(zip(members, ranks or (0,) * len(members))))
+        key = (order, bool(ranks))
+        if key not in self._group_memo:
+            totals = self.wm.prefill_group_totals(
+                tuple(m for m, _ in order))
             if self.block_size:
-                for chunk, past in members:
+                for (chunk, past), _r in order:
                     totals = totals.plus(self.wm.block_table_totals(
                         1, past + chunk, self.block_size))
-            self._group_memo[members] = self.fc.phase(
+            if ranks:
+                for (chunk, _past), r in order:
+                    lt = self._lora_totals((r,), q_len=chunk)
+                    if lt is not None:
+                        totals = totals.plus(lt)
+            self._group_memo[key] = self.fc.phase(
                 totals, ec=self.prefill_ec, em=self.prefill_em).latency
-        return self._group_memo[members]
+        return self._group_memo[key]
 
     def _decode_memo_key(self, past_lens: Sequence[int]) -> tuple:
         """Exact memo key of one mixed decode step.
@@ -304,28 +370,41 @@ class ForecastTwin:
             key += (sum(-(-(p + 1) // self.block_size) for p in past_lens),)
         return key
 
-    def decode_step_latency(self, past_lens: Sequence[int]) -> float:
-        key = self._decode_memo_key(past_lens)
+    def decode_step_latency(self, past_lens: Sequence[int],
+                            adapter_ranks: Optional[Sequence[int]] = None
+                            ) -> float:
+        ranks = (self._default_ranks(len(past_lens))
+                 if adapter_ranks is None
+                 else tuple(int(r) for r in adapter_ranks))
+        key = self._decode_memo_key(past_lens) + (tuple(sorted(ranks)),)
         if key not in self._decode_memo:
             totals = self.wm.decode_totals_mixed(past_lens)
             if self.block_size:
                 for p in past_lens:
                     totals = totals.plus(self.wm.block_table_totals(
                         1, p + 1, self.block_size))
+            lt = self._lora_totals(ranks)
+            if lt is not None:
+                totals = totals.plus(lt)
             self._decode_memo[key] = self.fc.step_latency(
                 totals, em=self.em, ec=self.ec)
         return self._decode_memo[key]
 
-    def verify_step_latency(self, past_lens: Sequence[int],
-                            k: int) -> float:
+    def verify_step_latency(self, past_lens: Sequence[int], k: int,
+                            adapter_ranks: Optional[Sequence[int]] = None
+                            ) -> float:
         """One speculative step: k draft steps (zero-cost without a
         ``draft_arch``) + one (k+1)-query verify pass over the mixed
         batch, weight reads amortized across queries by construction of
         ``WorkloadModel.verify_totals_mixed``."""
         if k == 0:
-            return self.decode_step_latency(past_lens)
+            return self.decode_step_latency(past_lens,
+                                            adapter_ranks=adapter_ranks)
+        ranks = (self._default_ranks(len(past_lens))
+                 if adapter_ranks is None
+                 else tuple(int(r) for r in adapter_ranks))
         eff = self.wm.effective_kv_lens(past_lens, q_len=k + 1)
-        key = (len(eff), sum(eff), k)
+        key = (len(eff), sum(eff), k, tuple(sorted(ranks)))
         if self.block_size:
             key += (sum(-(-(p + k + 1) // self.block_size)
                         for p in past_lens),)
@@ -335,6 +414,9 @@ class ForecastTwin:
                 for p in past_lens:
                     totals = totals.plus(self.wm.block_table_totals(
                         1, p + k + 1, self.block_size))
+            lt = self._lora_totals(ranks, q_len=k + 1)
+            if lt is not None:
+                totals = totals.plus(lt)
             t = self.fc.step_latency(totals, em=self.em, ec=self.ec)
             if self._draft_wm is not None:
                 t += k * self._draft_step_latency(past_lens)
@@ -353,15 +435,19 @@ class ForecastTwin:
     # ------------------------------------------------------------------
     def _resolved_twin(self, header: TraceEvent) -> "ForecastTwin":
         """AUTO mode: the twin re-parameterized from the trace header."""
+        lora_R = (self.lora_max_rank
+                  or max(header.lora_ranks, default=0))
         key = (header.attn_impl,
-               self.block_size or header.block_size or None)
+               self.block_size or header.block_size or None,
+               lora_R)
         if key not in self._auto_twins:
             self._auto_twins[key] = ForecastTwin(
                 self.wm.arch, self.fc.hw, self.wm.variant,
                 ec=self.ec, em=self.em, prefill_ec=self.prefill_ec,
                 prefill_em=self.prefill_em, block_size=key[1],
                 attn_impl=key[0], plan=self.plan,
-                draft_arch=self.draft_arch)
+                draft_arch=self.draft_arch,
+                lora_mix=self.lora_mix, lora_max_rank=lora_R)
         return self._auto_twins[key]
 
     def replay(self, trace: Sequence[TraceEvent]) -> TraceForecast:
@@ -386,7 +472,9 @@ class ForecastTwin:
                     rf.cached_tokens = ev.cached
                     cached_tokens += ev.cached
                     prompt_tokens += ev.cached
-                dt = self.prefill_chunk_latency(ev.chunk, ev.past_len)
+                dt = self.prefill_chunk_latency(
+                    ev.chunk, ev.past_len,
+                    adapter_ranks=ev.adapter_ranks)
                 clock += dt
                 prefill_time += dt
                 prompt_tokens += ev.chunk
@@ -410,7 +498,8 @@ class ForecastTwin:
                         prompt_tokens += cached
                     prompt_tokens += chunk
                 dt = self.prefill_group_latency(
-                    tuple((m[2], m[3]) for m in ev.members))
+                    tuple((m[2], m[3]) for m in ev.members),
+                    adapter_ranks=ev.adapter_ranks)
                 clock += dt
                 prefill_time += dt
                 for rid, _slot, _chunk, _past, _cached, last in ev.members:
@@ -427,13 +516,17 @@ class ForecastTwin:
                 # each fused step with budget attrition (EOS is not
                 # forecastable and is ignored — the engine's trace already
                 # reflects the blocks it actually ran)
-                live = [list(s) for s in ev.slots]
+                ranks = ev.adapter_ranks or ()
+                live = [list(s) + [ranks[i] if i < len(ranks) else 0]
+                        for i, s in enumerate(ev.slots)]
                 for step in range(ev.n_steps):
                     active = [s for s in live if s[2] > 0]
                     if not active:
                         break
                     clock += self.decode_step_latency(
-                        [s[1] for s in active])
+                        [s[1] for s in active],
+                        adapter_ranks=(tuple(s[3] for s in active)
+                                       if ranks else ()))
                     for s in active:
                         rf = requests.setdefault(
                             s[0], RequestForecast(rid=s[0]))
@@ -448,7 +541,8 @@ class ForecastTwin:
                 # the trace recorded, so replay reproduces the engine's
                 # realized acceptance rather than an assumed α
                 clock += self.verify_step_latency(
-                    [s[1] for s in ev.slots], ev.spec_k)
+                    [s[1] for s in ev.slots], ev.spec_k,
+                    adapter_ranks=ev.adapter_ranks)
                 for s, a in zip(ev.slots, ev.accepted):
                     emit = min(a + 1, s[2])
                     rf = requests.setdefault(s[0],
@@ -485,7 +579,8 @@ def despeculate_trace(trace: Sequence[TraceEvent]) -> List[TraceEvent]:
         emits = [min(a + 1, s[2]) for a, s in zip(ev.accepted, ev.slots)]
         slots = tuple((s[0], s[1], e) for s, e in zip(ev.slots, emits))
         out.append(TraceEvent(kind="decode_block",
-                              n_steps=max(emits, default=0), slots=slots))
+                              n_steps=max(emits, default=0), slots=slots,
+                              adapter_ranks=ev.adapter_ranks))
     return out
 
 

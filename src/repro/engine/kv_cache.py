@@ -76,12 +76,21 @@ class BlockPagedKVCache:
     block_size: int
     max_blocks_per_seq: int
     kv_dtype: str = "bf16"
+    # multi-tenant LoRA geometry: when lora_slots > 0 the state carries a
+    # device adapter pool — stacked rank-padded A/B factors for the four
+    # attention projections of every layer (see repro.engine.adapter_pool)
+    # — plus a per-request adapter pool-slot index (-1 = base model).
+    lora_slots: int = 0
+    lora_max_rank: int = 0
+    lora_dtype: str = "bf16"
 
     def __post_init__(self):
         check_supported(self.cfg)
         if min(self.max_slots, self.n_blocks, self.block_size,
                self.max_blocks_per_seq) < 1:
             raise ValueError("cache geometry fields must all be >= 1")
+        if self.lora_slots > 0 and self.lora_max_rank < 1:
+            raise ValueError("lora_slots > 0 requires lora_max_rank >= 1")
 
     @property
     def n_layers(self) -> int:
@@ -101,7 +110,7 @@ class BlockPagedKVCache:
         """Fresh engine device state: empty block pool + per-slot tables."""
         kvd = kv_jnp_dtype(self.kv_dtype)
         shape = self.buffer_shape()
-        return {
+        state = {
             "cache_k": jnp.zeros(shape, kvd),
             "cache_v": jnp.zeros(shape, kvd),
             # per-slot block table: physical block id of each virtual page
@@ -113,6 +122,27 @@ class BlockPagedKVCache:
             # last sampled token per slot (input to the next decode step)
             "tok": jnp.zeros((self.max_slots,), jnp.int32),
         }
+        if self.lora_slots > 0:
+            state.update(self._lora_buffers())
+            # adapter pool slot serving each engine slot (-1 = base model)
+            state["adapter_slots"] = jnp.full(
+                (self.max_slots,), -1, jnp.int32)
+        return state
+
+    def _lora_buffers(self) -> Dict[str, jax.Array]:
+        """Device adapter pool: (L, lora_slots, k_p, R) / (L, lora_slots,
+        R, n_p) per projection, rank-padded to ``lora_max_rank``."""
+        c = self.cfg
+        ld = kv_jnp_dtype(self.lora_dtype)
+        L, P, R = c.n_layers, self.lora_slots, self.lora_max_rank
+        d, H, Hk, hd = c.d_model, c.n_heads, c.n_kv_heads, c.head_dim
+        dims = {"q": (d, H * hd), "k": (d, Hk * hd), "v": (d, Hk * hd),
+                "o": (H * hd, d)}
+        out = {}
+        for name, (k, n) in dims.items():
+            out[f"lora_A_{name}"] = jnp.zeros((L, P, k, R), ld)
+            out[f"lora_B_{name}"] = jnp.zeros((L, P, R, n), ld)
+        return out
 
     def abstract_state(self) -> Dict[str, jax.ShapeDtypeStruct]:
         return jax.eval_shape(self.init_state)
@@ -127,13 +157,25 @@ class BlockPagedKVCache:
         # the kv_heads split); on a pipe-less mesh it stays replicated.
         # No kv_len fallback here: intra-block token sharding would split
         # scatter targets across chips for zero capacity win.
-        return {
+        axes = {
             "cache_k": ("layers", None, None, "kv_heads", None),
             "cache_v": ("layers", None, None, "kv_heads", None),
             "block_tables": ("batch", None),
             "pos": ("batch",),
             "tok": ("batch",),
         }
+        if self.lora_slots > 0:
+            # adapter pool buffers stay replicated under GSPMD: on the
+            # paged path the grouped-LoRA Pallas kernel is shard_map'd
+            # over the rank axis explicitly (ops.make_sharded_grouped_lora)
+            # and on the gather path the factors are small enough that
+            # replication beats resharding the per-step gathers.  The
+            # layer axis still pipelines.
+            for name in ("q", "k", "v", "o"):
+                axes[f"lora_A_{name}"] = ("layers", None, None, None)
+                axes[f"lora_B_{name}"] = ("layers", None, None, None)
+            axes["adapter_slots"] = ("batch",)
+        return axes
 
     def shardings(self, mesh: Mesh, policy: S.ShardingPolicy
                   ) -> Dict[str, NamedSharding]:
@@ -154,6 +196,8 @@ class BlockPagedKVCache:
         state = dict(state)
         state["pos"] = state["pos"].at[slot].set(0)
         state["tok"] = state["tok"].at[slot].set(0)
+        if "adapter_slots" in state:
+            state["adapter_slots"] = state["adapter_slots"].at[slot].set(-1)
         return state
 
     def copy_block(self, state: Dict[str, jax.Array], src: int, dst: int

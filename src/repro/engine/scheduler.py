@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import time
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -43,6 +44,22 @@ from .decode_loop import (ATTN_IMPLS, make_engine_fns,
                           make_prefill_batch_fn, make_verify_fn, sample)
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _pool_write(bufs, facs, pslot: jax.Array):
+    """Write one tenant's factor tensors into pool slot ``pslot`` of the
+    ``(L, P, ...)`` device buffers — all eight factors in ONE dispatch.
+
+    The slot index is traced, not baked in: one compile serves every
+    pool slot — an eager ``.at[:, pslot].set`` constant-folds the slot
+    and recompiles per (slot, shape) pair, which put ~seconds of XLA
+    compiles inside the measured serving window on every adapter miss.
+    Fusing the eight per-projection writes into a single jitted call
+    keeps a pool miss at one dispatch instead of eight."""
+    return tuple(
+        jax.lax.dynamic_update_slice_in_dim(b, f[:, None], pslot, axis=1)
+        for b, f in zip(bufs, facs))
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     max_slots: int                      # concurrent requests
@@ -59,6 +76,14 @@ class EngineConfig:
     spec_k: int = 0                     # draft tokens/step (0 = no speculation)
     prefill_batch: int = 1              # bucketed batched admission (1 = off)
     seed: int = 0
+    # multi-tenant LoRA serving: > 0 enables the device adapter pool;
+    # tenant t gets rank lora_ranks[t % len(lora_ranks)] (mixed-rank
+    # population).  lora_slots bounds concurrently resident adapters
+    # (default: one per engine slot, so admission never stalls on the
+    # adapter pool; smaller values exercise LRU eviction/backpressure).
+    lora_tenants: int = 0
+    lora_ranks: Tuple[int, ...] = ()
+    lora_slots: Optional[int] = None
 
     def __post_init__(self):
         for name in ("max_slots", "max_len", "chunk_size", "decode_block",
@@ -75,6 +100,28 @@ class EngineConfig:
         if self.attn_impl not in ATTN_IMPLS:
             raise ValueError(f"attn_impl must be one of {ATTN_IMPLS}, "
                              f"got {self.attn_impl!r}")
+        if self.lora_tenants < 0:
+            raise ValueError(f"lora_tenants must be >= 0, "
+                             f"got {self.lora_tenants}")
+        object.__setattr__(self, "lora_ranks",
+                           tuple(int(r) for r in self.lora_ranks))
+        if self.lora_tenants > 0 and not self.lora_ranks:
+            object.__setattr__(self, "lora_ranks", (8,))
+        if self.lora_ranks and min(self.lora_ranks) < 1:
+            raise ValueError(f"lora_ranks must all be >= 1, "
+                             f"got {self.lora_ranks}")
+        if self.lora_slots is not None and self.lora_slots < 1:
+            raise ValueError(f"lora_slots must be >= 1 when given, "
+                             f"got {self.lora_slots}")
+
+    @property
+    def adapter_pool_slots(self) -> int:
+        """Device adapter-pool size (0 when multi-tenant LoRA is off)."""
+        if self.lora_tenants <= 0:
+            return 0
+        if self.lora_slots is not None:
+            return self.lora_slots
+        return min(self.max_slots, self.lora_tenants)
 
     @property
     def blocks_per_seq(self) -> int:
@@ -93,6 +140,7 @@ class Request:
     prompt: Sequence[int]               # token ids
     max_new: int                        # generation budget
     arrival_step: int = 0               # engine step at which it may admit
+    adapter_id: Optional[int] = None    # LoRA tenant (None = base model)
 
     def __post_init__(self):
         if len(self.prompt) == 0:
@@ -192,6 +240,13 @@ class TraceEvent:
     accepted: Tuple[int, ...] = ()      # spec_step: drafts accepted per slot
     # prefill_batch: (rid, slot, chunk, past_len, cached, last) per member
     members: Tuple[Tuple[int, int, int, int, int, bool], ...] = ()
+    # multi-tenant LoRA: per-slot adapter rank this step computed against
+    # (0 = base model).  decode_block/spec_step: aligned with ``slots``;
+    # prefill_chunk: one element; prefill_batch: aligned with ``members``.
+    # The header carries the engine's tenant config instead.
+    adapter_ranks: Tuple[int, ...] = ()
+    lora_tenants: int = 0               # header only
+    lora_ranks: Tuple[int, ...] = ()    # header only
 
 
 @dataclasses.dataclass
@@ -214,10 +269,19 @@ class Engine:
         self.mesh = mesh
         self.tp = tp_degree(mesh, policy)
         self.pp = pp_degree(mesh, policy)
+        self.adapter_store = self.adapter_pool = None
+        if ec.lora_tenants > 0:
+            from .adapter_pool import AdapterPool, AdapterStore
+            self.adapter_store = AdapterStore(
+                cfg, ec.lora_tenants, ec.lora_ranks, seed=ec.seed)
+            self.adapter_pool = AdapterPool(ec.adapter_pool_slots)
         self.cache = BlockPagedKVCache(
             cfg, ec.max_slots, n_blocks=ec.pool_blocks,
             block_size=ec.block_size,
-            max_blocks_per_seq=ec.blocks_per_seq, kv_dtype=ec.kv_dtype)
+            max_blocks_per_seq=ec.blocks_per_seq, kv_dtype=ec.kv_dtype,
+            lora_slots=ec.adapter_pool_slots,
+            lora_max_rank=(self.adapter_store.max_rank
+                           if self.adapter_store else 0))
         self.pool = BlockPool(ec.pool_blocks, ec.block_size)
         self.index = RadixIndex(self.pool) if ec.prefix_cache else None
         self.prefill_fn, self.decode_fn, self.shardings = make_engine_fns(
@@ -258,6 +322,7 @@ class Engine:
         self.queue_depth: List[Tuple[int, float, int]] = []
         self.step_period: Optional[float] = None
         self._slot_blocks: Dict[int, List[int]] = {}   # slot -> owned refs
+        self._slot_adapter: Dict[int, int] = {}        # slot -> adapter_id
         # prefix-cache counters over the run
         self.prefix_hit_tokens = 0
         self.prompt_tokens = 0
@@ -280,6 +345,12 @@ class Engine:
             raise ValueError(
                 f"request {req.rid}: needs {self._blocks_needed(req)} KV "
                 f"blocks but the pool only has {self.pool.n_blocks}")
+        if req.adapter_id is not None:
+            if self.adapter_store is None:
+                raise ValueError(
+                    f"request {req.rid}: adapter_id={req.adapter_id} but "
+                    f"the engine has no tenants (EngineConfig.lora_tenants)")
+            self.adapter_store.rank_of(req.adapter_id)  # range check
         self.queue.append(req)
         # a deferred request (open-loop traffic feed) has not "arrived"
         # yet: its timestamp is stamped when its step gate opens
@@ -357,6 +428,47 @@ class Engine:
         return _Allocation(table=keep + fresh, cached=cached, cow=cow)
 
     # ------------------------------------------------------------------
+    # multi-tenant LoRA: adapter residency around admission
+    # ------------------------------------------------------------------
+    def _adapter_admissible(self, req: Request) -> bool:
+        """Admission gate: can the request's adapter be pinned now?
+        False is backpressure, exactly like KV-pool exhaustion."""
+        if self.adapter_pool is None or req.adapter_id is None:
+            return True
+        return self.adapter_pool.can_acquire(req.adapter_id)
+
+    def _bind_adapter(self, req: Request, slot: int) -> None:
+        """Pin the request's adapter and point its engine slot at the
+        adapter's pool slot; on a pool miss, load the tenant's factors
+        from the host store into the (LRU-evicted) device slot."""
+        if self.adapter_pool is None or req.adapter_id is None:
+            return
+        from .adapter_pool import LORA_FACTORS
+        pslot, loaded = self.adapter_pool.acquire(req.adapter_id)
+        if loaded:
+            factors = self.adapter_store.factors(req.adapter_id)
+            keys = ["lora_" + name for name in LORA_FACTORS]
+            new = _pool_write(tuple(self.state[k] for k in keys),
+                              tuple(factors[n] for n in LORA_FACTORS),
+                              jnp.int32(pslot))
+            for k, b in zip(keys, new):
+                self.state[k] = b
+        self.state["adapter_slots"] = (
+            self.state["adapter_slots"].at[slot].set(pslot))
+        self._slot_adapter[slot] = req.adapter_id
+
+    def _slot_rank(self, slot: int) -> int:
+        """Adapter rank slot ``slot`` decodes with (0 = base model)."""
+        aid = self._slot_adapter.get(slot)
+        return 0 if aid is None else self.adapter_store.rank_of(aid)
+
+    @property
+    def adapter_hit_rate(self) -> float:
+        """Adapter-pool hit rate over the run (1.0 when LoRA is off)."""
+        return 1.0 if self.adapter_pool is None else (
+            self.adapter_pool.hit_rate)
+
+    # ------------------------------------------------------------------
     # admission: chunked prefill of the cache-miss suffix into one slot
     # ------------------------------------------------------------------
     def _admit(self, req: Request, slot: int, alloc: _Allocation) -> None:
@@ -373,6 +485,7 @@ class Engine:
         self.state["block_tables"] = (
             self.state["block_tables"].at[slot].set(jnp.asarray(row)))
         self.state["pos"] = self.state["pos"].at[slot].set(cached)
+        self._bind_adapter(req, slot)
         res = RequestResult(rid=req.rid, tokens=[], prompt_len=n,
                             cached_tokens=cached,
                             arrival=self._arrivals.get(req.rid) or 0.0,
@@ -389,7 +502,8 @@ class Engine:
                 jnp.int32(slot), jnp.int32(off), jnp.int32(valid))
             self.trace.append(TraceEvent(
                 kind="prefill_chunk", rid=req.rid, slot=slot,
-                chunk=valid, past_len=off, cached=cached, last=last))
+                chunk=valid, past_len=off, cached=cached, last=last,
+                adapter_ranks=(self._slot_rank(slot),)))
         if self.index is not None:
             # the prompt's full blocks are now populated and immutable:
             # publish them for future admissions (dedupe keeps first-comer)
@@ -441,6 +555,8 @@ class Engine:
         while (len(group) < cap and self.queue
                and self.queue[0].arrival_step <= self.step_idx
                and self._bucket_chunks(self.queue[0]) == key):
+            if not self._adapter_admissible(self.queue[0]):
+                break
             alloc = self._allocate(self.queue[0])
             if alloc is None:
                 break
@@ -476,6 +592,7 @@ class Engine:
             self.state["block_tables"] = (
                 self.state["block_tables"].at[slot].set(jnp.asarray(row)))
             self.state["pos"] = self.state["pos"].at[slot].set(cached)
+            self._bind_adapter(req, slot)
             res = RequestResult(rid=req.rid, tokens=[], prompt_len=n,
                                 cached_tokens=cached,
                                 arrival=self._arrivals.get(req.rid) or 0.0,
@@ -490,7 +607,7 @@ class Engine:
             # drops KV writes and cursor advances inside the dispatch
             slots_arr = np.full((pb,), members[0][1], np.int32)
             valids = np.zeros((pb,), np.int32)
-            ev_members = []
+            ev_members, ev_ranks = [], []
             for i, (req, slot, prompt, cached, res) in enumerate(members):
                 slots_arr[i] = slot
                 off = cached + ci * ec.chunk_size
@@ -502,6 +619,7 @@ class Engine:
                 qtoks[i, :len(piece)] = piece
                 ev_members.append((req.rid, slot, len(piece), off, cached,
                                    off + len(piece) >= n))
+                ev_ranks.append(self._slot_rank(slot))
             logits, self.state = self.prefill_batch_fn(
                 self.params, self.state, jnp.asarray(qtoks),
                 jnp.asarray(slots_arr), jnp.asarray(valids))
@@ -512,7 +630,8 @@ class Engine:
                     first_logits[i] = logits[i]
             self.trace.append(TraceEvent(kind="prefill_batch",
                                          chunk=ec.chunk_size,
-                                         members=tuple(ev_members)))
+                                         members=tuple(ev_members),
+                                         adapter_ranks=tuple(ev_ranks)))
         now = self._now()
         for i, (req, slot, prompt, cached, res) in enumerate(members):
             n = len(prompt)
@@ -539,6 +658,11 @@ class Engine:
         del self.running[slot]
         for b in self._slot_blocks.pop(slot):
             self.pool.decref(b)        # index refs keep shared blocks warm
+        aid = self._slot_adapter.pop(slot, None)
+        if aid is not None:
+            # the adapter stays resident (warm for the tenant's next
+            # request) until pool pressure LRU-evicts it
+            self.adapter_pool.release(aid)
         self.state = self.cache.reset_slot(self.state, slot)
         self.free_slots.append(slot)
 
@@ -554,7 +678,9 @@ class Engine:
                                          tp=self.tp, pp=self.pp,
                                          attn_impl=ec.attn_impl,
                                          block_size=ec.block_size,
-                                         spec_k=ec.spec_k))
+                                         spec_k=ec.spec_k,
+                                         lora_tenants=ec.lora_tenants,
+                                         lora_ranks=ec.lora_ranks))
         # deferred (open-loop) requests arrive when their gate opens
         now = self._now()
         waiting = 0
@@ -566,6 +692,8 @@ class Engine:
         self.queue_depth.append((self.step_idx, now, waiting))
         while (self.free_slots and self.queue
                and self.queue[0].arrival_step <= self.step_idx):
+            if not self._adapter_admissible(self.queue[0]):
+                break                  # all adapter slots pinned: backpressure
             if ec.prefill_batch > 1:
                 group = self._take_bucket_group()
                 if not group:
@@ -579,13 +707,14 @@ class Engine:
         if self.running and ec.spec_k > 0:
             self._spec_step()
         elif self.running:
-            slots_meta = []
+            slots_meta, slot_ranks = [], []
             active = np.zeros((ec.max_slots,), bool)
             remaining = np.zeros((ec.max_slots,), np.int32)
             for slot, req in sorted(self.running.items()):
                 budget = req.max_new - len(self.results[req.rid].tokens)
                 slots_meta.append((req.rid, int(self.state["pos"][slot]),
                                    budget))
+                slot_ranks.append(self._slot_rank(slot))
                 active[slot] = True
                 remaining[slot] = budget
             slots_meta = tuple(slots_meta)
@@ -596,7 +725,7 @@ class Engine:
             jax.block_until_ready(toks)
             self.trace.append(TraceEvent(
                 kind="decode_block", n_steps=ec.decode_block,
-                slots=slots_meta))
+                slots=slots_meta, adapter_ranks=tuple(slot_ranks)))
             self._harvest(np.asarray(toks), np.asarray(produced))
         self.step_idx += 1
 
@@ -641,6 +770,7 @@ class Engine:
         drafts: Dict[int, List[int]] = {}
         slots_meta, proposed = [], []
         order = sorted(self.running.items())
+        slot_ranks = [self._slot_rank(s) for s, _ in order]
         for slot, req in order:
             res = self.results[req.rid]
             budget = req.max_new - len(res.tokens)
@@ -679,7 +809,8 @@ class Engine:
                 self._free(slot)
         self.trace.append(TraceEvent(
             kind="spec_step", n_steps=1, slots=tuple(slots_meta),
-            spec_k=k, proposed=tuple(proposed), accepted=tuple(accepted)))
+            spec_k=k, proposed=tuple(proposed), accepted=tuple(accepted),
+            adapter_ranks=tuple(slot_ranks)))
         self.spec_proposed += sum(proposed)
         self.spec_accepted += sum(accepted)
         self.spec_steps += 1
@@ -778,12 +909,22 @@ class Engine:
         """Compile prefill + decode paths with a throwaway request."""
         prompt_len = min(self.ec.chunk_size,
                          self.ec.max_len - self.ec.decode_block - 2)
+        # a multi-tenant engine also warms the adapter-miss path (factor
+        # generation + the jitted pool write) — without a bound adapter
+        # those compiles land inside the measured serving window
+        aid = 0 if self.adapter_pool is not None else None
         self.run([Request(rid=-1, prompt=[0] * max(prompt_len, 1),
-                          max_new=self.ec.decode_block + 1)])
+                          max_new=self.ec.decode_block + 1,
+                          adapter_id=aid)])
         if self.index is not None:
             # drop the throwaway prompt's index entries so the measured
             # run starts with a cold cache and an empty pool
             self.index.evict(self.pool.n_blocks)
+        if self.adapter_pool is not None:
+            # fresh pool: the throwaway tenant's residency and stats must
+            # not leak into the measured run's hit/miss accounting
+            from .adapter_pool import AdapterPool
+            self.adapter_pool = AdapterPool(self.adapter_pool.n_slots)
         self.reset_metrics()
 
     def calibrate_step_period(self, gen_tokens: int = 16) -> float:

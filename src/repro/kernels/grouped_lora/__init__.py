@@ -1,0 +1,2 @@
+from . import ops, ref
+from .ops import grouped_lora, grouped_lora_ref, make_sharded_grouped_lora

@@ -1,0 +1,58 @@
+"""XLA gather-based reference for the grouped-LoRA kernel.
+
+Gathers each slot's adapter factors out of the pool (``jnp.take``) and
+runs the two low-rank contractions as batched einsums in f32 — the
+straightforward formulation the Pallas kernel must match, and the
+engine's default implementation on the ``gather`` attention path (GSPMD
+shards it like any other einsum).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_lora_ref(
+    x: jax.Array,        # (S, T, k) per-slot activations
+    A: jax.Array,        # (P, k, R) adapter pool (rank-padded)
+    B: jax.Array,        # (P, R, n) adapter pool (rank-padded)
+    idx: jax.Array,      # (S,) int32 pool slot per batch slot (-1 = none)
+    *,
+    scale: float = 1.0,
+) -> jax.Array:
+    """``scale·(x @ A[idx]) @ B[idx]`` with exact zeros where idx < 0."""
+    safe = jnp.maximum(idx, 0)
+    a = jnp.take(A, safe, axis=0)                         # (S, k, R)
+    b = jnp.take(B, safe, axis=0)                         # (S, R, n)
+    # f32 ACCUMULATION without materializing f32 copies of the gathered
+    # factors (the copies double the per-step pool traffic — measured on
+    # the CPU container; the MXU/f32-accum semantics match the kernel)
+    xa = jnp.einsum("stk,skr->str", x, a,
+                    preferred_element_type=jnp.float32)
+    d = jnp.einsum("str,srn->stn", xa, b,
+                   preferred_element_type=jnp.float32) * scale
+    return jnp.where((idx >= 0)[:, None, None], d, 0.0).astype(x.dtype)
+
+
+def grouped_lora_pregathered(
+    x: jax.Array,        # (S, T, k) per-slot activations
+    a: jax.Array,        # (S, k, R) pre-gathered per-slot A factors
+    b: jax.Array,        # (S, R, n) pre-gathered per-slot B factors
+    idx: jax.Array = None,  # ignored — holes are already zeroed in a/b
+    *,
+    scale: float = 1.0,
+) -> jax.Array:
+    """:func:`grouped_lora_ref` after the pool gather has been hoisted.
+
+    The engine's XLA path gathers each batch slot's factors out of the
+    pool ONCE per dispatch (``decode_loop._pregather_lora``) with hole
+    slots (idx < 0) zeroed, so the per-step per-layer delta is these two
+    einsums alone — no take/where per projection per token.  Zeroed
+    factors make hole deltas exact zeros (``x @ 0 @ 0``), and for live
+    slots the op sequence matches the reference bit-for-bit.
+    """
+    xa = jnp.einsum("stk,skr->str", x, a,
+                    preferred_element_type=jnp.float32)
+    d = jnp.einsum("str,srn->stn", xa, b,
+                   preferred_element_type=jnp.float32) * scale
+    return d.astype(x.dtype)

@@ -19,15 +19,23 @@ def init_adapter(rng: jax.Array, k: int, n: int, rank: int,
 
 
 def init_adapters_for_tree(rng: jax.Array, params: Dict, rank: int,
-                           min_size: int = 1 << 16) -> Dict:
-    """Adapter pair for every large 2-D weight; mirrors the param tree."""
+                           min_size: int = 1 << 16,
+                           dtype=jnp.bfloat16) -> Dict:
+    """Adapter pair for every large 2-D weight; mirrors the param tree.
+
+    Adapters live in the COMPUTE dtype (``dtype``, default bf16), not the
+    storage dtype of the base weight: a quantized (int8/int4) or fp8 base
+    weight must not drag its adapters down to a dtype the low-rank GEMMs
+    can't run in — inline application multiplies activations by A and B
+    directly, and the merge path upcasts to f32 anyway.
+    """
     leaves, treedef = jax.tree_util.tree_flatten(params)
     rngs = jax.random.split(rng, len(leaves))
     out = []
     for leaf, r in zip(leaves, rngs):
         if hasattr(leaf, "ndim") and leaf.ndim == 2 and leaf.size >= min_size:
             out.append(init_adapter(r, leaf.shape[0], leaf.shape[1], rank,
-                                    leaf.dtype))
+                                    dtype))
         else:
             out.append(None)
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -100,7 +100,8 @@ def _mask(q_pos, k_pos, *, causal: bool, window: Optional[int],
 # standard (GQA/MHA/MQA) attention
 # ---------------------------------------------------------------------------
 
-def _project_qkv(cfg: ArchConfig, p: Dict, x: jax.Array, positions):
+def _project_qkv(cfg: ArchConfig, p: Dict, x: jax.Array, positions,
+                 deltas: Optional[Tuple] = None):
     b, s, _ = x.shape
     H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
@@ -108,6 +109,13 @@ def _project_qkv(cfg: ArchConfig, p: Dict, x: jax.Array, positions):
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
     if "bq" in p:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if deltas is not None:
+        # per-request low-rank (LoRA) deltas, applied before RoPE so a
+        # merged-weight run (W + A@B) produces the same rotated q/k
+        dq, dk, dv = deltas
+        q = q + dq.astype(q.dtype)
+        k = k + dk.astype(k.dtype)
+        v = v + dv.astype(v.dtype)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     return q.reshape(b, s, Hk, H // Hk, hd), k, v

@@ -1,0 +1,162 @@
+"""Multi-tenant adapter pool (ref-counted LRU of device adapter slots)
+and the host-side AdapterStore — all host bookkeeping, no model runs."""
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.engine.adapter_pool import (AdapterPool, AdapterPoolExhausted,
+                                       AdapterStore, LORA_FACTORS)
+
+
+# ---------------------------------------------------------------------------
+# AdapterPool: hits, warm releases, LRU eviction, backpressure
+# ---------------------------------------------------------------------------
+
+def test_pool_hit_miss_and_warm_release():
+    pool = AdapterPool(2)
+    slot, loaded = pool.acquire(7)
+    assert loaded and pool.refcount(7) == 1
+    s2, loaded2 = pool.acquire(7)                # concurrent same tenant
+    assert s2 == slot and not loaded2 and pool.refcount(7) == 2
+    pool.release(7)
+    pool.release(7)
+    # released but never evicted: stays resident and warm
+    assert pool.refcount(7) == 0 and pool.slot_of(7) == slot
+    s3, loaded3 = pool.acquire(7)
+    assert s3 == slot and not loaded3            # warm hit, no reload
+    assert (pool.hits, pool.misses, pool.evictions) == (2, 1, 0)
+    assert pool.hit_rate == pytest.approx(2 / 3)
+
+
+def test_pool_lru_evicts_coldest_unpinned():
+    pool = AdapterPool(2)
+    pool.acquire(0)
+    pool.acquire(1)
+    pool.release(0)
+    pool.release(1)
+    pool.acquire(0)                              # touch: 0 is MRU
+    pool.release(0)
+    slot, loaded = pool.acquire(2)               # full pool -> evict LRU (1)
+    assert loaded and pool.evictions == 1
+    assert pool.slot_of(1) is None               # 1 evicted
+    assert pool.slot_of(0) is not None           # MRU survived
+    assert pool.slot_of(2) == slot
+
+
+def test_pool_never_evicts_pinned_adapters():
+    pool = AdapterPool(2)
+    pool.acquire(0)                              # pinned (ref 1)
+    pool.acquire(1)
+    pool.release(1)                              # only 1 is evictable
+    pool.acquire(2)                              # must evict 1, not 0
+    assert pool.slot_of(0) is not None and pool.refcount(0) == 1
+    assert pool.slot_of(1) is None
+    # now every slot is pinned: acquire of a new tenant is backpressure
+    assert not pool.can_acquire(3)
+    assert pool.can_acquire(0)                   # resident: always ok
+    with pytest.raises(AdapterPoolExhausted):
+        pool.acquire(3)
+    pool.release(2)
+    assert pool.can_acquire(3)                   # evictable slot again
+
+
+def test_pool_misuse_rejected():
+    with pytest.raises(ValueError, match="n_slots"):
+        AdapterPool(0)
+    pool = AdapterPool(1)
+    with pytest.raises(ValueError, match="unacquired"):
+        pool.release(0)
+    pool.acquire(0)
+    pool.release(0)
+    with pytest.raises(ValueError, match="unacquired"):
+        pool.release(0)                          # double release
+
+
+# ---------------------------------------------------------------------------
+# AdapterStore: deterministic per-tenant factors, rank padding
+# ---------------------------------------------------------------------------
+
+CFG = configs.reduced(configs.get("qwen2-7b"))
+
+
+def test_store_rank_cycle_and_bounds():
+    store = AdapterStore(CFG, 5, (4, 8, 16))
+    assert [store.rank_of(i) for i in range(5)] == [4, 8, 16, 4, 8]
+    assert store.max_rank == 16
+    with pytest.raises(ValueError, match="tenant population"):
+        store.rank_of(5)
+    with pytest.raises(ValueError, match="n_tenants"):
+        AdapterStore(CFG, 0, (4,))
+    with pytest.raises(ValueError, match="ranks"):
+        AdapterStore(CFG, 2, ())
+
+
+def test_store_factors_padded_and_deterministic():
+    store = AdapterStore(CFG, 4, (4, 8), seed=0)
+    f = store.factors(0)                         # rank-4 tenant, R=8
+    assert set(f) == set(LORA_FACTORS)
+    L, d = CFG.n_layers, CFG.d_model
+    assert f["A_q"].shape == (L, d, 8)
+    assert f["B_q"].shape == (L, 8, CFG.n_heads * CFG.head_dim)
+    assert f["A_o"].shape == (L, CFG.n_heads * CFG.head_dim, 8)
+    # lanes past the true rank are exact zeros (kernel padding contract)
+    assert not np.asarray(f["A_q"][:, :, 4:], np.float32).any()
+    assert not np.asarray(f["B_q"][:, 4:, :], np.float32).any()
+    assert np.asarray(f["A_q"][:, :, :4], np.float32).any()
+    # rank-8 tenant fills the full pool rank
+    f1 = store.factors(1)
+    assert np.asarray(f1["A_q"][:, :, 4:], np.float32).any()
+    # deterministic: a rebuilt store emits identical factors
+    again = AdapterStore(CFG, 4, (4, 8), seed=0).factors(0)
+    np.testing.assert_array_equal(np.asarray(f["B_v"], np.float32),
+                                  np.asarray(again["B_v"], np.float32))
+    # different tenants differ
+    assert np.asarray(f["A_q"][:, :, :4], np.float32).tolist() != \
+        np.asarray(f1["A_q"][:, :, :4], np.float32).tolist()
+
+
+# ---------------------------------------------------------------------------
+# property tests (optional dev dependency, mirrors test_block_pool)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(n_slots=st.integers(1, 4), n_tenants=st.integers(1, 8),
+           data=st.data())
+    def test_pool_invariants_under_random_ops(n_slots, n_tenants, data):
+        """Under any acquire/release interleaving: refcounts never go
+        negative, hit rate stays <= 1, pinned adapters are never evicted,
+        and residency never exceeds the slot count."""
+        pool = AdapterPool(n_slots)
+        held = []                                # one entry per live ref
+        for _ in range(data.draw(st.integers(0, 40))):
+            if held and data.draw(st.booleans()):
+                aid = held.pop(data.draw(
+                    st.integers(0, len(held) - 1)))
+                pool.release(aid)
+            else:
+                aid = data.draw(st.integers(0, n_tenants - 1))
+                if pool.can_acquire(aid):
+                    slot, _ = pool.acquire(aid)
+                    assert 0 <= slot < n_slots
+                    held.append(aid)
+                else:
+                    with pytest.raises(AdapterPoolExhausted):
+                        pool.acquire(aid)
+            # invariants
+            assert 0.0 <= pool.hit_rate <= 1.0
+            assert pool.n_resident <= n_slots
+            for aid in set(held):
+                assert pool.refcount(aid) == held.count(aid)  # >= 0 and exact
+                assert pool.slot_of(aid) is not None  # pinned: never evicted
+        # drain: every release is accepted, refcounts end at zero
+        for aid in held:
+            pool.release(aid)
+        assert all(pool.refcount(a) == 0 for a in set(held))

@@ -1,0 +1,205 @@
+"""Multi-tenant LoRA serving: grouped-adapter decode must be token-
+identical (greedy, T=0) to per-request sequential application on both
+attention impls, match the merged-weights ceiling when every request
+shares one tenant, and surface per-mix adapter costs through the
+analytical forecast."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api, configs
+from repro.core import hardware
+from repro.engine import Engine, EngineConfig, Request
+from repro.engine.adapter_pool import AdapterStore
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params
+from repro.runtime import ShardingPolicy
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >= 2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return configs.reduced(configs.get("qwen2-7b"))
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def prompts(cfg):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size, jnp.int32))
+
+
+def _run(cfg, params, mesh, reqs, **kw):
+    kw.setdefault("max_slots", 4)
+    ec = EngineConfig(max_len=64, chunk_size=8, decode_block=2, **kw)
+    with mesh:
+        eng = Engine(cfg, params, mesh, ShardingPolicy(), ec)
+        res = eng.run(reqs)
+    return {r.rid: r.tokens for r in res}, eng
+
+
+ADAPTER_IDS = [0, 1, 2, None]       # mixed ranks (4, 8, 4) + a base request
+
+
+@pytest.mark.parametrize("impl", ["gather", "paged"])
+def test_multi_tenant_equals_sequential(impl, cfg, params, mesh, prompts):
+    """A mixed batch over 3 tenants (mixed ranks) plus one base-model
+    request, decoded together, must emit the same tokens as each request
+    served alone — and the base request must match a lora-disabled
+    engine bit for bit."""
+    reqs = [Request(rid=i, prompt=list(prompts[i]), max_new=6,
+                    adapter_id=ADAPTER_IDS[i]) for i in range(4)]
+    multi, eng = _run(cfg, params, mesh, reqs, lora_tenants=3,
+                      lora_ranks=(4, 8), attn_impl=impl)
+    seq = {}
+    for i in range(4):
+        r = Request(rid=i, prompt=list(prompts[i]), max_new=6,
+                    adapter_id=ADAPTER_IDS[i])
+        out, _ = _run(cfg, params, mesh, [r], lora_tenants=3,
+                      lora_ranks=(4, 8), attn_impl=impl)
+        seq.update(out)
+    assert multi == seq
+    # the adapter-less request rides the same jitted path a no-lora
+    # engine runs: tokens must agree exactly
+    base, _ = _run(cfg, params, mesh,
+                   [Request(rid=3, prompt=list(prompts[3]), max_new=6)],
+                   attn_impl=impl)
+    assert multi[3] == base[3]
+    # and a tenant's adapter actually changes tokens vs the base model
+    nolora, _ = _run(cfg, params, mesh,
+                     [Request(rid=0, prompt=list(prompts[0]), max_new=6)],
+                     attn_impl=impl)
+    assert multi[0] != nolora[0]
+    # pool bookkeeping: 3 distinct tenants -> 3 misses, no evictions
+    pool = eng.adapter_pool
+    assert pool.misses == 3 and pool.evictions == 0
+    assert 0.0 <= eng.adapter_hit_rate <= 1.0
+
+
+def test_shared_tenant_matches_merged_weights(cfg, params, mesh, prompts):
+    """Every request on tenant 0 == running W' = W + A@B merged params
+    without lora (token-level, T=0): the dynamic grouped path prices as
+    LoRA but decodes as the merged ceiling."""
+    store = AdapterStore(cfg, 3, (4, 8), seed=0)
+    merged = store.merged_params(params, 0)
+    reqs = [Request(rid=i, prompt=list(prompts[i]), max_new=6, adapter_id=0)
+            for i in range(4)]
+    multi, eng = _run(cfg, params, mesh, reqs, lora_tenants=3,
+                      lora_ranks=(4, 8))
+    mtoks, _ = _run(cfg, merged, mesh,
+                    [Request(rid=i, prompt=list(prompts[i]), max_new=6)
+                     for i in range(4)])
+    assert multi == mtoks
+    # one tenant, four requests: 1 miss then warm hits
+    assert eng.adapter_pool.misses == 1 and eng.adapter_pool.hits == 3
+
+
+def test_pool_eviction_under_slot_pressure(cfg, params, mesh, prompts):
+    """More tenants than adapter slots: the engine must still serve all
+    requests (evicting released adapters), token-identical to sequential."""
+    ids = [0, 1, 2, 3]
+    reqs = [Request(rid=i, prompt=list(prompts[i]), max_new=4,
+                    adapter_id=ids[i]) for i in range(4)]
+    multi, eng = _run(cfg, params, mesh, reqs, lora_tenants=4,
+                      lora_ranks=(4,), lora_slots=2, max_slots=2)
+    seq = {}
+    for i in range(4):
+        out, _ = _run(cfg, params, mesh,
+                      [Request(rid=i, prompt=list(prompts[i]), max_new=4,
+                               adapter_id=ids[i])],
+                      lora_tenants=4, lora_ranks=(4,), lora_slots=2,
+                      max_slots=2)
+        seq.update(out)
+    assert multi == seq
+    assert eng.adapter_pool.evictions >= 1       # pressure actually evicted
+
+
+@multidevice
+def test_tp2_multi_tenant_token_parity(cfg, params, prompts):
+    """Sharded serving (tp=2, rank-axis grouped LoRA + head-sharded
+    attention) must reproduce the tp=1 tokens exactly."""
+    outs = {}
+    for tp in (1, 2):
+        reqs = [Request(rid=i, prompt=list(prompts[i]), max_new=6,
+                        adapter_id=ADAPTER_IDS[i]) for i in range(4)]
+        m = make_host_mesh(model=tp)
+        outs[tp], _ = _run(cfg, params, m, reqs, lora_tenants=3,
+                           lora_ranks=(4, 8))
+    assert outs[1] == outs[2]
+
+
+# ---------------------------------------------------------------------------
+# analytical surface: Scenario.lora_tenants -> forecast with per-mix costs
+# ---------------------------------------------------------------------------
+
+def test_forecast_reports_lora_mix_on_every_hardware():
+    scn = api.Scenario.lora_tenants(200, ranks=[16])
+    base = api.Scenario(model="llama2-7b")
+    for hw in hardware.names():
+        r = api.forecast(scn, hw)
+        lora = r.extras["lora"]
+        assert lora["n_tenants"] == 200 and lora["pool_rank"] == 16
+        assert lora["step_flops"] > 0 and lora["step_bytes"] > 0
+        assert sum(lora["decode_mix"].values()) == scn.batch
+        assert set(lora["decode_mix"]) == {"16"}
+        assert 0.0 < lora["step_frac"] < 1.0
+        assert "lora_step" in r.phases and r.phases["lora_step"].ops > 0
+        # adapters cost tokens/s on every spec
+        assert r.tps < api.forecast(base, hw).tps
+
+
+def test_forecast_mixed_ranks_and_popularity():
+    scn = api.Scenario.lora_tenants(64, ranks=[4, 8, 16], popularity=1.2)
+    assert scn.lora_rank_of(0) == 4 and scn.lora_rank_of(2) == 16
+    ids = scn.lora_adapter_ids(2000)
+    assert len(ids) == 2000 and all(0 <= i < 64 for i in ids)
+    # zipf skew: tenant 0 drawn more often than a tail tenant
+    assert ids.count(0) > ids.count(50)
+    # uniform when popularity=0
+    uni = api.Scenario.lora_tenants(64, ranks=[4]).lora_adapter_ids(2000)
+    assert max(uni.count(t) for t in range(64)) < 2000 // 8
+    r = api.forecast(scn, "tpu-v5e")
+    mix = r.extras["lora"]["decode_mix"]
+    assert sum(mix.values()) == scn.batch and set(mix) <= {"4", "8", "16"}
+    # mixed-rank pool prices at the padded rank
+    assert r.extras["lora"]["pool_rank"] == 16
+
+
+def test_scenario_lora_validation_and_roundtrip():
+    with pytest.raises(ValueError, match="lora_ranks"):
+        api.Scenario(model="llama2-7b", lora_ranks=(8,))   # ranks, no tenants
+    with pytest.raises(ValueError, match="lora_n_tenants"):
+        api.Scenario(model="llama2-7b", lora_n_tenants=-1)
+    scn = api.Scenario.lora_tenants(8, ranks=[4, 8], popularity=0.9)
+    assert api.Scenario.from_dict(scn.to_dict()) == scn
+    # default rank population when only a tenant count is given
+    assert api.Scenario(model="llama2-7b", lora_n_tenants=4).lora_ranks \
+        == (8,)
+
+
+def test_twin_prices_adapter_ranks_per_event():
+    """decode_block events carrying adapter_ranks must replay slower than
+    the same schedule without adapters, scaling with rank."""
+    from repro.configs.base import Variant
+    from repro.engine import ForecastTwin
+    arch = configs.get("llama2-7b")
+    twin = ForecastTwin(arch, hardware.get("tpu-v5e"), Variant())
+    t0 = twin.decode_step_latency([100, 100], adapter_ranks=())
+    t8 = twin.decode_step_latency([100, 100], adapter_ranks=(8, 8))
+    t64 = twin.decode_step_latency([100, 100], adapter_ranks=(64, 64))
+    assert t0 < t8 < t64

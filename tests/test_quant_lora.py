@@ -88,3 +88,20 @@ def test_adapters_for_tree_skips_small():
     ads = init_adapters_for_tree(jax.random.PRNGKey(0), tree, rank=4)
     assert ads["big"] is not None
     assert ads["small"] is None and ads["vec"] is None
+
+
+def test_adapters_for_tree_compute_dtype_not_storage_dtype():
+    """Regression: adapters must land in the compute dtype, not inherit a
+    quantized/low-precision base weight's storage dtype (an int8 base
+    weight used to produce int8 A/B factors, which the low-rank GEMMs
+    can't meaningfully run in)."""
+    tree = {"w8": jnp.ones((512, 512), jnp.int8),
+            "wb": jnp.ones((512, 512), jnp.bfloat16)}
+    ads = init_adapters_for_tree(jax.random.PRNGKey(0), tree, rank=4)
+    assert ads["w8"]["A"].dtype == jnp.bfloat16
+    assert ads["w8"]["B"].dtype == jnp.bfloat16
+    assert ads["wb"]["A"].dtype == jnp.bfloat16
+    # explicit override still honored
+    ads32 = init_adapters_for_tree(jax.random.PRNGKey(0), tree, rank=4,
+                                   dtype=jnp.float32)
+    assert ads32["w8"]["A"].dtype == jnp.float32
